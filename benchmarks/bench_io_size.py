@@ -1,0 +1,36 @@
+"""Table I: per-query I/O size distribution, PGM vs RMI at comparable index
+sizes (osm — the weak-local-structure stress case)."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import DEFAULT_N, DEFAULT_Q, GEOM, dataset, emit
+from repro.data.workloads import WorkloadSpec, point_workload
+from repro.index.pgm import build_pgm
+from repro.index.rmi import build_rmi
+
+
+def run(n=DEFAULT_N, n_queries=DEFAULT_Q):
+    keys = dataset("osm", n)
+    qk, _ = point_workload(keys, n_queries, WorkloadSpec("w4", seed=3))
+
+    idx_pgm = build_pgm(keys, eps=64)
+    # match RMI size to PGM size (comparable-index-size comparison)
+    branch = max(64, int(idx_pgm.size_bytes / 24))
+    idx_rmi = build_rmi(keys, branch)
+
+    for name, idx in [("PGM", idx_pgm), ("RMI", idx_rmi)]:
+        out = idx.window(qk)
+        wlo, whi = out[0], out[1]
+        pages = (whi // GEOM.c_ipp) - (wlo // GEOM.c_ipp) + 1
+        io_bytes = pages * GEOM.page_bytes
+        emit(f"tableI/{name}", 0.0,
+             f"index_bytes={idx.size_bytes}"
+             f";mean={io_bytes.mean():.1f};std={io_bytes.std():.1f}"
+             f";p50={np.percentile(io_bytes, 50):.0f}"
+             f";p95={np.percentile(io_bytes, 95):.0f}"
+             f";p99={np.percentile(io_bytes, 99):.0f}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,38 @@
+"""Fig. 11: end-to-end join — INLJ vs POINT-ONLY vs RANGE-ONLY vs HYBRID
+across the w1-w6 workload mixtures (1:20-scaled relation sizes)."""
+from __future__ import annotations
+
+from benchmarks.common import DEFAULT_N, LAYOUT, Timer, dataset, emit
+from repro.data.workloads import WorkloadSpec, join_outer_keys
+from repro.index.pgm import build_pgm
+from repro.join.calibrate import calibrate
+from repro.join.executors import hybrid_join, inlj, point_only, range_only
+
+BUFFER_MB = 2          # paper: 16MB vs 200M rows; scaled ~1:10
+
+
+def run(n=4_000_000, n_outer=30_000, eps=64):
+    keys = dataset("books", n)
+    idx = build_pgm(keys, eps)
+    capacity = (BUFFER_MB << 20) // LAYOUT.page_bytes
+    params = calibrate(idx, keys, LAYOUT, capacity)
+    for wl in ("w1", "w2", "w3", "w4", "w5", "w6"):
+        outer = join_outer_keys(keys, n_outer, WorkloadSpec(wl, seed=9))
+        stats = {}
+        for fn in (inlj, point_only, range_only):
+            st = fn(idx, keys, outer, LAYOUT, capacity)
+            stats[st.strategy] = st
+        st = hybrid_join(idx, keys, outer, LAYOUT, capacity, params=params,
+                         n_min=128, k_max=4096)
+        stats[st.strategy] = st
+        base = stats["inlj"].seconds
+        emit(f"fig11/{wl}", 0.0,
+             ";".join(f"{k}={v.seconds:.4f}s(io={v.physical_ios})"
+                      for k, v in stats.items())
+             + f";hybrid_speedup_vs_inlj={base / max(stats['hybrid'].seconds, 1e-12):.2f}x"
+             + f";range_segs={stats['hybrid'].n_range_segments}"
+               f"/{stats['hybrid'].n_segments}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,46 @@
+"""Beyond-paper: CAM-guided KV-pool planner accuracy — structural closed-form
+vs IRM (Che) vs PagedKVPool replay across HBM budgets (the Eq. 15 analogue
+on the serving plane; see DESIGN.md §4 and EXPERIMENTS.md §Findings 2)."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.serve.kv_cache import BlockTrace, PagedKVPool
+from repro.serve.planner import RequestMix, block_popularity, structural_hit_rate
+
+
+def run():
+    mix = RequestMix(n_requests=24, shared_prefix=1024, mean_context=2048,
+                     decode_steps=16, kv_bytes_per_token=1024)
+    bt = 64
+    probs, refs = block_popularity(mix, bt)
+    n_distinct = probs.shape[0]
+    rng = np.random.default_rng(0)
+    schedule = [(int(r), mix.shared_prefix, mix.mean_context)
+                for _ in range(mix.decode_steps)
+                for r in rng.permutation(mix.n_requests)]
+    trace = BlockTrace(bt).decode_trace(schedule)
+    import jax.numpy as jnp
+    from repro.core import cache_models
+
+    for frac in (0.2, 0.4, 0.6, 0.9, 1.2):
+        pool_blocks = max(1, int(n_distinct * frac))
+        pool = PagedKVPool(pool_blocks, bt, 1024 * bt)
+        for ref in trace:
+            pool.reference(ref)
+        h_struct = (structural_hit_rate(mix, bt, pool_blocks)
+                    if pool_blocks < n_distinct else pool.hit_rate)
+        h_irm = float(cache_models.hit_rate(
+            "lru", min(pool_blocks, n_distinct - 1),
+            jnp.asarray(probs, jnp.float32),
+            total_requests=len(trace)))
+        emit(f"kv_planner/pool{frac:.1f}N", 0.0,
+             f"replay={pool.hit_rate:.3f};structural={h_struct:.3f}"
+             f";irm_che={h_irm:.3f}"
+             f";struct_err={abs(h_struct - pool.hit_rate):.3f}"
+             f";irm_err={abs(h_irm - pool.hit_rate):.3f}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,73 @@
+"""Table IV: CAM vs Replay vs LPM on point workloads — Q-error + time.
+
+Ground truth = Replay-100 through the real buffer with windows from a BUILT
+PGM (not the uniform-error model), like the paper.  Reported Q-error is on
+the mean physical I/O per configuration, averaged across the eps sweep.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import (DEFAULT_N, DEFAULT_Q, GEOM, LAYOUT, Timer,
+                               dataset, emit, pgm_for, point_queries)
+from repro.core import cam, lpm
+from repro.core.qerror import q_error
+from repro.core.replay import replay_windows
+
+EPS_SWEEP = (16, 64, 256)
+BUFFER_MB = 8
+
+
+def run(datasets=("books", "osm"), workloads=("w1", "w2", "w4", "w6"),
+        n=DEFAULT_N, n_queries=DEFAULT_Q, policy="lru"):
+    header_done = False
+    for ds in datasets:
+        keys = dataset(ds, n)
+        for wl in workloads:
+            qk, qpos = point_queries(ds, wl, n, n_queries)
+            results = {}
+            truth = {}
+            for eps in EPS_SWEEP:
+                idx = pgm_for(ds, eps, n)
+                m_budget = BUFFER_MB << 20
+                cap = max(1, (m_budget - idx.size_bytes) // GEOM.page_bytes)
+                wlo, whi = idx.window(qk)
+                plo, phi = wlo // GEOM.c_ipp, whi // GEOM.c_ipp
+                with Timer() as t_replay_full:
+                    misses = replay_windows(plo, phi, cap, policy)
+                truth[eps] = (misses.mean(), t_replay_full.seconds)
+
+                for rate in (0.1, 1.0):
+                    tag = f"CAM-{int(rate * 100)}"
+                    est = cam.estimate_point_io(       # warm the jit cache
+                        qpos, eps, n, GEOM, m_budget, idx.size_bytes,
+                        policy=policy, sample_rate=rate)
+                    with Timer() as t:
+                        est = cam.estimate_point_io(
+                            qpos, eps, n, GEOM, m_budget, idx.size_bytes,
+                            policy=policy, sample_rate=rate)
+                    results.setdefault(tag, []).append(
+                        (est.io_per_query, t.seconds))
+                    k = max(1, int(n_queries * rate))
+                    with Timer() as t:
+                        sel = slice(0, k)
+                        m = replay_windows(plo[sel], phi[sel], cap, policy)
+                    results.setdefault(f"Replay-{int(rate * 100)}", []).append(
+                        (m.mean(), t.seconds))
+                with Timer() as t:
+                    est_lpm = lpm.lpm_estimate_from_windows(plo, phi)
+                results.setdefault("LPM", []).append((est_lpm, t.seconds))
+
+            for tag, rows in results.items():
+                qerrs = [float(q_error(io, truth[eps][0]))
+                         for (io, _), eps in zip(rows, EPS_SWEEP)]
+                total_t = sum(t for _, t in rows)
+                replay_t = sum(truth[e][1] for e in EPS_SWEEP)
+                emit(f"tableIV/{ds}/{wl}/{tag}",
+                     total_t / len(rows) * 1e6,
+                     f"mean_qerr={np.mean(qerrs):.3f}"
+                     f";speedup_vs_replay100={replay_t / max(total_t, 1e-9):.2f}x")
+
+
+if __name__ == "__main__":
+    run()

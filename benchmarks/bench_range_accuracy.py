@@ -1,0 +1,74 @@
+"""Table V: CAM vs Replay vs LPM on range workloads — Q-error + time."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import (DEFAULT_N, DEFAULT_Q, GEOM, Timer, dataset,
+                               emit, pgm_for, range_queries)
+from repro.core import cam, lpm
+from repro.core.qerror import q_error
+from repro.core.replay import replay_windows
+
+EPS_SWEEP = (16, 64, 256)
+BUFFER_MB = 8
+
+
+def _actual_windows(idx, lo_keys, hi_keys, n):
+    """Replay windows per the paper's range execution: one all-at-once fetch
+    from window(lo).start to window(hi).end (predictions, not true ranks)."""
+    lo_pred = idx.predict(lo_keys)
+    hi_pred = idx.predict(hi_keys)
+    wlo = np.clip(lo_pred - idx.eps, 0, n - 1)
+    whi = np.clip(np.maximum(hi_pred + idx.eps, wlo), 0, n - 1)
+    return wlo, whi
+
+
+def run(datasets=("books", "osm"), workloads=("w1", "w2", "w4", "w6"),
+        n=DEFAULT_N, n_queries=DEFAULT_Q // 4, policy="lru"):
+    for ds in datasets:
+        for wl in workloads:
+            lo_k, hi_k, lo_pos, hi_pos = range_queries(ds, wl, n, n_queries)
+            results = {}
+            truth = {}
+            for eps in EPS_SWEEP:
+                idx = pgm_for(ds, eps, n)
+                m_budget = BUFFER_MB << 20
+                cap = max(1, (m_budget - idx.size_bytes) // GEOM.page_bytes)
+                wlo, whi = _actual_windows(idx, lo_k, hi_k, n)
+                plo, phi = wlo // GEOM.c_ipp, whi // GEOM.c_ipp
+                with Timer() as t_truth:
+                    misses = replay_windows(plo, phi, cap, policy)
+                truth[eps] = (misses.mean(), t_truth.seconds)
+
+                for rate in (0.1, 1.0):
+                    cam.estimate_range_io(lo_pos, hi_pos, eps, n, GEOM,
+                                          m_budget, idx.size_bytes,
+                                          policy=policy, sample_rate=rate)
+                    with Timer() as t:
+                        est = cam.estimate_range_io(
+                            lo_pos, hi_pos, eps, n, GEOM, m_budget,
+                            idx.size_bytes, policy=policy, sample_rate=rate)
+                    results.setdefault(f"CAM-{int(rate*100)}", []).append(
+                        (est.io_per_query, t.seconds))
+                    k = max(1, int(n_queries * rate))
+                    with Timer() as t:
+                        m = replay_windows(plo[:k], phi[:k], cap, policy)
+                    results.setdefault(f"Replay-{int(rate*100)}", []).append(
+                        (m.mean(), t.seconds))
+                with Timer() as t:
+                    est_lpm = lpm.lpm_estimate_from_windows(plo, phi)
+                results.setdefault("LPM", []).append((est_lpm, t.seconds))
+
+            for tag, rows in results.items():
+                qerrs = [float(q_error(io, truth[eps][0]))
+                         for (io, _), eps in zip(rows, EPS_SWEEP)]
+                total_t = sum(t for _, t in rows)
+                replay_t = sum(truth[e][1] for e in EPS_SWEEP)
+                emit(f"tableV/{ds}/{wl}/{tag}",
+                     total_t / len(rows) * 1e6,
+                     f"mean_qerr={np.mean(qerrs):.3f}"
+                     f";speedup_vs_replay100={replay_t / max(total_t, 1e-9):.2f}x")
+
+
+if __name__ == "__main__":
+    run()

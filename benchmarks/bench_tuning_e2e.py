@@ -1,0 +1,74 @@
+"""Figs. 9/10: end-to-end tuner comparison — throughput of the configuration
+each tuner picks under a shared memory budget, plus tuning time.
+
+Baselines reserve a fixed fraction of M as buffer and tune the index within
+the remainder (cache-oblivious); CAM tunes the split itself.
+"""
+from __future__ import annotations
+
+from benchmarks.common import DEFAULT_N, GEOM, Timer, dataset, emit
+from repro.core import cam
+from repro.core.replay import replay_windows
+from repro.data.workloads import WorkloadSpec, point_workload
+from repro.index.pgm import build_pgm
+from repro.index.rmi import build_rmi
+from repro.sim.machine import simulate_point_queries
+from repro.tuning.pgm_tuner import cam_tune_pgm, multicriteria_pgm_tune
+from repro.tuning.rmi_tuner import cam_tune_rmi, cdfshop_tune_rmi
+
+BASELINE_BUFFER_FRAC = 0.5
+
+
+def _qps_pgm(keys, qk, eps, m_budget, policy="lru"):
+    idx = build_pgm(keys, eps)
+    cap = max(1, (m_budget - idx.size_bytes) // GEOM.page_bytes)
+    wlo, whi = idx.window(qk)
+    _, qps, misses = simulate_point_queries(
+        wlo // GEOM.c_ipp, whi // GEOM.c_ipp, cap, policy)
+    return qps, misses
+
+
+def run(n=DEFAULT_N, n_queries=100_000, budgets_mb=(0.5, 0.8, 1.0, 1.5, 2, 3.5)):
+    keys = dataset("books", n)
+    qk, qpos = point_workload(keys, n_queries, WorkloadSpec("w4", seed=3))
+
+    for mem_mb in budgets_mb:
+        m_budget = int(mem_mb * 2**20)
+        # --- PGM
+        res = cam_tune_pgm(keys, qpos, m_budget, GEOM, "lru", sample_rate=0.3)
+        qps_cam, _ = _qps_pgm(keys, qk, res.best_eps, m_budget)
+        base_eps, base_t = multicriteria_pgm_tune(
+            keys, index_space_budget=(1 - BASELINE_BUFFER_FRAC) * m_budget)
+        qps_base, _ = _qps_pgm(keys, qk, base_eps, m_budget)
+        emit(f"fig9/pgm/{mem_mb}MB", res.tuning_seconds * 1e6,
+             f"cam_eps={res.best_eps};cam_qps={qps_cam:.0f}"
+             f";base_eps={base_eps};base_qps={qps_base:.0f}"
+             f";qps_gain={qps_cam / max(qps_base, 1):.2f}x"
+             f";tuning_time_ratio={res.tuning_seconds / max(base_t, 1e-9):.2f}")
+
+        # --- RMI
+        grid = (2**8, 2**10, 2**12, 2**14, 2**16)
+        rres = cam_tune_rmi(keys, qpos, qk, m_budget, GEOM, "lru",
+                            branch_grid=grid, sample_rate=0.3)
+        idx = rres.indexes[rres.best_branch]
+        cap = max(1, (m_budget - idx.size_bytes) // GEOM.page_bytes)
+        wlo, whi, _ = idx.window(qk)
+        _, qps_cam_rmi, _ = simulate_point_queries(
+            wlo // GEOM.c_ipp, whi // GEOM.c_ipp, cap, "lru")
+        cb, ct, built = cdfshop_tune_rmi(
+            keys, index_space_budget=(1 - BASELINE_BUFFER_FRAC) * m_budget,
+            branch_grid=grid)
+        idx_b = built[cb]
+        cap_b = max(1, (m_budget - idx_b.size_bytes) // GEOM.page_bytes)
+        wlo, whi, _ = idx_b.window(qk)
+        _, qps_cdf, _ = simulate_point_queries(
+            wlo // GEOM.c_ipp, whi // GEOM.c_ipp, cap_b, "lru")
+        emit(f"fig10/rmi/{mem_mb}MB", rres.tuning_seconds * 1e6,
+             f"cam_branch={rres.best_branch};cam_qps={qps_cam_rmi:.0f}"
+             f";cdfshop_branch={cb};cdfshop_qps={qps_cdf:.0f}"
+             f";qps_gain={qps_cam_rmi / max(qps_cdf, 1):.2f}x"
+             f";tuning_time_ratio={rres.tuning_seconds / max(ct, 1e-9):.2f}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,70 @@
+"""Shared benchmark scaffolding.
+
+Paper experiments use 200M-key datasets on an NVMe server; this container is
+1-CPU, so defaults scale down ~100x while preserving the regime ratios
+(eps/C_ipp, buffer/data, queries/pages).  Every benchmark accepts
+``scale(n)`` so results can be grown toward paper scale on bigger hosts.
+
+Output convention: ``emit(name, us_per_call, derived)`` CSV lines.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, Tuple
+
+import numpy as np
+
+from repro.core import cam
+from repro.data.datasets import make_dataset
+from repro.data.workloads import WorkloadSpec, point_workload, range_workload
+from repro.index.disk_layout import PageLayout
+from repro.index.pgm import build_pgm
+
+DEFAULT_N = 2_000_000
+DEFAULT_Q = 200_000
+GEOM = cam.CamGeometry(c_ipp=256, page_bytes=4096)
+LAYOUT = PageLayout(c_ipp=256, page_bytes=4096)
+
+_DATA_CACHE: Dict[Tuple[str, int, int], np.ndarray] = {}
+_PGM_CACHE: Dict[Tuple[str, int, int, int], object] = {}
+
+
+def dataset(name: str, n: int = DEFAULT_N, seed: int = 1) -> np.ndarray:
+    key = (name, n, seed)
+    if key not in _DATA_CACHE:
+        _DATA_CACHE[key] = make_dataset(name, n, seed)
+    return _DATA_CACHE[key]
+
+
+def pgm_for(name: str, eps: int, n: int = DEFAULT_N, seed: int = 1):
+    key = (name, eps, n, seed)
+    if key not in _PGM_CACHE:
+        _PGM_CACHE[key] = build_pgm(dataset(name, n, seed), eps)
+    return _PGM_CACHE[key]
+
+
+def point_queries(name: str, wl: str, n: int = DEFAULT_N,
+                  n_queries: int = DEFAULT_Q, seed: int = 3):
+    keys = dataset(name, n)
+    return point_workload(keys, n_queries, WorkloadSpec(wl, seed=seed))
+
+
+def range_queries(name: str, wl: str, n: int = DEFAULT_N,
+                  n_queries: int = DEFAULT_Q // 4, seed: int = 3):
+    keys = dataset(name, n)
+    return range_workload(keys, n_queries, WorkloadSpec(wl, seed=seed),
+                          max_len=2048)
+
+
+def emit(name: str, us_per_call: float, derived: str):
+    print(f"{name},{us_per_call:.1f},{derived}", flush=True)
+
+
+class Timer:
+    def __enter__(self):
+        self.t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *a):
+        self.seconds = time.perf_counter() - self.t0

@@ -1,0 +1,51 @@
+"""Benchmark driver — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV.  Default scale is CPU-sized (~100x
+below paper scale, regime-preserving); see benchmarks/common.py.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", nargs="*", default=None,
+                    help="subset of benchmark names")
+    args = ap.parse_args()
+
+    from benchmarks import (bench_covariance, bench_fetch_strategy,
+                            bench_io_size, bench_join, bench_kernels,
+                            bench_kv_planner, bench_pgm_tuning_curve,
+                            bench_point_accuracy, bench_range_accuracy,
+                            bench_rmi_tuning_curve, bench_tuning_e2e)
+
+    table = {
+        "point_accuracy": bench_point_accuracy.run,     # Table IV / Fig 1
+        "range_accuracy": bench_range_accuracy.run,     # Table V
+        "io_size": bench_io_size.run,                   # Table I
+        "covariance": bench_covariance.run,             # Table II
+        "fetch_strategy": bench_fetch_strategy.run,     # Fig 5 + Lemmas
+        "pgm_tuning_curve": bench_pgm_tuning_curve.run,  # Fig 7
+        "rmi_tuning_curve": bench_rmi_tuning_curve.run,  # Fig 8
+        "tuning_e2e": bench_tuning_e2e.run,             # Figs 9/10
+        "join": bench_join.run,                         # Fig 11
+        "kernels": bench_kernels.run,                   # che_solver kernel
+        "kv_planner": bench_kv_planner.run,             # beyond-paper (Eq.15 serving)
+    }
+    names = args.only or list(table)
+    print("name,us_per_call,derived")
+    for name in names:
+        t0 = time.perf_counter()
+        try:
+            table[name]()
+        except Exception as e:  # noqa: BLE001 — keep the suite running
+            print(f"{name},0,ERROR:{type(e).__name__}:{e}", flush=True)
+        print(f"# {name} done in {time.perf_counter() - t0:.1f}s",
+              file=sys.stderr, flush=True)
+
+
+if __name__ == "__main__":
+    main()

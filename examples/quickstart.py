@@ -1,0 +1,39 @@
+"""Quickstart: CAM in 40 lines — estimate physical I/O for a disk-resident
+PGM-index WITHOUT replaying the workload, and check it against ground truth.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import numpy as np
+
+from repro.core import cam
+from repro.core.qerror import q_error
+from repro.core.replay import replay_windows
+from repro.data.datasets import make_dataset
+from repro.data.workloads import WorkloadSpec, point_workload
+from repro.index.pgm import build_pgm
+
+# 1. a sorted key set ("on disk") and a skewed point-lookup workload
+keys = make_dataset("books", 1_000_000, seed=1)
+query_keys, query_positions = point_workload(
+    keys, 100_000, WorkloadSpec("w4", seed=3))
+
+# 2. a disk-based PGM-index with error bound eps (index in memory, data paged)
+eps = 64
+index = build_pgm(keys, eps)
+print(f"PGM eps={eps}: {index.num_segments} segments, "
+      f"{index.size_bytes / 1024:.1f} KiB in memory")
+
+# 3. CAM: replay-free physical-I/O estimate under an 8 MiB LRU page buffer
+geom = cam.CamGeometry(c_ipp=256, page_bytes=4096)
+budget = 8 << 20
+est = cam.estimate_point_io(query_positions, eps, len(keys), geom,
+                            budget, index.size_bytes, policy="lru")
+print(f"CAM:    {est.io_per_query:.4f} physical I/Os per query "
+      f"(hit rate {est.hit_rate:.3f}) in {est.estimation_seconds*1e3:.0f} ms")
+
+# 4. ground truth: replay the actual last-mile windows through a real buffer
+lo, hi = index.window(query_keys)
+capacity = (budget - index.size_bytes) // geom.page_bytes
+misses = replay_windows(lo // geom.c_ipp, hi // geom.c_ipp, capacity, "lru")
+print(f"Replay: {misses.mean():.4f} physical I/Os per query")
+print(f"Q-error: {float(q_error(est.io_per_query, misses.mean())):.3f}")

@@ -1,0 +1,54 @@
+"""End-to-end training driver: a ~60M-param starcoder2-family LM trained for
+a few hundred steps on CPU with the full production path — deterministic
+pipeline, microbatching, checkpointing, fault-tolerant supervision.
+
+    PYTHONPATH=src python examples/train_lm.py                  # quick demo
+    PYTHONPATH=src python examples/train_lm.py --steps 300      # longer run
+"""
+import argparse
+import dataclasses
+import time
+
+import jax
+
+from repro.configs import get_config
+from repro.data.pipeline import TokenPipeline
+from repro.distributed.fault_tolerance import Supervisor
+from repro.distributed.sharding import Recipe
+from repro.launch.train import build_trainer
+from repro.models.params import init_params
+from repro.train import optimizer as opt_mod
+from repro.train import train_step as ts_mod
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--steps", type=int, default=60)
+ap.add_argument("--batch", type=int, default=8)
+ap.add_argument("--seq", type=int, default=128)
+ap.add_argument("--ckpt-dir", default="/tmp/train_lm_ckpt")
+args = ap.parse_args()
+
+# ~60M params: the starcoder2 wiring at 8 layers x 512 wide, 32k vocab
+cfg = dataclasses.replace(
+    get_config("starcoder2-3b"), num_layers=8, d_model=512, num_heads=8,
+    num_kv_heads=2, d_ff=2048, vocab_size=32768, head_dim=64)
+params = init_params(cfg, jax.random.PRNGKey(0))
+n = sum(x.size for x in jax.tree.leaves(params))
+print(f"model: {cfg.name}-style, {n/1e6:.1f}M params, "
+      f"{args.batch}x{args.seq} tokens/step")
+
+recipe = Recipe(remat="block", microbatch=2)
+opt_cfg = opt_mod.AdamWConfig(lr=6e-4, warmup_steps=20, total_steps=args.steps)
+pipe = TokenPipeline(cfg.vocab_size, args.batch, args.seq, seed=0)
+state = {"params": params,
+         "opt_state": ts_mod.init_opt_state(params, cfg, recipe, opt_cfg)}
+sup = Supervisor(build_trainer(cfg, recipe, opt_cfg), state,
+                 pipe.batch_for_step, args.ckpt_dir, ckpt_every=25)
+
+t0 = time.perf_counter()
+res = sup.run(args.steps)
+dt = time.perf_counter() - t0
+l = res["losses"]
+tok_s = args.batch * args.seq * len(l) / dt
+print(f"{len(l)} steps in {dt:.0f}s ({tok_s:,.0f} tok/s) | "
+      f"loss {l[0]:.3f} -> {l[-1]:.3f} | restarts={res['restarts']}")
+assert l[-1] < l[0], "loss should decrease"

@@ -1,0 +1,40 @@
+"""Memory-budgeted index tuning (paper §V): CAM picks eps* by trading index
+footprint against buffer capacity; the cache-oblivious baseline can't.
+
+    PYTHONPATH=src python examples/tune_pgm.py
+"""
+from repro.core import cam
+from repro.core.replay import replay_windows
+from repro.data.datasets import make_dataset
+from repro.data.workloads import WorkloadSpec, point_workload
+from repro.index.pgm import build_pgm
+from repro.sim.machine import simulate_point_queries
+from repro.tuning.pgm_tuner import cam_tune_pgm, multicriteria_pgm_tune
+
+GEOM = cam.CamGeometry()
+keys = make_dataset("books", 1_000_000, seed=1)
+qk, qpos = point_workload(keys, 100_000, WorkloadSpec("w4", seed=3))
+BUDGET = int(1.0 * 2**20)   # 1 MiB total for index + buffer — tight!
+
+print(f"memory budget: {BUDGET / 2**20:.1f} MiB (shared by index AND buffer)")
+res = cam_tune_pgm(keys, qpos, BUDGET, GEOM, "lru", sample_rate=0.3)
+print(f"\nCAM sweep ({len(res.estimates)} candidates, "
+      f"{res.tuning_seconds:.1f}s):")
+for eps in sorted(res.estimates):
+    e = res.estimates[eps]
+    star = " <-- eps*" if eps == res.best_eps else ""
+    print(f"  eps={eps:5d}: est {e.io_per_query:.4f} IO/q "
+          f"(index {float(res.size_model(eps))/1024:7.0f} KiB, "
+          f"h={e.hit_rate:.3f}){star}")
+
+base_eps, _ = multicriteria_pgm_tune(keys, index_space_budget=BUDGET // 2)
+print(f"\nbaseline (fixed 50/50 split) picks eps={base_eps}")
+
+for name, eps in [("CAM", res.best_eps), ("baseline", base_eps)]:
+    idx = build_pgm(keys, eps)
+    cap = max(1, (BUDGET - idx.size_bytes) // GEOM.page_bytes)
+    lo, hi = idx.window(qk)
+    _, qps, misses = simulate_point_queries(lo // GEOM.c_ipp, hi // GEOM.c_ipp,
+                                            cap, "lru")
+    print(f"{name:9s} eps={eps:5d}: {qps:12,.0f} QPS "
+          f"({misses} physical IOs)")

@@ -1,0 +1,13 @@
+"""CAM core: the paper's contribution as a composable JAX module."""
+from repro.core import cache_models, cam, dac, device_models, lpm, page_ref, qerror, replay
+
+__all__ = [
+    "cache_models",
+    "cam",
+    "dac",
+    "device_models",
+    "lpm",
+    "page_ref",
+    "qerror",
+    "replay",
+]

@@ -1,0 +1,203 @@
+"""Policy-specific buffer hit-rate models (paper §III-B, §III-C).
+
+All estimators operate on a page-request probability vector ``probs``
+(``Pr_req(i)`` in the paper) and a buffer capacity ``C`` in pages.  They are
+written as pure ``jnp`` programs so the whole CAM pipeline jits; the
+fixed-point solves use a fixed-iteration bisection (monotone objectives) that
+lowers to a tight ``fori_loop``.
+
+Models implemented
+------------------
+* ``hit_rate_lru``  — Che's approximation (Eq. 7/8).
+* ``hit_rate_fifo`` — Fricker's fixed point (Eq. 4/5/6); equals RANDOM under IRM.
+* ``hit_rate_lfu``  — converged top-C mass (Eq. 9).
+* ``hit_rate_compulsory`` — ``(R - N) / R`` for the large-capacity case and for
+  sorted workloads (Theorem III.1).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "solve_che_time",
+    "hit_rate_lru",
+    "solve_fifo_tau",
+    "hit_rate_fifo",
+    "hit_rate_lfu",
+    "hit_rate_compulsory",
+    "hit_rate",
+    "POLICIES",
+]
+
+POLICIES = ("lru", "fifo", "lfu")
+
+_BISECT_ITERS = 64  # float32 bisection converges long before this
+
+
+def _bisect(f, lo: jnp.ndarray, hi: jnp.ndarray, iters: int = _BISECT_ITERS):
+    """Fixed-iteration bisection for a monotone-increasing scalar objective."""
+
+    def body(_, state):
+        lo, hi = state
+        mid = 0.5 * (lo + hi)
+        val = f(mid)
+        lo = jnp.where(val < 0.0, mid, lo)
+        hi = jnp.where(val < 0.0, hi, mid)
+        return lo, hi
+
+    lo, hi = jax.lax.fori_loop(0, iters, body, (lo, hi))
+    return 0.5 * (lo + hi)
+
+
+# ---------------------------------------------------------------------------
+# LRU — Che's approximation
+# ---------------------------------------------------------------------------
+
+def solve_che_time(probs: jnp.ndarray, capacity) -> jnp.ndarray:
+    """Characteristic time T_C from the consistency condition (Eq. 8):
+
+        C = sum_i (1 - exp(-p_i * T_C))
+
+    The RHS is monotone increasing in ``T_C`` and saturates at ``N`` (the
+    number of pages with nonzero probability), so a solution exists whenever
+    ``C < N``; callers handle ``C >= N`` via :func:`hit_rate_compulsory`.
+    """
+    probs = jnp.asarray(probs, jnp.float64 if probs.dtype == jnp.float64 else jnp.float32)
+    capacity = jnp.asarray(capacity, probs.dtype)
+
+    def objective(t):
+        return jnp.sum(-jnp.expm1(-probs * t)) - capacity
+
+    # Upper bracket: occupancy of every page is >= 1 - exp(-p_min*T); the
+    # solution is below C / p_min-ish.  Grow a safe bracket from the mean.
+    pmin = jnp.maximum(jnp.min(jnp.where(probs > 0, probs, jnp.inf)), 1e-30)
+    hi = jnp.maximum(4.0 * capacity / pmin, jnp.asarray(1.0, probs.dtype))
+    lo = jnp.zeros_like(hi)
+    return _bisect(objective, lo, hi)
+
+
+def hit_rate_lru(probs: jnp.ndarray, capacity, use_kernel: bool = False
+                 ) -> jnp.ndarray:
+    """Che's approximation for LRU (Eq. 7).
+
+    ``use_kernel=True`` solves the characteristic time with the Pallas
+    multi-candidate evaluator (kernels/che_solver.py): K=8 candidates per
+    HBM pass, 4x less popularity-array traffic on TPU (interpret-mode on
+    CPU, so opt-in here; validated equivalent in tests/test_kernels.py).
+    """
+    if use_kernel:
+        from repro.kernels import ops as kernel_ops
+
+        t_c = kernel_ops.che_solve(probs, capacity, k=8, iters=16)
+    else:
+        t_c = solve_che_time(probs, capacity)
+    return jnp.sum(probs * -jnp.expm1(-probs * t_c))
+
+
+# ---------------------------------------------------------------------------
+# FIFO — Fricker's fixed point (== RANDOM under IRM)
+# ---------------------------------------------------------------------------
+
+def solve_fifo_tau(probs: jnp.ndarray, capacity) -> jnp.ndarray:
+    """Characteristic time tau_C from the consistency condition (Eq. 5):
+
+        C = sum_i p_i * tau / (1 - p_i + p_i * tau)
+
+    Monotone increasing in ``tau`` with limit ``N``; bisection as for Che.
+    """
+    probs = jnp.asarray(probs, jnp.float64 if probs.dtype == jnp.float64 else jnp.float32)
+    capacity = jnp.asarray(capacity, probs.dtype)
+
+    def objective(tau):
+        occ = probs * tau / (1.0 - probs + probs * tau)
+        return jnp.sum(occ) - capacity
+
+    pmin = jnp.maximum(jnp.min(jnp.where(probs > 0, probs, jnp.inf)), 1e-30)
+    hi = jnp.maximum(4.0 * capacity / pmin, jnp.asarray(1.0, probs.dtype))
+    lo = jnp.zeros_like(hi)
+    return _bisect(objective, lo, hi)
+
+
+def hit_rate_fifo(probs: jnp.ndarray, capacity) -> jnp.ndarray:
+    """Fricker's FIFO/RANDOM stationary hit rate (Eq. 4 + Eq. 6)."""
+    tau = solve_fifo_tau(probs, capacity)
+    h_i = probs * tau / (1.0 - probs + probs * tau)
+    return jnp.sum(probs * h_i)
+
+
+# ---------------------------------------------------------------------------
+# LFU — converged steady state
+# ---------------------------------------------------------------------------
+
+def hit_rate_lfu(probs: jnp.ndarray, capacity) -> jnp.ndarray:
+    """Converged LFU keeps the C most popular pages (Eq. 9).
+
+    ``capacity`` may be a traced scalar; we sort once and take a masked
+    prefix sum so the function stays jittable.
+    """
+    probs = jnp.asarray(probs)
+    order = jnp.argsort(-probs)
+    sorted_p = probs[order]
+    ranks = jnp.arange(sorted_p.shape[0])
+    mask = ranks < jnp.asarray(capacity, ranks.dtype)
+    return jnp.sum(jnp.where(mask, sorted_p, 0.0))
+
+
+# ---------------------------------------------------------------------------
+# Compulsory-miss closed form (C >= N, and sorted workloads via Thm III.1)
+# ---------------------------------------------------------------------------
+
+def hit_rate_compulsory(total_requests, distinct_pages) -> jnp.ndarray:
+    """h = (R - N) / R — each distinct page misses exactly once."""
+    r = jnp.asarray(total_requests, jnp.float32)
+    n = jnp.asarray(distinct_pages, jnp.float32)
+    return jnp.where(r > 0, (r - n) / jnp.maximum(r, 1.0), 0.0)
+
+
+# ---------------------------------------------------------------------------
+# Dispatcher
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("policy",))
+def _hit_rate_jit(policy: str, probs, capacity):
+    if policy == "lru":
+        return hit_rate_lru(probs, capacity)
+    if policy == "fifo":
+        return hit_rate_fifo(probs, capacity)
+    if policy == "lfu":
+        return hit_rate_lfu(probs, capacity)
+    raise ValueError(f"unknown policy {policy!r}")
+
+
+def hit_rate(
+    policy: str,
+    capacity,
+    probs: jnp.ndarray,
+    *,
+    total_requests: Optional[float] = None,
+    distinct_pages: Optional[float] = None,
+    sorted_workload: bool = False,
+) -> jnp.ndarray:
+    """Paper §III-B/§III-C dispatcher.
+
+    * sorted workloads → Theorem III.1 closed form (policy independent),
+    * ``C >= N``       → compulsory-miss closed form,
+    * otherwise        → the policy-specific IRM estimator.
+    """
+    probs = jnp.asarray(probs)
+    n_distinct = (
+        float(distinct_pages)
+        if distinct_pages is not None
+        else float(jnp.sum(probs > 0))
+    )
+    if sorted_workload or (capacity is not None and float(capacity) >= n_distinct):
+        if total_requests is None:
+            raise ValueError("closed-form hit rate needs total_requests (R)")
+        return hit_rate_compulsory(total_requests, n_distinct)
+    if policy not in POLICIES:
+        raise ValueError(f"unknown policy {policy!r}; expected one of {POLICIES}")
+    return _hit_rate_jit(policy, probs, capacity)

@@ -1,0 +1,184 @@
+"""Structural page-reference estimators (paper §IV).
+
+Given query *true positions* (ranks) and the index geometry (error bound
+``eps``, items-per-page ``C_ipp``), these estimators derive the expected
+page-reference histogram ``C_p`` — and from it the request distribution
+``Pr_req(p)`` — WITHOUT replaying the workload.
+
+TPU-native adaptation: the paper's per-query C++ loops become vectorized
+gather (LUT), masked windowed adds, and one ``segment_sum`` scatter; the whole
+estimator jits.
+
+* Point queries  — Eq. 12/13 via the (d, s) lookup table (O(eps + C_ipp) entries).
+* Range queries  — Eq. 14 via a difference array + prefix sum.
+* Sorted (join)  — Theorem III.1 needs only (R, N); computed from interval
+  unions with a cummax, no histogram required.
+* RMI            — per-leaf mixture: grouped by distinct leaf error bound.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "point_lut",
+    "point_page_refs",
+    "point_page_refs_mixed_eps",
+    "range_page_refs",
+    "page_intervals",
+    "sorted_workload_rn",
+    "point_access_prob_exact",
+]
+
+
+def lut_radius(eps: int, c_ipp: int) -> int:
+    """Max |page distance| d reachable from the true position's page."""
+    return int(np.ceil(2 * eps / c_ipp))
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "c_ipp"))
+def point_lut(eps: int, c_ipp: int) -> jnp.ndarray:
+    """LUT[d + D, s] = Pr(page q+d accessed | in-page offset s) per Eq. 12.
+
+    With the true position r = q*C_ipp + s and the error e ~ U{-eps..eps},
+    page p = q + d is touched iff the window [r+e-eps, r+e+eps] intersects
+    [p*C_ipp, (p+1)*C_ipp - 1].  Substituting p*C_ipp - r = d*C_ipp - s gives
+
+        L(d,s) = max(-eps, d*C_ipp - s - eps)
+        U(d,s) = min(+eps, d*C_ipp - s + C_ipp - 1 + eps)
+        Pr     = max(0, U - L + 1) / (2*eps + 1)
+    """
+    d_radius = lut_radius(eps, c_ipp)
+    d = jnp.arange(-d_radius, d_radius + 1)[:, None]      # (2D+1, 1)
+    s = jnp.arange(c_ipp)[None, :]                        # (1, C_ipp)
+    lo = jnp.maximum(-eps, d * c_ipp - s - eps)
+    hi = jnp.minimum(eps, d * c_ipp - s + c_ipp - 1 + eps)
+    width = jnp.maximum(0, hi - lo + 1)
+    return width.astype(jnp.float32) / jnp.float32(2 * eps + 1)
+
+
+def point_access_prob_exact(r: int, page: int, eps: int, c_ipp: int) -> float:
+    """Brute-force enumeration of Eq. 12 (test oracle, O(eps))."""
+    hits = 0
+    for e in range(-eps, eps + 1):
+        w_lo, w_hi = r + e - eps, r + e + eps
+        p_lo, p_hi = page * c_ipp, (page + 1) * c_ipp - 1
+        if w_lo <= p_hi and p_lo <= w_hi:
+            hits += 1
+    return hits / (2 * eps + 1)
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "c_ipp", "num_pages"))
+def point_page_refs(
+    positions: jnp.ndarray, eps: int, c_ipp: int, num_pages: int
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Expected page-reference histogram for a point workload (Eq. 13).
+
+    Args:
+      positions: (Q,) int32 true ranks of the query keys.
+      eps, c_ipp, num_pages: index geometry (static for jit).
+
+    Returns:
+      counts: (num_pages,) float32 expected reference counts ``C_p``.
+      total:  scalar — total expected logical references R (window mass that
+              falls on valid pages; boundary-clipped windows drop the
+              out-of-range share, matching the clamped last-mile search).
+    """
+    lut = point_lut(eps, c_ipp)                            # (2D+1, C_ipp)
+    d_radius = lut_radius(eps, c_ipp)
+    positions = positions.astype(jnp.int32)
+    q = positions // c_ipp
+    s = positions % c_ipp
+    contribs = lut[:, s].T                                 # (Q, 2D+1)
+    targets = q[:, None] + jnp.arange(-d_radius, d_radius + 1)[None, :]
+    valid = (targets >= 0) & (targets < num_pages)
+    contribs = jnp.where(valid, contribs, 0.0)
+    flat_t = jnp.where(valid, targets, 0).reshape(-1)
+    counts = jax.ops.segment_sum(
+        contribs.reshape(-1), flat_t, num_segments=num_pages
+    )
+    return counts, jnp.sum(contribs)
+
+
+def point_page_refs_mixed_eps(
+    positions: np.ndarray,
+    eps_per_query: np.ndarray,
+    c_ipp: int,
+    num_pages: int,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """RMI variant (§V-C): per-query leaf error bounds.
+
+    Queries are grouped by distinct eps (leaf error bounds repeat heavily),
+    and each group reuses the fixed-eps jitted estimator — so cost is
+    O(#distinct_eps) compiles worst case, with LUTs of size O(eps + C_ipp).
+    """
+    positions = np.asarray(positions)
+    eps_per_query = np.asarray(eps_per_query)
+    counts = jnp.zeros((num_pages,), jnp.float32)
+    total = jnp.zeros((), jnp.float32)
+    for eps in np.unique(eps_per_query):
+        sel = positions[eps_per_query == eps]
+        c, t = point_page_refs(jnp.asarray(sel), int(max(eps, 1)), c_ipp, num_pages)
+        counts = counts + c
+        total = total + t
+    return counts, total
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "c_ipp", "num_pages", "n"))
+def range_page_refs(
+    lo_pos: jnp.ndarray,
+    hi_pos: jnp.ndarray,
+    eps: int,
+    c_ipp: int,
+    num_pages: int,
+    n: int,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Range-workload histogram via Eq. 14 + difference array.
+
+    S(Q) = floor(max(0, r(lo) - 2eps) / C_ipp)
+    E(Q) = floor(min(n-1, r(hi) + 2eps) / C_ipp)
+
+    Returns (counts, total_refs R); E[DAC] = R / |Q|.
+    """
+    start = jnp.maximum(0, lo_pos.astype(jnp.int32) - 2 * eps) // c_ipp
+    end = jnp.minimum(n - 1, hi_pos.astype(jnp.int32) + 2 * eps) // c_ipp
+    ones = jnp.ones_like(start, jnp.float32)
+    diff = jax.ops.segment_sum(ones, start, num_segments=num_pages + 1)
+    diff = diff - jax.ops.segment_sum(ones, end + 1, num_segments=num_pages + 1)
+    counts = jnp.cumsum(diff)[:num_pages]
+    total = jnp.sum((end - start + 1).astype(jnp.float32))
+    return counts, total
+
+
+@functools.partial(jax.jit, static_argnames=("c_ipp", "num_pages"))
+def page_intervals(
+    window_lo: jnp.ndarray, window_hi: jnp.ndarray, c_ipp: int, num_pages: int
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Map position windows to inclusive page intervals (PAGEINTERVALS in Alg. 2)."""
+    lo = jnp.clip(window_lo, 0, None) // c_ipp
+    hi = jnp.clip(window_hi, None, num_pages * c_ipp - 1) // c_ipp
+    return lo.astype(jnp.int32), jnp.clip(hi, lo, num_pages - 1).astype(jnp.int32)
+
+
+@jax.jit
+def sorted_workload_rn(
+    page_lo: jnp.ndarray, page_hi: jnp.ndarray
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """(R, N) for a sorted probe stream (Theorem III.1 inputs).
+
+    R = sum of window widths; N = |union of intervals|.  For intervals sorted
+    by ``page_lo`` the union size is a running-cummax sweep — O(|Q|), no
+    histogram materialization.
+    """
+    widths = (page_hi - page_lo + 1).astype(jnp.float32)
+    r_total = jnp.sum(widths)
+    prev_hi = jnp.concatenate(
+        [jnp.array([-1], page_hi.dtype), jax.lax.cummax(page_hi)[:-1]]
+    )
+    new_lo = jnp.maximum(page_lo, prev_hi + 1)
+    n_distinct = jnp.sum(jnp.maximum(0, page_hi - new_lo + 1).astype(jnp.float32))
+    return r_total, n_distinct

@@ -1,0 +1,5 @@
+"""Data substrate: synthetic SOSD-style datasets, workload mixtures, and the
+LM token pipeline."""
+from repro.data import datasets, workloads
+
+__all__ = ["datasets", "workloads"]

@@ -1,0 +1,5 @@
+"""Distributed runtime: sharding recipes, checkpointing, fault tolerance,
+elastic re-meshing, gradient compression."""
+from repro.distributed import sharding
+
+__all__ = ["sharding"]

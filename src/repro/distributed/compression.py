@@ -1,0 +1,74 @@
+"""Gradient compression for the slow cross-pod (DCN) axis.
+
+int8 quantization with error feedback: each pod quantizes its local gradient
+(plus the carried quantization residual), the int8 payloads cross the DCN via
+an explicit shard_map all-gather (4x fewer wire bytes than an f32 all-reduce),
+and every pod dequantizes + averages locally.  The residual ``ef`` makes the
+compression unbiased over time (error-feedback SGD).
+
+Used by train_step when ``recipe.compress_pod_grads`` and the mesh has a
+"pod" axis; the byte reduction is directly visible to the roofline collective
+parser (§Perf).
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+__all__ = ["compressed_pod_mean", "quantize_int8", "dequantize_int8"]
+
+
+def quantize_int8(x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+def dequantize_int8(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    return q.astype(jnp.float32) * scale
+
+
+def _pod_gather_mean(leaf: jnp.ndarray, ef: jnp.ndarray, n_pods: int):
+    """Runs INSIDE shard_map over the 'pod' axis: local quantize -> int8
+    all-gather across pods -> dequantized mean; returns new error residual."""
+    local = leaf + ef
+    q, s = quantize_int8(local)
+    deq_local = dequantize_int8(q, s)
+    new_ef = local - deq_local
+    q_all = jax.lax.all_gather(q, "pod")            # (n_pods, ...) int8 wire
+    s_all = jax.lax.all_gather(s, "pod")            # (n_pods,) f32
+    mean = jnp.tensordot(s_all / n_pods,
+                         q_all.astype(jnp.float32), axes=([0], [0]))
+    return mean, new_ef
+
+
+def compressed_pod_mean(grads: Any, ef: Any, mesh) -> Tuple[Any, Any]:
+    """Average per-pod gradients across the 'pod' axis with int8 payloads.
+
+    ``grads`` leaves must be identical in sharding across pods except for the
+    pod axis itself (i.e. per-pod partial gradients).  ``ef`` matches grads.
+    """
+    n_pods = mesh.shape["pod"]
+    auto = frozenset(n for n in mesh.axis_names if n != "pod")
+
+    def one(g, e):
+        fn = jax.shard_map(
+            lambda gg, ee: _pod_gather_mean(gg, ee, n_pods),
+            mesh=mesh,
+            in_specs=(P("pod"), P("pod")),
+            out_specs=(P(), P("pod")),
+            check_vma=False,
+            axis_names=frozenset({"pod"}),
+        )
+        # leaves enter with a leading per-pod axis (n_pods, ...)
+        return fn(g, e)
+
+    flat_g, tdef = jax.tree.flatten(grads)
+    flat_e = jax.tree.leaves(ef)
+    out = [one(g, e) for g, e in zip(flat_g, flat_e)]
+    means = jax.tree.unflatten(tdef, [o[0] for o in out])
+    new_ef = jax.tree.unflatten(tdef, [o[1] for o in out])
+    return means, new_ef

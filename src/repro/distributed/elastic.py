@@ -1,0 +1,38 @@
+"""Elastic re-scaling: restore any checkpoint onto any mesh.
+
+Checkpoints are sharding-agnostic (global arrays per key path), so scaling
+from N to M devices is: restore -> rebuild PartitionSpecs for the new mesh
+via the same ParamDef templates -> device_put.  Dims that no longer divide
+the new axis group fall back automatically inside ShardingCtx._resolve, so a
+recipe tuned for 256 chips loads cleanly on 8 (degraded parallelism, same
+math) — the elastic-scaling path a preempted-pod restart takes.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import Recipe, ShardingCtx, tree_shardings
+from repro.models import params as params_mod
+
+__all__ = ["reshard_params", "reshard_tree"]
+
+
+def reshard_tree(host_tree, shardings):
+    """device_put a host (numpy) tree onto the sharding tree."""
+    return jax.tree.map(
+        lambda x, s: jax.device_put(jnp.asarray(x), s) if s is not None
+        else jnp.asarray(x),
+        host_tree, shardings)
+
+
+def reshard_params(host_params: Dict[str, Any], cfg: ModelConfig,
+                   mesh, recipe: Recipe):
+    """Place restored params onto a (possibly different) mesh."""
+    ctx = ShardingCtx(mesh, recipe)
+    defs = params_mod.param_defs(cfg)
+    shardings = tree_shardings(ctx, defs)
+    return reshard_tree(host_params, shardings)

@@ -1,0 +1,147 @@
+"""Logical-axis sharding: recipes, param definitions, and the sharding context.
+
+A ``Recipe`` maps logical dimension roles to mesh axes (MaxText-style rules
+table).  Dims are only sharded when evenly divisible by the axis-group size —
+XLA GSPMD rejects uneven *input* shardings — with automatic fallback to the
+largest feasible prefix of the axis group, then to replication.
+
+Roles:
+  weights:     "fsdp" (d_model/storage dim), "tp" (heads*head_dim / d_ff /
+               vocab), "ep" (experts), None (replicated: norms, small vectors)
+  activations: "batch", "seq" (sequence parallelism), "heads", "kv_seq"
+               (decode-cache length), None
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+__all__ = ["Recipe", "ParamDef", "ShardingCtx", "axis_group_size"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Recipe:
+    """Distribution recipe — the hillclimbing knobs live here."""
+
+    batch_axes: Tuple[str, ...] = ("data",)
+    fsdp_axes: Tuple[str, ...] = ("data",)
+    tp_axes: Tuple[str, ...] = ("model",)
+    ep_axes: Tuple[str, ...] = ("model",)
+    seq_axes: Tuple[str, ...] = ()            # activation sequence parallelism
+    act_embed_axes: Tuple[str, ...] = ()      # weight-stationary decode: shard
+                                              # the residual's d_model instead
+                                              # of gathering weights per layer
+    kv_batch_axes: Optional[Tuple[str, ...]] = None  # cache batch (defaults
+                                              # to batch_axes)
+    kv_seq_axes: Tuple[str, ...] = ("model",)
+    remat: str = "block"                      # none | block | nested
+    microbatch: int = 1                       # gradient-accumulation steps
+    grad_dtype: str = "float32"               # gradient accumulation dtype
+    kv_cache_dtype: str = "bfloat16"          # bfloat16 | int8 (decode cache)
+    param_dtype: str = "float32"              # master param storage (train)
+    unroll_microbatches: bool = False         # python loop vs lax.scan accum
+    attn_impl: str = "blockwise"              # blockwise | dense | pallas
+    block_kv: int = 1024
+    compress_pod_grads: bool = False
+    moment_dtype: Optional[str] = None        # override cfg.opt_moment_dtype
+    scan_layers: bool = True
+
+    def role_axes(self, role: Optional[str]) -> Tuple[str, ...]:
+        return {
+            None: (),
+            "fsdp": self.fsdp_axes,
+            "tp": self.tp_axes,
+            "ep": self.ep_axes,
+            "batch": self.batch_axes,
+            "seq": self.seq_axes,
+            "heads": self.tp_axes,
+            "act_embed": self.act_embed_axes,
+            "kv_batch": (self.kv_batch_axes if self.kv_batch_axes is not None
+                         else self.batch_axes),
+            "kv_seq": self.kv_seq_axes,
+        }[role]
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamDef:
+    """Shape + logical roles + initializer for one parameter tensor."""
+
+    shape: Tuple[int, ...]
+    dims: Tuple[Optional[str], ...]     # role per dim ("fsdp"/"tp"/"ep"/None)
+    init: str = "normal"                # normal | zeros | ones
+    scale: float = -1.0                 # -1 -> 1/sqrt(fan_in) heuristic
+
+    def fan_in(self) -> int:
+        return self.shape[-2] if len(self.shape) >= 2 else self.shape[-1]
+
+
+def axis_group_size(mesh, axes: Tuple[str, ...]) -> int:
+    return int(np.prod([mesh.shape[a] for a in axes], dtype=np.int64)) if axes else 1
+
+
+class ShardingCtx:
+    """Threads (mesh, recipe) through model code; no-ops when mesh is None."""
+
+    def __init__(self, mesh=None, recipe: Recipe = Recipe()):
+        self.mesh = mesh
+        self.recipe = recipe
+
+    # -- spec construction -------------------------------------------------
+    def _resolve(self, size: int, role: Optional[str]):
+        if self.mesh is None or role is None:
+            return None
+        axes = self.recipe.role_axes(role)
+        while axes:
+            group = axis_group_size(self.mesh, axes)
+            if group > 1 and size % group == 0:
+                return axes if len(axes) > 1 else axes[0]
+            axes = axes[:-1]  # drop trailing axis, retry with smaller group
+        return None
+
+    def spec(self, shape: Tuple[int, ...], dims: Tuple[Optional[str], ...]) -> P:
+        assert len(shape) == len(dims), (shape, dims)
+        entries = [self._resolve(s, d) for s, d in zip(shape, dims)]
+        # one mesh axis may appear at most once in a spec: drop duplicates
+        used = set()
+        clean = []
+        for e in entries:
+            names = e if isinstance(e, tuple) else (e,) if e else ()
+            if any(n in used for n in names):
+                clean.append(None)
+            else:
+                used.update(names)
+                clean.append(e)
+        return P(*clean)
+
+    def sharding(self, shape, dims) -> Optional[NamedSharding]:
+        if self.mesh is None:
+            return None
+        return NamedSharding(self.mesh, self.spec(shape, dims))
+
+    # -- activation constraints --------------------------------------------
+    def constrain(self, x, *dims):
+        if self.mesh is None:
+            return x
+        return jax.lax.with_sharding_constraint(x, self.spec(x.shape, tuple(dims)))
+
+
+def tree_specs(ctx: ShardingCtx, defs: Dict[str, Any]):
+    """Map a (nested) dict of ParamDef to PartitionSpecs."""
+    return jax.tree.map(
+        lambda d: ctx.spec(d.shape, d.dims),
+        defs,
+        is_leaf=lambda x: isinstance(x, ParamDef),
+    )
+
+
+def tree_shardings(ctx: ShardingCtx, defs):
+    return jax.tree.map(
+        lambda d: ctx.sharding(d.shape, d.dims),
+        defs,
+        is_leaf=lambda x: isinstance(x, ParamDef),
+    )

@@ -1,0 +1,4 @@
+"""Learned-index substrate: ε-PLA, PGM, RMI, RadixSpline, disk layout."""
+from repro.index import disk_layout, pgm, pla, radixspline, rmi
+
+__all__ = ["disk_layout", "pgm", "pla", "radixspline", "rmi"]

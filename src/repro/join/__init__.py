@@ -1,0 +1,4 @@
+"""CAM-guided hybrid join (paper §VI)."""
+from repro.join import calibrate, executors, hybrid
+
+__all__ = ["calibrate", "executors", "hybrid"]

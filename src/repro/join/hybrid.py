@@ -1,0 +1,103 @@
+"""CAM-guided hybrid join: greedy probe partitioning (paper §VI, Algorithm 2).
+
+The sorted probe stream is split into segments; each segment is executed with
+point probes or one coalesced range probe, whichever the fitted cost model
+(Eq. 17) predicts cheaper:
+
+    Cost_point(S) = delta + alpha * N_S + lambda_point * d_S
+    Cost_range(S) = eta + (beta + lambda_range) * K_S
+
+d_S (distinct pages under point probing) uses the sorted-workload theorem:
+one compulsory miss per distinct page.  The greedy pass closes a segment when
+its range span hits K_max or range probing wins by margin gamma once N_min
+probes have accumulated.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Tuple
+
+import numpy as np
+
+__all__ = ["JoinCostParams", "Segment", "partition_probes", "segment_costs"]
+
+
+@dataclasses.dataclass(frozen=True)
+class JoinCostParams:
+    """Eq. 17 coefficients (fit by calibration, see join/calibrate.py)."""
+
+    alpha: float = 1.64e-6         # per-key CPU
+    beta: float = 1.72e-6          # per-page scan/filter CPU
+    delta: float = 0.30e-6         # point-probe intercept
+    eta: float = 4.42e-6           # range-probe intercept
+    lambda_point: float = 11.9e-6  # per physical miss (random)
+    lambda_range: float = 4.66e-6  # per physical miss (sequential)
+
+
+@dataclasses.dataclass(frozen=True)
+class Segment:
+    start: int          # probe index range [start, end)
+    end: int
+    page_lo: int        # page span covered by the range probe
+    page_hi: int
+    n_keys: int
+    distinct_pages: int
+    use_range: bool
+    cost_point: float
+    cost_range: float
+
+
+def segment_costs(
+    n_keys: int, distinct_pages: int, span: int, params: JoinCostParams
+) -> Tuple[float, float]:
+    cost_p = params.delta + params.alpha * n_keys + params.lambda_point * distinct_pages
+    cost_r = params.eta + (params.beta + params.lambda_range) * span
+    return cost_p, cost_r
+
+
+def partition_probes(
+    page_lo: np.ndarray,
+    page_hi: np.ndarray,
+    params: JoinCostParams,
+    n_min: int = 1024,
+    k_max: int = 8192,
+    gamma: float = 0.05,
+) -> List[Segment]:
+    """Algorithm 2 over per-probe page intervals of the *sorted* outer keys."""
+    lo = np.asarray(page_lo, np.int64)
+    hi = np.asarray(page_hi, np.int64)
+    n = lo.shape[0]
+    segments: List[Segment] = []
+    i = 0
+    while i < n:
+        seg_lo = int(lo[i])
+        seg_hi = int(hi[i])
+        covered_hi = int(hi[i])          # rightmost page seen (for distinct count)
+        distinct = seg_hi - seg_lo + 1
+        j = i + 1
+        cost_p, cost_r = segment_costs(1, distinct, seg_hi - seg_lo + 1, params)
+        while j < n:
+            l, h = int(lo[j]), int(hi[j])
+            new_lo = min(seg_lo, l)
+            new_hi = max(seg_hi, h)
+            # incremental distinct-page union (sorted stream => windows only
+            # extend to the right of what previous windows covered)
+            distinct += max(0, h - max(l, covered_hi + 1) + 1)
+            covered_hi = max(covered_hi, h)
+            seg_lo, seg_hi = new_lo, new_hi
+            n_keys = j - i + 1
+            span = seg_hi - seg_lo + 1
+            if n_keys >= n_min:
+                cost_p, cost_r = segment_costs(n_keys, distinct, span, params)
+                if span >= k_max or cost_r <= (1.0 - gamma) * cost_p:
+                    j += 1
+                    break
+            j += 1
+        n_keys = j - i
+        span = seg_hi - seg_lo + 1
+        cost_p, cost_r = segment_costs(n_keys, distinct, span, params)
+        use_range = (n_keys >= n_min) and (cost_r <= (1.0 - gamma) * cost_p)
+        segments.append(Segment(i, j, seg_lo, seg_hi, n_keys, distinct,
+                                use_range, cost_p, cost_r))
+        i = j
+    return segments

@@ -1,0 +1,13 @@
+"""Pallas TPU kernels for the perf-critical hot spots.
+
+* flash_attention  — prefill/train blockwise attention (MXU-tiled).
+* decode_attention — split-K single-token GQA decode.
+* che_solver       — multi-candidate Che fixed-point evaluation (the CAM
+                     tuning hot loop; K candidates per HBM pass).
+
+Each kernel ships with ops.py (jit'd wrapper, auto interpret off-TPU) and
+ref.py (pure-jnp oracle used by the allclose test sweeps).
+"""
+from repro.kernels import ops, ref
+
+__all__ = ["ops", "ref"]

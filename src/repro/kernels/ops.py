@@ -1,0 +1,47 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+On CPU (this container) the wrappers run the kernels in interpret mode when
+``interpret=None`` (auto); on TPU they compile natively.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+
+from repro.kernels import che_solver as _che
+from repro.kernels import decode_attention as _dec
+from repro.kernels import flash_attention as _fa
+
+__all__ = ["flash_attention", "decode_attention", "che_sums", "che_solve"]
+
+
+def _auto_interpret(interpret: Optional[bool]) -> bool:
+    if interpret is not None:
+        return interpret
+    return jax.default_backend() != "tpu"
+
+
+def flash_attention(q, k, v, *, causal: bool = True, block_q: int = 512,
+                    block_kv: int = 512, interpret: Optional[bool] = None):
+    return _fa.flash_attention(q, k, v, causal=causal, block_q=block_q,
+                               block_kv=block_kv,
+                               interpret=_auto_interpret(interpret))
+
+
+def decode_attention(q, k_cache, v_cache, lengths, *, block_kv: int = 512,
+                     interpret: Optional[bool] = None):
+    return _dec.decode_attention(q, k_cache, v_cache, lengths,
+                                 block_kv=block_kv,
+                                 interpret=_auto_interpret(interpret))
+
+
+def che_sums(probs, t_candidates, *, interpret: Optional[bool] = None):
+    return _che.che_sums(probs, t_candidates,
+                         interpret=_auto_interpret(interpret))
+
+
+def che_solve(probs, capacity, *, k: int = 8, iters: int = 20,
+              interpret: Optional[bool] = None):
+    return _che.che_solve(probs, capacity, k=k, iters=iters,
+                          interpret=_auto_interpret(interpret))

@@ -1,0 +1,45 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["flash_attention_ref", "decode_attention_ref", "che_sums_ref"]
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True):
+    """q: (B,Sq,H,D); k/v: (B,Skv,Hk,D) with H % Hk == 0. f32 softmax."""
+    b, sq, h, d = q.shape
+    hk = k.shape[2]
+    g = h // hk
+    qg = q.reshape(b, sq, hk, g, d).astype(jnp.float32)
+    scores = jnp.einsum("bskgd,btkd->bkgst", qg, k.astype(jnp.float32))
+    scores = scores / jnp.sqrt(jnp.float32(d))
+    if causal:
+        mask = jnp.arange(sq)[:, None] >= jnp.arange(k.shape[1])[None, :]
+        scores = jnp.where(mask[None, None, None], scores, -1e30)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgst,btkd->bskgd", p, v.astype(jnp.float32))
+    return out.reshape(b, sq, h, d).astype(q.dtype)
+
+
+def decode_attention_ref(q, k_cache, v_cache, lengths):
+    """q: (B,1,H,D); caches: (B,S,Hk,D); lengths: (B,)."""
+    b, _, h, d = q.shape
+    hk = k_cache.shape[2]
+    g = h // hk
+    qg = q.reshape(b, 1, hk, g, d)[:, 0].astype(jnp.float32)
+    scores = jnp.einsum("bkgd,btkd->bkgt", qg, k_cache.astype(jnp.float32))
+    scores = scores / jnp.sqrt(jnp.float32(d))
+    mask = jnp.arange(k_cache.shape[1])[None] < lengths[:, None]
+    scores = jnp.where(mask[:, None, None], scores, -1e30)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgt,btkd->bkgd", p, v_cache.astype(jnp.float32))
+    return out.reshape(b, 1, h, d).astype(q.dtype)
+
+
+def che_sums_ref(probs, t_candidates):
+    """sum_i (1 - exp(-p_i * t_k)) for each candidate k. (K,) f32."""
+    p = probs.astype(jnp.float32)[None, :]
+    t = t_candidates.astype(jnp.float32)[:, None]
+    return jnp.sum(-jnp.expm1(-p * t), axis=1)

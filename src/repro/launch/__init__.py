@@ -1,0 +1,8 @@
+"""Launch layer: meshes, dry-run, roofline, train/serve CLIs.
+
+NOTE: do not import repro.launch.dryrun from here — it sets XLA_FLAGS at
+import time and must only be imported as the program entry point.
+"""
+from repro.launch import analytic, cells, hlo, mesh
+
+__all__ = ["analytic", "cells", "hlo", "mesh"]

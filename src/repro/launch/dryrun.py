@@ -1,0 +1,147 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+The two lines above MUST stay the first statements in this module — jax locks
+the device count at first init, and the production meshes need 512 host
+placeholder devices.
+
+Per cell we record: compile success, per-device memory analysis (argument /
+output / temp / peak bytes — the "fits in HBM" proof), cost_analysis (with
+its scan-body caveat), and the collective schedule parsed from the compiled
+HLO.  Results append to a JSONL so the sweep is resumable.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch yi-34b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] [--out f.jsonl]
+"""
+import argparse
+import json
+import time
+import traceback
+
+import jax
+
+from repro.configs import ARCHS, SHAPES
+from repro.launch import hlo as hlo_mod
+from repro.launch.cells import (build_cell, cell_skip_reason, default_recipe,
+                                optimized_overrides)
+from repro.launch.mesh import V5E, make_production_mesh
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool = False,
+             recipe_overrides=None, verbose: bool = True,
+             optimized: bool = False) -> dict:
+    cfg = ARCHS[arch]
+    shape = SHAPES[shape_name]
+    if optimized:
+        recipe_overrides = {**optimized_overrides(cfg, shape),
+                            **(recipe_overrides or {})}
+    rec = {"arch": arch, "shape": shape_name, "optimized": optimized,
+           "mesh": "2x16x16" if multi_pod else "16x16"}
+    skip = cell_skip_reason(cfg, shape)
+    if skip:
+        rec.update(status="skipped", reason=skip)
+        return rec
+    t0 = time.perf_counter()
+    try:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        recipe = default_recipe(cfg, shape, multi_pod,
+                                **(recipe_overrides or {}))
+        with jax.set_mesh(mesh):
+            fn, args = build_cell(cfg, shape, mesh, recipe)
+            lowered = fn.lower(*args)
+            compiled = lowered.compile()
+            ma = compiled.memory_analysis()
+            ca = compiled.cost_analysis() or {}
+            text = compiled.as_text()
+        coll = hlo_mod.collective_bytes(text)
+        sched = hlo_mod.collective_schedule(text)
+        rec.update(
+            status="ok",
+            compile_seconds=round(time.perf_counter() - t0, 2),
+            recipe={"microbatch": recipe.microbatch, "remat": recipe.remat,
+                    "batch_axes": recipe.batch_axes,
+                    "fsdp_axes": recipe.fsdp_axes,
+                    "compress_pod_grads": recipe.compress_pod_grads},
+            memory={
+                "argument_bytes": ma.argument_size_in_bytes,
+                "output_bytes": ma.output_size_in_bytes,
+                "temp_bytes": ma.temp_size_in_bytes,
+                "peak_bytes": ma.peak_memory_in_bytes,
+                "alias_bytes": ma.alias_size_in_bytes,
+            },
+            cost={"flops_per_device_scanbody": ca.get("flops", 0.0),
+                  "bytes_accessed_scanbody": ca.get("bytes accessed", 0.0)},
+            collectives={"kinds": sorted({k for k, _ in sched}),
+                         "n_ops": len(sched), **coll},
+        )
+        # live-bytes estimate: args are resident (params/opt/cache), temps peak
+        resident = ma.argument_size_in_bytes + ma.output_size_in_bytes \
+            - ma.alias_size_in_bytes
+        rec["memory"]["resident_plus_temp"] = resident + ma.temp_size_in_bytes
+        rec["memory"]["fits_16g"] = bool(
+            resident + ma.temp_size_in_bytes <= V5E.hbm_bytes)
+    except Exception as e:  # noqa: BLE001 — sweep must survive cell failures
+        rec.update(status="error", error=f"{type(e).__name__}: {e}",
+                   trace=traceback.format_exc()[-2000:],
+                   compile_seconds=round(time.perf_counter() - t0, 2))
+    if verbose:
+        mem = rec.get("memory", {})
+        print(f"[{rec['mesh']}] {arch} x {shape_name}: {rec['status']}"
+              + (f" peak={mem.get('peak_bytes', 0)/2**30:.2f}GiB"
+                 f" resident+temp={mem.get('resident_plus_temp', 0)/2**30:.2f}GiB"
+                 f" fits16G={mem.get('fits_16g')}"
+                 f" t={rec.get('compile_seconds')}s"
+                 if rec["status"] == "ok" else f" {rec.get('reason') or rec.get('error')}"),
+              flush=True)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=sorted(ARCHS), default=None)
+    ap.add_argument("--shape", choices=sorted(SHAPES), default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", default="results/dryrun.jsonl")
+    ap.add_argument("--optimized", action="store_true",
+                    help="apply the hillclimbed per-cell recipe overrides")
+    ap.add_argument("--resume", action="store_true",
+                    help="skip cells already present in --out")
+    args = ap.parse_args()
+
+    cells = []
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    if args.all:
+        for mp in meshes:
+            for arch in ARCHS:
+                for shape in SHAPES:
+                    cells.append((arch, shape, mp))
+    else:
+        assert args.arch and args.shape, "--arch and --shape (or --all)"
+        for mp in meshes:
+            cells.append((args.arch, args.shape, mp))
+
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    done = set()
+    if args.resume and os.path.exists(args.out):
+        with open(args.out) as f:
+            for line in f:
+                r = json.loads(line)
+                if r.get("status") in ("ok", "skipped"):
+                    done.add((r["arch"], r["shape"], r["mesh"]))
+    with open(args.out, "a") as f:
+        for arch, shape, mp in cells:
+            key = (arch, shape, "2x16x16" if mp else "16x16")
+            if key in done:
+                continue
+            rec = run_cell(arch, shape, mp, optimized=args.optimized)
+            f.write(json.dumps(rec) + "\n")
+            f.flush()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,68 @@
+"""HLO text analysis: collective-byte accounting for the roofline.
+
+``cost_analysis()`` does not report communication, so we parse the compiled
+module text and sum the output-shape bytes of every collective op
+(all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute).
+Ops inside while-loop bodies (lax.scan) appear once in the text — the
+roofline driver compensates with the unroll-delta extrapolation, so this
+parser is only ever pointed at straight-line (unrolled) modules for counting,
+and at scanned modules for the *schedule* (which collectives exist).
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+__all__ = ["collective_bytes", "collective_schedule", "parse_shape_bytes"]
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16, "s4": 1, "u4": 1,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_OP_RE = re.compile(
+    r"=\s*(\(?[a-z0-9\[\],\s{}/#*]+\)?)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(", re.IGNORECASE)
+
+
+def parse_shape_bytes(shape_str: str) -> int:
+    """Total bytes of one 'dtype[d,d,...]' (or tuple of them)."""
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            n = int(np.prod([int(d) for d in dims.split(",") if d]))
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def collective_schedule(hlo_text: str) -> List[Tuple[str, int]]:
+    """[(op_kind, output_bytes)] for every collective in program order.
+    '-start'/'-done' async pairs are counted once (at start)."""
+    out = []
+    for line in hlo_text.splitlines():
+        if "-done(" in line:
+            continue
+        m = _OP_RE.search(line)
+        if m:
+            out.append((m.group(2).lower(), parse_shape_bytes(m.group(1))))
+    return out
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Total output bytes per collective kind (+ 'total')."""
+    totals: Dict[str, int] = {k: 0 for k in _COLLECTIVES}
+    for kind, nbytes in collective_schedule(hlo_text):
+        totals[kind] += nbytes
+    totals["total"] = sum(totals[k] for k in _COLLECTIVES)
+    return totals

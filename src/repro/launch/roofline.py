@@ -1,0 +1,125 @@
+"""Roofline analysis driver (§Roofline of EXPERIMENTS.md).
+
+Per (arch x shape) on the single-pod mesh:
+  compute_s    = FLOPs_per_device / 197e12        (bf16 peak, v5e)
+  memory_s     = HBM_bytes_per_device / 819e9
+  collective_s = ICI_bytes_per_device / 50e9 (+ DCN term if pods > 1)
+
+FLOPs/bytes/collective-bytes come from launch/analytic.py (closed-form einsum
+accounting) because XLA's cost_analysis counts while-loop bodies ONCE — with
+scan-over-layers the numbers are off by ~L at production depth.  The analytic
+model is validated against cost_analysis on L=1 configs (where scan body ==
+whole depth) in tests/test_roofline_validation.py, and the dry-run captures
+the real compiled collective schedule per cell.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.roofline --all --out results/roofline.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+from typing import Dict, Optional
+
+import numpy as np
+
+from repro.configs import ARCHS, SHAPES
+from repro.launch import analytic
+from repro.launch.cells import (cell_skip_reason, default_recipe,
+                                optimized_overrides)
+from repro.launch.mesh import V5E
+
+__all__ = ["roofline_cell", "roofline_table"]
+
+
+def roofline_cell(arch: str, shape_name: str, multi_pod: bool = False,
+                  recipe_overrides: Optional[dict] = None,
+                  optimized: bool = False) -> Dict:
+    cfg = ARCHS[arch]
+    shape = SHAPES[shape_name]
+    if optimized:
+        recipe_overrides = {**optimized_overrides(cfg, shape),
+                            **(recipe_overrides or {})}
+    rec = {"arch": arch, "shape": shape_name,
+           "mesh": "2x16x16" if multi_pod else "16x16"}
+    skip = cell_skip_reason(cfg, shape)
+    if skip:
+        rec.update(status="skipped", reason=skip)
+        return rec
+    mesh_shape = ({"pod": 2, "data": 16, "model": 16} if multi_pod
+                  else {"data": 16, "model": 16})
+    n_dev = int(np.prod(list(mesh_shape.values())))
+    recipe = default_recipe(cfg, shape, multi_pod, **(recipe_overrides or {}))
+    cost = analytic.cell_cost(cfg, shape, recipe, mesh_shape)
+    terms = cost.terms(V5E, n_dev)
+    dominant = max(terms, key=terms.get)
+    step_time = max(terms.values())     # perfect-overlap lower bound
+    hlo_flops_global = cost.flops * n_dev
+    rec.update(
+        status="ok",
+        recipe={"microbatch": recipe.microbatch, "remat": recipe.remat},
+        flops_per_device=cost.flops,
+        hbm_bytes_per_device=cost.hbm_bytes,
+        ici_bytes_per_device=cost.collective_bytes,
+        dcn_bytes_per_device=cost.dcn_bytes,
+        terms_s={k: float(v) for k, v in terms.items()},
+        dominant=dominant,
+        model_flops=cost.model_flops,
+        useful_flops_ratio=float(cost.model_flops / max(hlo_flops_global, 1.0)),
+        # roofline fraction: useful model FLOP/s achieved at the bound
+        # implied by the dominant term, vs chip peak.
+        roofline_fraction=float(
+            cost.model_flops / max(step_time, 1e-12) / (n_dev * V5E.peak_flops)),
+        step_time_lower_bound_s=float(step_time),
+        breakdown={k: float(v) for k, v in cost.breakdown.items()},
+    )
+    return rec
+
+
+def roofline_table(multi_pod: bool = False, optimized: bool = False):
+    rows = []
+    for arch in ARCHS:
+        for shape in SHAPES:
+            rows.append(roofline_cell(arch, shape, multi_pod,
+                                      optimized=optimized))
+    return rows
+
+
+def _fmt_row(r: Dict) -> str:
+    if r["status"] != "ok":
+        return (f"| {r['arch']} | {r['shape']} | — | — | — | — | skipped | — |")
+    t = r["terms_s"]
+    return ("| {arch} | {shape} | {c:.2e} | {m:.2e} | {x:.2e} | {dom} | "
+            "{ratio:.2f} | {rf:.1%} |".format(
+                arch=r["arch"], shape=r["shape"], c=t["compute_s"],
+                m=t["memory_s"], x=t["collective_s"], dom=r["dominant"],
+                ratio=r["useful_flops_ratio"], rf=r["roofline_fraction"]))
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--optimized", action="store_true")
+    ap.add_argument("--out", default="results/roofline.json")
+    args = ap.parse_args()
+    if args.all:
+        rows = roofline_table(args.multi_pod, args.optimized)
+    else:
+        rows = [roofline_cell(args.arch, args.shape, args.multi_pod,
+                              optimized=args.optimized)]
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    with open(args.out, "w") as f:
+        json.dump(rows, f, indent=1)
+    print("| arch | shape | compute_s | memory_s | collective_s | dominant "
+          "| useful/HLO | roofline frac |")
+    print("|---|---|---|---|---|---|---|---|")
+    for r in rows:
+        print(_fmt_row(r))
+
+
+if __name__ == "__main__":
+    main()

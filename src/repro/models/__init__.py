@@ -1,0 +1,5 @@
+"""Model zoo: GQA transformers (dense/MoE/VLM/audio), RWKV6, Mamba2/Zamba2."""
+from repro.models import attention, layers, mamba2, model, moe, params, rwkv, transformer
+
+__all__ = ["attention", "layers", "mamba2", "model", "moe", "params", "rwkv",
+           "transformer"]

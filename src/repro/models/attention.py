@@ -1,0 +1,138 @@
+"""Attention implementations.
+
+* ``blockwise_attention`` — flash-style streaming softmax over KV blocks,
+  expressed in lax.scan so XLA never materializes the (S x S) score matrix.
+  This is the default for training and 32k prefill; it is the same tiling the
+  Pallas TPU kernel (kernels/flash_attention.py) uses, which replaces it on
+  real hardware via ``impl="pallas"``.
+* ``dense_attention``  — einsum attention with explicit causal mask (oracle
+  for tests; acceptable for short sequences).
+* ``decode_attention`` — single-step GQA over a static KV cache with length
+  masking (one einsum pair; flash-decode split-K arrives via the cache's
+  kv_seq sharding, which turns the softmax reductions into cross-device
+  collectives handled by GSPMD).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["dense_attention", "blockwise_attention", "decode_attention"]
+
+_NEG_INF = -1e30
+
+
+def _group_heads(q, num_kv_heads):
+    b, s, h, d = q.shape
+    g = h // num_kv_heads
+    return q.reshape(b, s, num_kv_heads, g, d)
+
+
+def dense_attention(q, k, v, *, causal: bool = True, q_offset: int = 0):
+    """q: (B,Sq,H,D), k/v: (B,Skv,Hk,D).  Test oracle / short sequences."""
+    b, sq, h, d = q.shape
+    hk = k.shape[2]
+    qg = _group_heads(q, hk)                                   # (B,Sq,Hk,G,D)
+    scores = jnp.einsum("bskgd,btkd->bkgst", qg, k,
+                        preferred_element_type=jnp.float32)
+    scores = scores / jnp.sqrt(jnp.float32(d))
+    if causal:
+        qpos = jnp.arange(sq) + q_offset
+        kpos = jnp.arange(k.shape[1])
+        mask = qpos[:, None] >= kpos[None, :]
+        scores = jnp.where(mask[None, None, None], scores, _NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgst,btkd->bskgd", probs, v,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(b, sq, h, d).astype(q.dtype)
+
+
+def blockwise_attention(q, k, v, *, causal: bool = True, q_offset: int = 0,
+                        block_kv: int = 1024):
+    """Streaming-softmax attention, scanning KV blocks with an (m, l, acc)
+    carry — O(Sq * block_kv) live memory instead of O(Sq * Skv)."""
+    b, sq, h, d = q.shape
+    skv = k.shape[1]
+    hk = k.shape[2]
+    g = h // hk
+    block_kv = min(block_kv, skv)
+    n_blocks = -(-skv // block_kv)
+    pad = n_blocks * block_kv - skv
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kb = k.reshape(b, n_blocks, block_kv, hk, d).transpose(1, 0, 2, 3, 4)
+    vb = v.reshape(b, n_blocks, block_kv, hk, d).transpose(1, 0, 2, 3, 4)
+
+    qg = _group_heads(q, hk).astype(jnp.float32)               # (B,Sq,Hk,G,D)
+    scale = 1.0 / jnp.sqrt(jnp.float32(d))
+    qpos = jnp.arange(sq) + q_offset
+
+    def step(carry, blk):
+        m_prev, l_prev, acc = carry
+        kblk, vblk, start = blk
+        scores = jnp.einsum("bskgd,btkd->bkgst", qg, kblk.astype(jnp.float32),
+                            preferred_element_type=jnp.float32) * scale
+        kpos = start + jnp.arange(block_kv)
+        valid = kpos < skv
+        if causal:
+            mask = (qpos[:, None] >= kpos[None, :]) & valid[None, :]
+        else:
+            mask = jnp.broadcast_to(valid[None, :], (sq, block_kv))
+        scores = jnp.where(mask[None, None, None], scores, _NEG_INF)
+        m_blk = jnp.max(scores, axis=-1)                       # (B,Hk,G,Sq)
+        m_new = jnp.maximum(m_prev, m_blk)
+        correction = jnp.exp(m_prev - m_new)
+        p = jnp.exp(scores - m_new[..., None])
+        l_new = l_prev * correction + jnp.sum(p, axis=-1)
+        pv = jnp.einsum("bkgst,btkd->bkgsd", p, vblk.astype(jnp.float32),
+                        preferred_element_type=jnp.float32)
+        acc = acc * correction[..., None] + pv
+        return (m_new, l_new, acc), None
+
+    m0 = jnp.full((b, hk, g, sq), _NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, hk, g, sq), jnp.float32)
+    acc0 = jnp.zeros((b, hk, g, sq, d), jnp.float32)
+    starts = jnp.arange(n_blocks) * block_kv
+    (m, l, acc), _ = jax.lax.scan(step, (m0, l0, acc0), (kb, vb, starts))
+    out = acc / jnp.maximum(l[..., None], 1e-30)               # (B,Hk,G,Sq,D)
+    out = out.transpose(0, 3, 1, 2, 4).reshape(b, sq, h, d)
+    return out.astype(q.dtype)
+
+
+def decode_attention(q, k_cache, v_cache, lengths):
+    """One-token GQA decode against a static cache.
+
+    q: (B,1,H,D); caches: (B,Smax,Hk,D); lengths: (B,) valid prefix lengths.
+    """
+    b, _, h, d = q.shape
+    hk = k_cache.shape[2]
+    qg = _group_heads(q, hk)[:, 0]                             # (B,Hk,G,D)
+    scores = jnp.einsum("bkgd,btkd->bkgt", qg, k_cache,
+                        preferred_element_type=jnp.float32)
+    scores = scores / jnp.sqrt(jnp.float32(d))
+    kpos = jnp.arange(k_cache.shape[1])
+    mask = kpos[None, :] < lengths[:, None]                    # (B,Smax)
+    scores = jnp.where(mask[:, None, None, :], scores, _NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgt,btkd->bkgd", probs, v_cache,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(b, 1, h, d).astype(q.dtype)
+
+
+def attention(q, k, v, *, impl: str = "blockwise", causal: bool = True,
+              q_offset: int = 0, block_kv: int = 1024):
+    if impl == "dense" or q.shape[1] <= 256:
+        return dense_attention(q, k, v, causal=causal, q_offset=q_offset)
+    if impl == "pallas":  # TPU fast path; falls back off-TPU
+        try:
+            from repro.kernels import ops as kernel_ops
+
+            return kernel_ops.flash_attention(q, k, v, causal=causal)
+        except Exception:
+            pass
+    return blockwise_attention(q, k, v, causal=causal, q_offset=q_offset,
+                               block_kv=block_kv)

@@ -1,0 +1,121 @@
+"""Shared neural layers: RMSNorm, MLPs, RoPE / M-RoPE, embeddings.
+
+Pure-functional JAX; weights come in as dict leaves, sharding via the
+ShardingCtx activation constraints.  Matmuls accumulate in f32
+(``preferred_element_type``) regardless of the bf16 compute dtype.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["rms_norm", "swiglu", "gelu_mlp", "rope", "mrope", "take_embedding"]
+
+
+def rms_norm(x, scale, eps: float = 1e-5):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    out = x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)
+    return (out * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def swiglu(x, w_gate, w_up, w_down, ctx=None):
+    g = jnp.einsum("...d,df->...f", x, w_gate, preferred_element_type=jnp.float32)
+    u = jnp.einsum("...d,df->...f", x, w_up, preferred_element_type=jnp.float32)
+    h = (jax.nn.silu(g) * u).astype(x.dtype)
+    if ctx is not None:
+        h = ctx.constrain(h, "batch", None, "heads")
+    return jnp.einsum("...f,fd->...d", h, w_down,
+                      preferred_element_type=jnp.float32).astype(x.dtype)
+
+
+def gelu_mlp(x, w_up, w_down, b_up=None, b_down=None, ctx=None):
+    u = jnp.einsum("...d,df->...f", x, w_up, preferred_element_type=jnp.float32)
+    if b_up is not None:
+        u = u + b_up
+    h = jax.nn.gelu(u).astype(x.dtype)
+    if ctx is not None:
+        h = ctx.constrain(h, "batch", None, "heads")
+    out = jnp.einsum("...f,fd->...d", h, w_down, preferred_element_type=jnp.float32)
+    if b_down is not None:
+        out = out + b_down
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+
+def _rope_freqs(head_dim: int, theta: float):
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def _apply_rot(x, cos, sin):
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+
+
+def rope(x, positions, theta: float = 1e6):
+    """x: (B, S, H, D); positions: (B, S) int32 absolute positions."""
+    d = x.shape[-1]
+    freqs = _rope_freqs(d, theta)                       # (D/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (B, S, D/2)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    return _apply_rot(x.astype(jnp.float32), cos, sin).astype(x.dtype)
+
+
+def mrope(x, positions_3d, sections, theta: float = 1e6):
+    """Qwen2-VL multimodal RoPE.
+
+    x: (B, S, H, D); positions_3d: (3, B, S) — (temporal, height, width) ids.
+    ``sections`` split the D/2 frequency slots among the three id channels.
+    """
+    d = x.shape[-1]
+    freqs = _rope_freqs(d, theta)                       # (D/2,)
+    assert sum(sections) == d // 2, (sections, d)
+    # per-frequency channel selector: first sections[0] freqs use temporal ids...
+    channel = jnp.repeat(
+        jnp.arange(3), jnp.asarray(sections), total_repeat_length=d // 2
+    )                                                   # (D/2,)
+    pos = positions_3d.astype(jnp.float32)[channel]     # (D/2, B, S)
+    ang = jnp.moveaxis(pos, 0, -1) * freqs              # (B, S, D/2)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    return _apply_rot(x.astype(jnp.float32), cos, sin).astype(x.dtype)
+
+
+def take_embedding(table, tokens, ctx=None):
+    """Token embedding lookup; table (V, D) possibly vocab-sharded.
+
+    Under a mesh, a gather over the sharded vocab dim makes GSPMD replicate
+    the whole table ("involuntary full rematerialization"); the one-hot
+    matmul keeps the contraction sharded over V (a partial-sum all-reduce of
+    the small (B,S,D) output instead of an all-gather of the huge table).
+    """
+    if ctx is None or ctx.mesh is None:
+        return jnp.take(table, tokens, axis=0)
+    onehot = jax.nn.one_hot(tokens, table.shape[0], dtype=table.dtype)
+    onehot = ctx.constrain(onehot, "batch", *([None] * (tokens.ndim - 1)), "heads")
+    out = jnp.einsum("...v,vd->...d", onehot, table,
+                     preferred_element_type=jnp.float32).astype(table.dtype)
+    return ctx.constrain(out, "batch", *([None] * (out.ndim - 2)), None)
+
+
+def softmax_xent(logits, targets, ctx=None):
+    """Mean next-token CE over possibly vocab-sharded logits.
+
+    Under a mesh, gathering the target logit (take_along_axis) over the
+    sharded vocab dim would force resharding; the one-hot contraction stays
+    elementwise-sharded instead.
+    """
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    if ctx is None or ctx.mesh is None:
+        ll = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    else:
+        onehot = jax.nn.one_hot(targets, logits.shape[-1], dtype=jnp.bfloat16)
+        dims = ("batch",) + (None,) * (targets.ndim - 1) + ("heads",)
+        onehot = ctx.constrain(onehot, *dims)
+        ll = jnp.einsum("...v,...v->...", logits, onehot,
+                        preferred_element_type=jnp.float32)
+    return jnp.mean(lse - ll)

@@ -1,0 +1,259 @@
+"""Mamba2 (SSD) blocks + the Zamba2 hybrid (Mamba2 backbone with a SHARED
+attention+MLP block applied every ``shared_attn_every`` layers).
+
+The selective state space runs in chunked form: scalar-per-head decays in log
+space, intra-chunk pairs as dense (C x C) einsums, inter-chunk state carried
+by a lax.scan — same structure as the RWKV6 chunked WKV, with state
+(B, H, head_dim, N).
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn_mod
+from repro.models import layers
+
+__all__ = ["mamba2_block", "mamba2_block_decode", "hybrid_loss",
+           "hybrid_logits", "hybrid_decode", "init_hybrid_state"]
+
+
+def _causal_conv(x, conv_w, conv_b, prev=None):
+    """Depthwise causal conv1d: x (B,T,C), conv_w (W,C).
+
+    ``prev`` (B,W-1,C) carries state across steps for decode.
+    Returns (out (B,T,C), new_prev)."""
+    w = conv_w.shape[0]
+    if prev is None:
+        prev = jnp.zeros((x.shape[0], w - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([prev, x], axis=1)                 # (B, T+W-1, C)
+    out = sum(xp[:, i:i + x.shape[1]] * conv_w[i] for i in range(w))
+    new_prev = xp[:, -(w - 1):] if w > 1 else prev
+    return out + conv_b, new_prev
+
+
+def _ssd_chunked(xh, b_in, c_in, dt, loga, state, chunk: int):
+    """Chunked selective scan.
+
+    xh: (B,T,H,P) inputs per head; b_in/c_in: (B,T,N); dt: (B,T,H);
+    loga: (B,T,H) log decays (<= 0); state: (B,H,P,N).
+    Returns (y (B,T,H,P), state_out)."""
+    bsz, t, h, p = xh.shape
+    n = b_in.shape[-1]
+    nc = t // chunk
+    f32 = jnp.float32
+    xs = jnp.moveaxis(xh.reshape(bsz, nc, chunk, h, p), 1, 0).astype(f32)
+    bs = jnp.moveaxis(b_in.reshape(bsz, nc, chunk, n), 1, 0).astype(f32)
+    cs = jnp.moveaxis(c_in.reshape(bsz, nc, chunk, n), 1, 0).astype(f32)
+    dts = jnp.moveaxis(dt.reshape(bsz, nc, chunk, h), 1, 0).astype(f32)
+    las = jnp.moveaxis(loga.reshape(bsz, nc, chunk, h), 1, 0).astype(f32)
+
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool))          # s <= t
+
+    def step(carry, xs_):
+        st = carry                                          # (B,H,P,N)
+        xc, bc, cc, dtc, lac = xs_
+        cum = jnp.cumsum(lac, axis=1)                       # (B,c,H) inclusive
+        # inter-chunk: y_state[t] = exp(cum_t) * C_t . state
+        y = jnp.einsum("bsn,bhpn->bshp", cc, st) * jnp.exp(cum)[..., None]
+        # intra-chunk: pairs s <= t
+        decay = jnp.exp(cum[:, :, None, :] - cum[:, None, :, :])  # (B,t,s,H)
+        decay = jnp.where(tri[None, :, :, None], decay, 0.0)
+        cb = jnp.einsum("btn,bsn->bts", cc, bc)             # (B,t,s)
+        att = cb[..., None] * decay * dtc[:, None]          # (B,t,s,H)
+        y = y + jnp.einsum("btsh,bshp->bthp", att, xc)
+        # state update
+        w_end = jnp.exp(cum[:, -1][:, None] - cum)          # (B,c,H)
+        st = st * jnp.exp(cum[:, -1])[..., None, None]
+        st = st + jnp.einsum("bsh,bshp,bsn->bhpn", w_end * dtc, xc, bc)
+        return st, y
+
+    state, y = jax.lax.scan(step, state.astype(f32), (xs, bs, cs, dts, las))
+    y = jnp.moveaxis(y, 0, 1).reshape(bsz, t, h, p)
+    return y.astype(xh.dtype), state
+
+
+def mamba2_block(h, blk, cfg: ModelConfig, ctx, conv_prev=None, ssm_prev=None):
+    """Full-sequence Mamba2 block. Returns (h, (conv_state, ssm_state))."""
+    bsz, t, d = h.shape
+    din = cfg.expand * d
+    nheads = din // cfg.ssm_head_dim
+    p = cfg.ssm_head_dim
+    n = cfg.ssm_state_dim
+
+    x = layers.rms_norm(h, blk["ln"], cfg.norm_eps)
+    z = jnp.einsum("btd,de->bte", x, blk["wz"], preferred_element_type=jnp.float32)
+    xin = jnp.einsum("btd,de->bte", x, blk["wx"],
+                     preferred_element_type=jnp.float32).astype(h.dtype)
+    xin, conv_state = _causal_conv(xin, blk["conv_w"], blk["conv_b"], conv_prev)
+    xin = jax.nn.silu(xin)
+    xin = ctx.constrain(xin, "batch", None, "heads")
+    b_in = jnp.einsum("btd,dn->btn", x, blk["wB"], preferred_element_type=jnp.float32)
+    c_in = jnp.einsum("btd,dn->btn", x, blk["wC"], preferred_element_type=jnp.float32)
+    dt = jax.nn.softplus(
+        jnp.einsum("btd,dh->bth", x, blk["wdt"],
+                   preferred_element_type=jnp.float32) + blk["dt_bias"])
+    loga = -jnp.exp(blk["a_log"]) * dt                      # (B,T,H), <= 0
+
+    if ssm_prev is None:
+        ssm_prev = jnp.zeros((bsz, nheads, p, n), jnp.float32)
+    xh = xin.reshape(bsz, t, nheads, p)
+    y, ssm_state = _ssd_chunked(xh, b_in, c_in, dt, loga, ssm_prev,
+                                min(cfg.chunk_size, t))
+    y = y + blk["d_skip"][None, None, :, None] * xh
+    y = y.reshape(bsz, t, din)
+    y = layers.rms_norm(y * jax.nn.silu(z).astype(y.dtype), blk["gn"], cfg.norm_eps)
+    h = h + jnp.einsum("bte,ed->btd", y, blk["wo"],
+                       preferred_element_type=jnp.float32).astype(h.dtype)
+    return h, (conv_state, ssm_state)
+
+
+def mamba2_block_decode(h, blk, cfg, ctx, conv_prev, ssm_prev):
+    """Single-token Mamba2 step (O(1) state update)."""
+    bsz, _, d = h.shape
+    din = cfg.expand * d
+    nheads = din // cfg.ssm_head_dim
+    p = cfg.ssm_head_dim
+
+    x = layers.rms_norm(h, blk["ln"], cfg.norm_eps)
+    z = jnp.einsum("btd,de->bte", x, blk["wz"], preferred_element_type=jnp.float32)
+    xin = jnp.einsum("btd,de->bte", x, blk["wx"],
+                     preferred_element_type=jnp.float32).astype(h.dtype)
+    xin, conv_state = _causal_conv(xin, blk["conv_w"], blk["conv_b"], conv_prev)
+    xin = jax.nn.silu(xin)
+    b_in = jnp.einsum("btd,dn->btn", x, blk["wB"], preferred_element_type=jnp.float32)
+    c_in = jnp.einsum("btd,dn->btn", x, blk["wC"], preferred_element_type=jnp.float32)
+    dt = jax.nn.softplus(
+        jnp.einsum("btd,dh->bth", x, blk["wdt"],
+                   preferred_element_type=jnp.float32) + blk["dt_bias"])
+    a = jnp.exp(-jnp.exp(blk["a_log"]) * dt)[:, 0]          # (B,H)
+
+    xh = xin.reshape(bsz, nheads, p).astype(jnp.float32)
+    ssm_state = ssm_prev * a[..., None, None] + jnp.einsum(
+        "bh,bhp,bn->bhpn", dt[:, 0], xh, b_in[:, 0].astype(jnp.float32))
+    y = jnp.einsum("bn,bhpn->bhp", c_in[:, 0].astype(jnp.float32), ssm_state)
+    y = y + blk["d_skip"][None, :, None] * xh
+    y = y.reshape(bsz, 1, din).astype(h.dtype)
+    y = layers.rms_norm(y * jax.nn.silu(z).astype(y.dtype), blk["gn"], cfg.norm_eps)
+    h = h + jnp.einsum("bte,ed->btd", y, blk["wo"],
+                       preferred_element_type=jnp.float32).astype(h.dtype)
+    return h, (conv_state, ssm_state)
+
+
+# ---------------------------------------------------------------------------
+# Zamba2 hybrid model
+# ---------------------------------------------------------------------------
+
+def _shared_attn_block(h, shared, cfg, ctx, positions, impl):
+    from repro.models.transformer import make_block_fn
+
+    block = make_block_fn(cfg, ctx, positions, impl=impl)
+    (h, _), _ = block((h, jnp.zeros((), jnp.float32)), shared)
+    return h
+
+
+def hybrid_logits(params, cfg: ModelConfig, batch, ctx, remat: str = "none"):
+    tokens = batch["tokens"]
+    b, t = tokens.shape
+    h = layers.take_embedding(params["embed"], tokens, ctx)
+    h = h.astype(jnp.bfloat16 if cfg.dtype == "bfloat16" else h.dtype)
+    h = ctx.constrain(h, "batch", "seq", "act_embed")
+    positions = jnp.broadcast_to(jnp.arange(t, dtype=jnp.int32)[None], (b, t))
+    shared = params["shared"]
+    impl = ctx.recipe.attn_impl
+
+    def group(hh, gblk):
+        def inner(hc, blk):
+            hc, _ = mamba2_block(hc, blk, cfg, ctx)
+            return hc, None
+
+        hh, _ = jax.lax.scan(inner, hh, gblk)
+        hh = _shared_attn_block(hh, shared, cfg, ctx, positions, impl)
+        return hh, None
+
+    grp = jax.checkpoint(group) if remat != "none" else group
+    h, _ = jax.lax.scan(grp, h, params["mamba"])
+    h = layers.rms_norm(h, params["final_ln"], cfg.norm_eps)
+    logits = jnp.einsum("btd,dv->btv", h, params["lm_head"],
+                        preferred_element_type=jnp.float32)
+    return ctx.constrain(logits, "batch", "seq", "heads")
+
+
+def hybrid_loss(params, cfg, batch, ctx):
+    tokens = batch["tokens"]
+    logits = hybrid_logits(params, cfg, dict(batch, tokens=tokens[:, :-1]), ctx,
+                           remat=ctx.recipe.remat).astype(jnp.float32)
+    targets = tokens[:, 1:]
+    return layers.softmax_xent(logits, targets, ctx)
+
+
+def init_hybrid_state(cfg: ModelConfig, batch_size: int, max_seq: int,
+                      dtype=jnp.bfloat16):
+    g = cfg.num_layers // cfg.shared_attn_every
+    k = cfg.shared_attn_every
+    din = cfg.expand * cfg.d_model
+    nheads = din // cfg.ssm_head_dim
+    return {
+        "conv": jax.ShapeDtypeStruct(
+            (g, k, batch_size, cfg.conv_width - 1, din), dtype),
+        "ssm": jax.ShapeDtypeStruct(
+            (g, k, batch_size, nheads, cfg.ssm_head_dim, cfg.ssm_state_dim),
+            jnp.float32),
+        # shared attention block's KV cache, one per group invocation
+        "k": jax.ShapeDtypeStruct(
+            (g, batch_size, max_seq, cfg.num_kv_heads, cfg.head_dim), dtype),
+        "v": jax.ShapeDtypeStruct(
+            (g, batch_size, max_seq, cfg.num_kv_heads, cfg.head_dim), dtype),
+    }
+
+
+def hybrid_decode(params, cfg: ModelConfig, batch, state, ctx):
+    """One decode step: Mamba states are O(1); the shared attention block
+    keeps one KV cache per group invocation."""
+    lengths = batch["lengths"]
+    tokens = batch["tokens"]                                 # (B,1)
+    b = tokens.shape[0]
+    h = layers.take_embedding(params["embed"], tokens, ctx)
+    h = h.astype(jnp.bfloat16 if cfg.dtype == "bfloat16" else h.dtype)
+    pos = lengths[:, None].astype(jnp.int32)
+    shared = params["shared"]
+    bidx = jnp.arange(b)
+
+    def group(hh, xs):
+        gblk, conv_g, ssm_g, k_g, v_g = xs
+
+        def inner(carry, xs_inner):
+            hc = carry
+            blk, cp, sp = xs_inner
+            hc, (cp2, sp2) = mamba2_block_decode(hc, blk, cfg, ctx, cp, sp)
+            return hc, (cp2, sp2)
+
+        hh, (conv2, ssm2) = jax.lax.scan(inner, hh, (gblk, conv_g, ssm_g))
+        # shared attention with cache
+        x = layers.rms_norm(hh, shared["ln1"], cfg.norm_eps)
+        from repro.models.transformer import _mlp, _project_qkv
+
+        q, k, v = _project_qkv(x, shared, cfg, ctx)
+        q = layers.rope(q, pos, cfg.rope_theta)
+        k = layers.rope(k, pos, cfg.rope_theta)
+        k_g = k_g.at[bidx, lengths].set(k[:, 0])
+        v_g = v_g.at[bidx, lengths].set(v[:, 0])
+        out = attn_mod.decode_attention(q, k_g, v_g, lengths + 1)
+        out = jnp.einsum("bsq,qd->bsd", out.reshape(b, 1, -1), shared["wo"],
+                         preferred_element_type=jnp.float32)
+        hh = hh + out.astype(hh.dtype)
+        x2 = layers.rms_norm(hh, shared["ln2"], cfg.norm_eps)
+        y, _ = _mlp(x2, shared, cfg, ctx)
+        hh = hh + y.astype(hh.dtype)
+        return hh, (conv2, ssm2, k_g, v_g)
+
+    h, (conv, ssm, kc, vc) = jax.lax.scan(
+        group, h, (params["mamba"], state["conv"], state["ssm"],
+                   state["k"], state["v"]))
+    h = layers.rms_norm(h, params["final_ln"], cfg.norm_eps)
+    logits = jnp.einsum("btd,dv->btv", h, params["lm_head"],
+                        preferred_element_type=jnp.float32)
+    return logits[:, -1], {"conv": conv, "ssm": ssm, "k": kc, "v": vc}

@@ -1,0 +1,173 @@
+"""Unified model API: family dispatch for loss / prefill / decode, plus input
+and cache ShapeDtypeStruct builders used by the dry-run and launchers."""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeSpec
+from repro.distributed.sharding import ShardingCtx
+from repro.models import mamba2, params as params_mod, rwkv, transformer
+
+__all__ = ["loss_fn", "prefill_fn", "decode_fn", "input_specs", "cache_specs",
+           "input_dims", "cache_dims"]
+
+
+# ---------------------------------------------------------------------------
+# Forward dispatch
+# ---------------------------------------------------------------------------
+
+def loss_fn(params, cfg: ModelConfig, batch, ctx: ShardingCtx):
+    if cfg.family == "rwkv":
+        return rwkv.rwkv_loss(params, cfg, batch, ctx)
+    if cfg.family == "hybrid":
+        return mamba2.hybrid_loss(params, cfg, batch, ctx)
+    return transformer.transformer_loss(params, cfg, batch, ctx)
+
+
+def prefill_fn(params, cfg: ModelConfig, batch, ctx: ShardingCtx):
+    if cfg.family == "rwkv":
+        return rwkv_prefill(params, cfg, batch, ctx)
+    if cfg.family == "hybrid":
+        return hybrid_prefill(params, cfg, batch, ctx)
+    return transformer.transformer_prefill(params, cfg, batch, ctx)
+
+
+def decode_fn(params, cfg: ModelConfig, batch, cache, ctx: ShardingCtx):
+    if cfg.family == "rwkv":
+        return rwkv.rwkv_decode(params, cfg, batch, cache, ctx)
+    if cfg.family == "hybrid":
+        return mamba2.hybrid_decode(params, cfg, batch, cache, ctx)
+    return transformer.transformer_decode(params, cfg, batch, cache, ctx)
+
+
+# ---------------------------------------------------------------------------
+# Prefill variants for the recurrent families (last logits + running state)
+# ---------------------------------------------------------------------------
+
+def rwkv_prefill(params, cfg, batch, ctx):
+    h = rwkv._embed(params, cfg, batch["tokens"], ctx)
+
+    def body(hh, blk):
+        hh, (tm, cm, att) = rwkv.rwkv_block(hh, blk, cfg, ctx)
+        return hh, (tm, cm, att)
+
+    h, (tm, cm, att) = jax.lax.scan(body, h, params["blocks"])
+    from repro.models import layers
+
+    h = layers.rms_norm(h, params["final_ln"], cfg.norm_eps)
+    logits = jnp.einsum("bd,dv->bv", h[:, -1], params["lm_head"],
+                        preferred_element_type=jnp.float32)
+    return logits, {"att": att, "tm": tm, "cm": cm}
+
+
+def hybrid_prefill(params, cfg, batch, ctx):
+    from repro.models import attention as attn_mod
+    from repro.models import layers
+    from repro.models.transformer import _mlp, _project_qkv, _apply_rope
+
+    tokens = batch["tokens"]
+    b, t = tokens.shape
+    h = layers.take_embedding(params["embed"], tokens)
+    h = h.astype(jnp.bfloat16 if cfg.dtype == "bfloat16" else h.dtype)
+    positions = jnp.broadcast_to(jnp.arange(t, dtype=jnp.int32)[None], (b, t))
+    shared = params["shared"]
+
+    def group(hh, gblk):
+        def inner(hc, blk):
+            hc, (conv, ssm) = mamba2.mamba2_block(hc, blk, cfg, ctx)
+            return hc, (conv, ssm)
+
+        hh, (conv, ssm) = jax.lax.scan(inner, hh, gblk)
+        x = layers.rms_norm(hh, shared["ln1"], cfg.norm_eps)
+        q, k, v = _project_qkv(x, shared, cfg, ctx)
+        q, k = _apply_rope(q, k, cfg, positions, None)
+        out = attn_mod.attention(q, k, v, impl=ctx.recipe.attn_impl,
+                                 block_kv=ctx.recipe.block_kv)
+        out = jnp.einsum("bsq,qd->bsd", out.reshape(b, t, -1), shared["wo"],
+                         preferred_element_type=jnp.float32)
+        hh = hh + out.astype(hh.dtype)
+        x2 = layers.rms_norm(hh, shared["ln2"], cfg.norm_eps)
+        y, _ = _mlp(x2, shared, cfg, ctx)
+        hh = hh + y.astype(hh.dtype)
+        return hh, (conv, ssm, k, v)
+
+    h, (conv, ssm, kc, vc) = jax.lax.scan(group, h, params["mamba"])
+    h = layers.rms_norm(h, params["final_ln"], cfg.norm_eps)
+    logits = jnp.einsum("bd,dv->bv", h[:, -1], params["lm_head"],
+                        preferred_element_type=jnp.float32)
+    return logits, {"conv": conv, "ssm": ssm, "k": kc, "v": vc}
+
+
+# ---------------------------------------------------------------------------
+# Input / cache specs (ShapeDtypeStructs + logical dims) per (cfg, shape)
+# ---------------------------------------------------------------------------
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec) -> Dict[str, jax.ShapeDtypeStruct]:
+    b, s = shape.global_batch, shape.seq_len
+    tok_dtype = jnp.int32
+    if shape.kind == "train":
+        toks = (b, s + 1, cfg.num_codebooks) if cfg.family == "audio" else (b, s + 1)
+        batch = {"tokens": jax.ShapeDtypeStruct(toks, tok_dtype)}
+        if cfg.family == "vlm":
+            batch["vision_embeds"] = jax.ShapeDtypeStruct(
+                (b, cfg.num_vision_tokens, cfg.vision_patch_dim), jnp.float32)
+            batch["positions_3d"] = jax.ShapeDtypeStruct((3, b, s), jnp.int32)
+        return batch
+    if shape.kind == "prefill":
+        toks = (b, s, cfg.num_codebooks) if cfg.family == "audio" else (b, s)
+        batch = {"tokens": jax.ShapeDtypeStruct(toks, tok_dtype)}
+        if cfg.family == "vlm":
+            batch["vision_embeds"] = jax.ShapeDtypeStruct(
+                (b, cfg.num_vision_tokens, cfg.vision_patch_dim), jnp.float32)
+            batch["positions_3d"] = jax.ShapeDtypeStruct((3, b, s), jnp.int32)
+        return batch
+    # decode: one new token against a seq_len-deep context
+    toks = (b, 1, cfg.num_codebooks) if cfg.family == "audio" else (b, 1)
+    return {"tokens": jax.ShapeDtypeStruct(toks, tok_dtype),
+            "lengths": jax.ShapeDtypeStruct((b,), jnp.int32)}
+
+
+def input_dims(cfg: ModelConfig, shape: ShapeSpec) -> Dict[str, Tuple]:
+    """Logical sharding roles matching input_specs."""
+    dims: Dict[str, Tuple] = {}
+    if cfg.family == "audio":
+        dims["tokens"] = ("batch", None, None)
+    else:
+        dims["tokens"] = ("batch", None)
+    if shape.kind != "decode" and cfg.family == "vlm":
+        dims["vision_embeds"] = ("batch", None, None)
+        dims["positions_3d"] = (None, "batch", None)
+    if shape.kind == "decode":
+        dims["lengths"] = ("batch",)
+    return dims
+
+
+def cache_specs(cfg: ModelConfig, shape: ShapeSpec,
+                kv_dtype=jnp.bfloat16) -> Optional[Dict[str, Any]]:
+    if shape.kind != "decode":
+        return None
+    b, s = shape.global_batch, shape.seq_len
+    if cfg.family == "rwkv":
+        return rwkv.init_rwkv_state(cfg, b)
+    if cfg.family == "hybrid":
+        return mamba2.init_hybrid_state(cfg, b, s)
+    return transformer.init_kv_cache(cfg, b, s, kv_dtype)
+
+
+def cache_dims(cfg: ModelConfig) -> Dict[str, Tuple]:
+    if cfg.family == "rwkv":
+        return {"att": (None, "kv_batch", "heads", None, None),
+                "tm": (None, "kv_batch", None),
+                "cm": (None, "kv_batch", None)}
+    if cfg.family == "hybrid":
+        return {"conv": (None, None, "kv_batch", None, "heads"),
+                "ssm": (None, None, "kv_batch", "heads", None, None),
+                "k": (None, "kv_batch", "kv_seq", None, None),
+                "v": (None, "kv_batch", "kv_seq", None, None)}
+    return {"k": (None, "kv_batch", "kv_seq", None, None),
+            "v": (None, "kv_batch", "kv_seq", None, None),
+            "k_scale": (None, "kv_batch", "kv_seq", None),
+            "v_scale": (None, "kv_batch", "kv_seq", None)}

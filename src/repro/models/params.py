@@ -1,0 +1,189 @@
+"""Parameter templates: shapes + logical sharding roles per architecture family.
+
+Every family builds a nested dict of ParamDef; from it we derive
+ * ShapeDtypeStructs (dry-run inputs, no allocation),
+ * PartitionSpecs / NamedShardings (via ShardingCtx),
+ * initialized arrays (smoke tests, real training).
+
+Layer-stacked leaves carry a leading L (or [G, K] for the Zamba2 hybrid) dim
+so forward passes can lax.scan over depth.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import ParamDef
+
+__all__ = ["param_defs", "init_params", "param_shapes", "padded_experts"]
+
+
+def padded_experts(num_experts: int) -> int:
+    """Pad routed-expert count to a multiple of 16 for even EP sharding
+    (mesh-independent so checkpoints stay portable)."""
+    if num_experts >= 16 and num_experts % 16 != 0:
+        return ((num_experts + 15) // 16) * 16
+    return num_experts
+
+
+def _attn_defs(cfg: ModelConfig, lead=()) -> Dict[str, ParamDef]:
+    d = cfg.d_model
+    qd = cfg.num_heads * cfg.head_dim
+    kd = cfg.num_kv_heads * cfg.head_dim
+    lead_dims = (None,) * len(lead)
+    defs = {
+        "ln1": ParamDef(lead + (d,), lead_dims + (None,), init="ones"),
+        "wq": ParamDef(lead + (d, qd), lead_dims + ("fsdp", "tp")),
+        "wk": ParamDef(lead + (d, kd), lead_dims + ("fsdp", "tp")),
+        "wv": ParamDef(lead + (d, kd), lead_dims + ("fsdp", "tp")),
+        "wo": ParamDef(lead + (qd, d), lead_dims + ("tp", "fsdp")),
+    }
+    if cfg.attention_bias:
+        defs.update({
+            "bq": ParamDef(lead + (qd,), lead_dims + ("tp",), init="zeros"),
+            "bk": ParamDef(lead + (kd,), lead_dims + ("tp",), init="zeros"),
+            "bv": ParamDef(lead + (kd,), lead_dims + ("tp",), init="zeros"),
+            "bo": ParamDef(lead + (d,), lead_dims + (None,), init="zeros"),
+        })
+    return defs
+
+
+def _mlp_defs(cfg: ModelConfig, lead=()) -> Dict[str, ParamDef]:
+    d, f = cfg.d_model, cfg.d_ff
+    lead_dims = (None,) * len(lead)
+    defs: Dict[str, ParamDef] = {
+        "ln2": ParamDef(lead + (d,), lead_dims + (None,), init="ones"),
+    }
+    if cfg.is_moe:
+        e = cfg.num_experts
+        ep = padded_experts(e)
+        fe = cfg.moe_d_ff or f
+        defs["router"] = ParamDef(lead + (d, e), lead_dims + ("fsdp", None))
+        defs["moe_gate"] = ParamDef(lead + (ep, d, fe), lead_dims + ("ep", "fsdp", None))
+        defs["moe_up"] = ParamDef(lead + (ep, d, fe), lead_dims + ("ep", "fsdp", None))
+        defs["moe_down"] = ParamDef(lead + (ep, fe, d), lead_dims + ("ep", None, "fsdp"))
+        if cfg.num_shared_experts:
+            fs = cfg.num_shared_experts * fe
+            defs["sh_gate"] = ParamDef(lead + (d, fs), lead_dims + ("fsdp", "tp"))
+            defs["sh_up"] = ParamDef(lead + (d, fs), lead_dims + ("fsdp", "tp"))
+            defs["sh_down"] = ParamDef(lead + (fs, d), lead_dims + ("tp", "fsdp"))
+    elif cfg.mlp_type == "swiglu":
+        defs["w_gate"] = ParamDef(lead + (d, f), lead_dims + ("fsdp", "tp"))
+        defs["w_up"] = ParamDef(lead + (d, f), lead_dims + ("fsdp", "tp"))
+        defs["w_down"] = ParamDef(lead + (f, d), lead_dims + ("tp", "fsdp"))
+    else:  # gelu
+        defs["w_up"] = ParamDef(lead + (d, f), lead_dims + ("fsdp", "tp"))
+        defs["w_down"] = ParamDef(lead + (f, d), lead_dims + ("tp", "fsdp"))
+        if cfg.attention_bias:
+            defs["b_up"] = ParamDef(lead + (f,), lead_dims + ("tp",), init="zeros")
+            defs["b_down"] = ParamDef(lead + (d,), lead_dims + (None,), init="zeros")
+    return defs
+
+
+def _rwkv_block_defs(cfg: ModelConfig, lead=()) -> Dict[str, ParamDef]:
+    d, f = cfg.d_model, cfg.d_ff
+    h, hd = cfg.num_heads, cfg.ssm_head_dim
+    lead_dims = (None,) * len(lead)
+    lora = 32
+    return {
+        "ln1": ParamDef(lead + (d,), lead_dims + (None,), init="ones"),
+        "ln2": ParamDef(lead + (d,), lead_dims + (None,), init="ones"),
+        "tm_mix": ParamDef(lead + (5, d), lead_dims + (None, None), init="zeros"),
+        "tm_lora_a": ParamDef(lead + (d, 5 * lora), lead_dims + ("fsdp", None)),
+        "tm_lora_b": ParamDef(lead + (5, lora, d), lead_dims + (None, None, "fsdp"),
+                              init="zeros"),
+        "w0": ParamDef(lead + (d,), lead_dims + (None,), init="zeros"),
+        "decay_lora_a": ParamDef(lead + (d, 64), lead_dims + ("fsdp", None)),
+        "decay_lora_b": ParamDef(lead + (64, d), lead_dims + (None, "fsdp"),
+                                 init="zeros"),
+        "bonus_u": ParamDef(lead + (h, hd), lead_dims + (None, None), init="zeros"),
+        "wr": ParamDef(lead + (d, d), lead_dims + ("fsdp", "tp")),
+        "wk": ParamDef(lead + (d, d), lead_dims + ("fsdp", "tp")),
+        "wv": ParamDef(lead + (d, d), lead_dims + ("fsdp", "tp")),
+        "wg": ParamDef(lead + (d, d), lead_dims + ("fsdp", "tp")),
+        "w_att_out": ParamDef(lead + (d, d), lead_dims + ("tp", "fsdp")),
+        "ln_x": ParamDef(lead + (d,), lead_dims + (None,), init="ones"),
+        "cm_mix": ParamDef(lead + (2, d), lead_dims + (None, None), init="zeros"),
+        "cm_k": ParamDef(lead + (d, f), lead_dims + ("fsdp", "tp")),
+        "cm_v": ParamDef(lead + (f, d), lead_dims + ("tp", "fsdp")),
+        "cm_r": ParamDef(lead + (d, d), lead_dims + ("fsdp", "tp")),
+    }
+
+
+def _mamba2_block_defs(cfg: ModelConfig, lead=()) -> Dict[str, ParamDef]:
+    d = cfg.d_model
+    din = cfg.expand * d
+    n = cfg.ssm_state_dim
+    h = din // cfg.ssm_head_dim
+    w = cfg.conv_width
+    lead_dims = (None,) * len(lead)
+    return {
+        "ln": ParamDef(lead + (d,), lead_dims + (None,), init="ones"),
+        "wz": ParamDef(lead + (d, din), lead_dims + ("fsdp", "tp")),
+        "wx": ParamDef(lead + (d, din), lead_dims + ("fsdp", "tp")),
+        "wB": ParamDef(lead + (d, n), lead_dims + ("fsdp", None)),
+        "wC": ParamDef(lead + (d, n), lead_dims + ("fsdp", None)),
+        "wdt": ParamDef(lead + (d, h), lead_dims + ("fsdp", None)),
+        "conv_w": ParamDef(lead + (w, din), lead_dims + (None, "tp")),
+        "conv_b": ParamDef(lead + (din,), lead_dims + ("tp",), init="zeros"),
+        "a_log": ParamDef(lead + (h,), lead_dims + (None,), init="zeros"),
+        "d_skip": ParamDef(lead + (h,), lead_dims + (None,), init="ones"),
+        "dt_bias": ParamDef(lead + (h,), lead_dims + (None,), init="zeros"),
+        "gn": ParamDef(lead + (din,), lead_dims + ("tp",), init="ones"),
+        "wo": ParamDef(lead + (din, d), lead_dims + ("tp", "fsdp")),
+    }
+
+
+def param_defs(cfg: ModelConfig) -> Dict[str, Any]:
+    d, v = cfg.d_model, cfg.vocab_size
+    l = cfg.num_layers
+    defs: Dict[str, Any] = {"final_ln": ParamDef((d,), (None,), init="ones")}
+
+    if cfg.family == "audio":
+        c = cfg.num_codebooks
+        defs["codebook_embed"] = ParamDef((c, v, d), (None, "tp", "fsdp"), scale=0.02)
+        defs["lm_head"] = ParamDef((c, d, v), (None, "fsdp", "tp"))
+    else:
+        defs["embed"] = ParamDef((v, d), ("tp", "fsdp"), scale=0.02)
+        defs["lm_head"] = ParamDef((d, v), ("fsdp", "tp"))
+    if cfg.family == "vlm":
+        defs["vision_proj"] = ParamDef((cfg.vision_patch_dim, d), (None, "fsdp"))
+
+    if cfg.family == "rwkv":
+        defs["blocks"] = _rwkv_block_defs(cfg, lead=(l,))
+    elif cfg.family == "hybrid":
+        g = l // cfg.shared_attn_every
+        k = cfg.shared_attn_every
+        defs["mamba"] = _mamba2_block_defs(cfg, lead=(g, k))
+        defs["shared"] = {**_attn_defs(cfg), **_mlp_defs(cfg)}
+    else:  # dense / moe / vlm / audio transformer
+        defs["blocks"] = {**_attn_defs(cfg, lead=(l,)), **_mlp_defs(cfg, lead=(l,))}
+    return defs
+
+
+def param_shapes(cfg: ModelConfig, dtype=jnp.float32):
+    return jax.tree.map(
+        lambda pd: jax.ShapeDtypeStruct(pd.shape, dtype),
+        param_defs(cfg),
+        is_leaf=lambda x: isinstance(x, ParamDef),
+    )
+
+
+def init_params(cfg: ModelConfig, key, dtype=jnp.float32):
+    defs = param_defs(cfg)
+    leaves, treedef = jax.tree.flatten(defs, is_leaf=lambda x: isinstance(x, ParamDef))
+    keys = jax.random.split(key, len(leaves))
+
+    def one(pd: ParamDef, k):
+        if pd.init == "zeros":
+            return jnp.zeros(pd.shape, dtype)
+        if pd.init == "ones":
+            return jnp.ones(pd.shape, dtype)
+        scale = pd.scale if pd.scale > 0 else 1.0 / np.sqrt(max(pd.fan_in(), 1))
+        return (jax.random.normal(k, pd.shape, jnp.float32) * scale).astype(dtype)
+
+    return jax.tree.unflatten(treedef, [one(pd, k) for pd, k in zip(leaves, keys)])

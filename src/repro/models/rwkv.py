@@ -1,0 +1,230 @@
+"""RWKV6 (Finch): token shift, data-dependent decay via LoRA, matrix-valued
+state — implemented in *chunked parallel* form so prefill/training cost shows
+up as dense einsums (TPU-native), with a lax.scan only across chunks.
+
+Recurrence (per head, head_dim hd):
+    S_t = diag(w_t) S_{t-1} + k_t^T v_t          (S: hd x hd)
+    o_t = r_t (S_{t-1} + diag(u) k_t^T v_t)
+
+Chunked evaluation keeps all decay ratios in log space; every exponent is
+<= 0 because decays lie in (0, 1), so the chunk math is overflow-free.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers
+
+__all__ = ["rwkv_block", "rwkv_block_decode", "rwkv_logits", "rwkv_loss",
+           "rwkv_decode", "init_rwkv_state"]
+
+
+def _token_shift(x, prev):
+    """x_{t-1} with ``prev`` filling slot -1 of the previous chunk/step."""
+    return jnp.concatenate([prev[:, None], x[:, :-1]], axis=1)
+
+
+def _ddlerp(x, sx, tm_mix, lora_a, lora_b):
+    """RWKV6 data-dependent interpolation for the 5 mix channels."""
+    base = x + sx * tm_mix[0]
+    ddd = jnp.tanh(jnp.einsum("btd,dr->btr", base, lora_a,
+                              preferred_element_type=jnp.float32))
+    ddd = ddd.reshape(*ddd.shape[:2], 5, -1)                # (B,T,5,rank)
+    deltas = jnp.einsum("btfr,frd->btfd", ddd, lora_b,
+                        preferred_element_type=jnp.float32).astype(x.dtype)
+    return [x + sx * (tm_mix[f] + deltas[:, :, f]) for f in range(5)]
+
+
+def _wkv_chunked(r, k, v, logw, u, state, chunk: int):
+    """Chunked WKV: r,k,v,logw (B,T,H,hd); u (H,hd); state (B,H,hd,hd)."""
+    b, t, h, hd = r.shape
+    n_chunks = t // chunk
+    f32 = jnp.float32
+    rs = r.reshape(b, n_chunks, chunk, h, hd).astype(f32)
+    ks = k.reshape(b, n_chunks, chunk, h, hd).astype(f32)
+    vs = v.reshape(b, n_chunks, chunk, h, hd).astype(f32)
+    lw = logw.reshape(b, n_chunks, chunk, h, hd).astype(f32)
+    # move chunk axis first for scan
+    rs, ks, vs, lw = (jnp.moveaxis(a, 1, 0) for a in (rs, ks, vs, lw))
+
+    tri_lower = jnp.tril(jnp.ones((chunk, chunk), bool), k=-1)   # s < t
+
+    def step(state, xs):
+        rc, kc, vc, lwc = xs                                # (B,c,H,hd)
+        cum = jnp.cumsum(lwc, axis=1)                       # inclusive
+        cum_prev = cum - lwc                                # exclusive (t-1)
+        # --- inter-chunk: contribution of the carried state
+        r_dec = rc * jnp.exp(cum_prev)                      # (B,c,H,hd)
+        o = jnp.einsum("bthd,bhde->bthe", r_dec, state)
+        # --- intra-chunk pairs s < t (log-space decay ratios <= 0)
+        att = jnp.einsum("bthd,bshd->bhts", r_dec, kc * jnp.exp(-cum))
+        att = jnp.where(tri_lower[None, None], att, 0.0)
+        # --- diagonal (bonus u)
+        diag = jnp.einsum("bthd,bthd->bth", rc, kc * u)
+        o = o + jnp.einsum("bhts,bshe->bthe", att, vc)
+        o = o + diag[..., None] * vc
+        # --- state update
+        decay_all = jnp.exp(cum[:, -1])                     # (B,H,hd)
+        kw = kc * jnp.exp(cum[:, -1:] - cum)                # (B,c,H,hd)
+        state = state * decay_all[..., None]                # decay the k-dim
+        state = state + jnp.einsum("bshd,bshe->bhde", kw, vc)
+        return state, o
+
+    state, o = jax.lax.scan(step, state.astype(f32), (rs, ks, vs, lw))
+    o = jnp.moveaxis(o, 0, 1).reshape(b, t, h, hd)
+    return o.astype(r.dtype), state
+
+
+def rwkv_block(h, blk, cfg: ModelConfig, ctx,
+               tm_prev=None, cm_prev=None, att_state=None):
+    """Full-sequence RWKV block. Returns (h, (tm_last, cm_last, att_state))."""
+    b, t, d = h.shape
+    hh = cfg.num_heads
+    hd = cfg.ssm_head_dim
+    if tm_prev is None:
+        tm_prev = jnp.zeros((b, d), h.dtype)
+        cm_prev = jnp.zeros((b, d), h.dtype)
+        att_state = jnp.zeros((b, hh, hd, hd), jnp.float32)
+
+    # ---- time mix ----
+    x = layers.rms_norm(h, blk["ln1"], cfg.norm_eps)
+    sx = _token_shift(x, tm_prev) - x
+    mr, mk, mv, mw, mg = _ddlerp(x, sx, blk["tm_mix"], blk["tm_lora_a"],
+                                 blk["tm_lora_b"])
+    r = jnp.einsum("btd,de->bte", mr, blk["wr"]).reshape(b, t, hh, hd)
+    k = jnp.einsum("btd,de->bte", mk, blk["wk"]).reshape(b, t, hh, hd)
+    v = jnp.einsum("btd,de->bte", mv, blk["wv"]).reshape(b, t, hh, hd)
+    g = jnp.einsum("btd,de->bte", mg, blk["wg"])
+    logw = -jnp.exp(
+        blk["w0"]
+        + jnp.einsum("btd,dr->btr", jnp.tanh(
+            jnp.einsum("btd,dr->btr", mw, blk["decay_lora_a"])), blk["decay_lora_b"])
+    ).reshape(b, t, hh, hd).astype(jnp.float32)
+    u = blk["bonus_u"].astype(jnp.float32)
+    o, att_state = _wkv_chunked(r, k, v, logw, u, att_state, min(cfg.chunk_size, t))
+    # per-head normalization (GroupNorm stand-in) + gate
+    o = o.reshape(b, t, d)
+    o = layers.rms_norm(o, blk["ln_x"], cfg.norm_eps) * jax.nn.silu(g.astype(o.dtype))
+    h = h + jnp.einsum("btd,de->bte", o, blk["w_att_out"]).astype(h.dtype)
+    tm_last = x[:, -1]
+
+    # ---- channel mix ----
+    x2 = layers.rms_norm(h, blk["ln2"], cfg.norm_eps)
+    sx2 = _token_shift(x2, cm_prev) - x2
+    xk = x2 + sx2 * blk["cm_mix"][0]
+    xr = x2 + sx2 * blk["cm_mix"][1]
+    kk = jnp.square(jax.nn.relu(jnp.einsum("btd,df->btf", xk, blk["cm_k"],
+                                           preferred_element_type=jnp.float32)))
+    kv = jnp.einsum("btf,fd->btd", kk.astype(h.dtype), blk["cm_v"],
+                    preferred_element_type=jnp.float32)
+    out = jax.nn.sigmoid(jnp.einsum("btd,de->bte", xr, blk["cm_r"],
+                                    preferred_element_type=jnp.float32))
+    h = h + (out * kv).astype(h.dtype)
+    cm_last = x2[:, -1]
+    return h, (tm_last, cm_last, att_state)
+
+
+def rwkv_block_decode(h, blk, cfg, ctx, tm_prev, cm_prev, att_state):
+    """Single-token step using the O(1) recurrence directly."""
+    b, d = h.shape[0], h.shape[-1]
+    hh, hd = cfg.num_heads, cfg.ssm_head_dim
+    x = layers.rms_norm(h, blk["ln1"], cfg.norm_eps)         # (B,1,D)
+    sx = tm_prev[:, None] - x
+    mr, mk, mv, mw, mg = _ddlerp(x, sx, blk["tm_mix"], blk["tm_lora_a"],
+                                 blk["tm_lora_b"])
+    r = jnp.einsum("btd,de->bte", mr, blk["wr"]).reshape(b, hh, hd)
+    k = jnp.einsum("btd,de->bte", mk, blk["wk"]).reshape(b, hh, hd)
+    v = jnp.einsum("btd,de->bte", mv, blk["wv"]).reshape(b, hh, hd)
+    g = jnp.einsum("btd,de->bte", mg, blk["wg"])[:, 0]
+    w = jnp.exp(-jnp.exp(
+        blk["w0"] + jnp.einsum("btd,dr->btr", jnp.tanh(
+            jnp.einsum("btd,dr->btr", mw, blk["decay_lora_a"])),
+            blk["decay_lora_b"])
+    )).reshape(b, hh, hd).astype(jnp.float32)
+    u = blk["bonus_u"].astype(jnp.float32)
+    rf, kf, vf = (a.astype(jnp.float32) for a in (r, k, v))
+    o = jnp.einsum("bhd,bhde->bhe", rf, att_state) \
+        + jnp.einsum("bhd,bhd,bhe->bhe", rf, kf * u, vf)
+    att_state = att_state * w[..., None] + jnp.einsum("bhd,bhe->bhde", kf, vf)
+    o = o.reshape(b, 1, d).astype(h.dtype)
+    o = layers.rms_norm(o, blk["ln_x"], cfg.norm_eps) * jax.nn.silu(g[:, None])
+    h = h + jnp.einsum("btd,de->bte", o, blk["w_att_out"]).astype(h.dtype)
+    tm_last = x[:, 0]
+
+    x2 = layers.rms_norm(h, blk["ln2"], cfg.norm_eps)
+    sx2 = cm_prev[:, None] - x2
+    xk = x2 + sx2 * blk["cm_mix"][0]
+    xr = x2 + sx2 * blk["cm_mix"][1]
+    kk = jnp.square(jax.nn.relu(jnp.einsum("btd,df->btf", xk, blk["cm_k"],
+                                           preferred_element_type=jnp.float32)))
+    kv = jnp.einsum("btf,fd->btd", kk.astype(h.dtype), blk["cm_v"],
+                    preferred_element_type=jnp.float32)
+    gate = jax.nn.sigmoid(jnp.einsum("btd,de->bte", xr, blk["cm_r"],
+                                     preferred_element_type=jnp.float32))
+    h = h + (gate * kv).astype(h.dtype)
+    return h, (tm_last, x2[:, 0], att_state)
+
+
+# ---------------------------------------------------------------------------
+# Full model
+# ---------------------------------------------------------------------------
+
+def _embed(params, cfg, tokens, ctx):
+    h = layers.take_embedding(params["embed"], tokens, ctx)
+    h = h.astype(jnp.bfloat16 if cfg.dtype == "bfloat16" else h.dtype)
+    return ctx.constrain(h, "batch", "seq", "act_embed")
+
+
+def rwkv_logits(params, cfg: ModelConfig, batch, ctx, remat: str = "none"):
+    h = _embed(params, cfg, batch["tokens"], ctx)
+
+    def body(hh, blk):
+        hh, _ = rwkv_block(hh, blk, cfg, ctx)
+        return hh, None
+
+    from repro.models.transformer import scan_blocks
+
+    (h), _ = scan_blocks(lambda c, b_: body(c, b_), h, params["blocks"], remat)
+    h = layers.rms_norm(h, params["final_ln"], cfg.norm_eps)
+    logits = jnp.einsum("btd,dv->btv", h, params["lm_head"],
+                        preferred_element_type=jnp.float32)
+    return ctx.constrain(logits, "batch", "seq", "heads")
+
+
+def rwkv_loss(params, cfg, batch, ctx):
+    tokens = batch["tokens"]
+    logits = rwkv_logits(params, cfg, dict(batch, tokens=tokens[:, :-1]), ctx,
+                         remat=ctx.recipe.remat).astype(jnp.float32)
+    targets = tokens[:, 1:]
+    return layers.softmax_xent(logits, targets, ctx)
+
+
+def init_rwkv_state(cfg: ModelConfig, batch_size: int, dtype=jnp.bfloat16):
+    l, d = cfg.num_layers, cfg.d_model
+    h, hd = cfg.num_heads, cfg.ssm_head_dim
+    return {
+        "att": jax.ShapeDtypeStruct((l, batch_size, h, hd, hd), jnp.float32),
+        "tm": jax.ShapeDtypeStruct((l, batch_size, d), dtype),
+        "cm": jax.ShapeDtypeStruct((l, batch_size, d), dtype),
+    }
+
+
+def rwkv_decode(params, cfg: ModelConfig, batch, state, ctx):
+    """One decode step with O(1) state; no KV cache — long_500k runs here."""
+    h = _embed(params, cfg, batch["tokens"], ctx)            # (B,1,D)
+
+    def body(hh, xs):
+        blk, tm, cm, att = xs
+        hh, (tm2, cm2, att2) = rwkv_block_decode(hh, blk, cfg, ctx, tm, cm, att)
+        return hh, (tm2, cm2, att2)
+
+    h, (tm, cm, att) = jax.lax.scan(
+        body, h, (params["blocks"], state["tm"], state["cm"], state["att"]))
+    h = layers.rms_norm(h, params["final_ln"], cfg.norm_eps)
+    logits = jnp.einsum("btd,dv->btv", h, params["lm_head"],
+                        preferred_element_type=jnp.float32)
+    return logits[:, -1], {"att": att, "tm": tm, "cm": cm}

@@ -1,0 +1,86 @@
+"""Batched serving engine: prefill + greedy decode loop over the unified
+model API.  Runs real generation for CPU-sized models (examples/serve demo)
+and carries the CAM-planned paged-KV accounting for long-context offload.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig, ShapeSpec
+from repro.distributed.sharding import Recipe, ShardingCtx
+from repro.models import model as model_mod
+
+__all__ = ["ServeEngine", "GenerationResult"]
+
+
+@dataclasses.dataclass
+class GenerationResult:
+    tokens: np.ndarray           # (B, prompt + generated)
+    prefill_seconds: float
+    decode_seconds: float
+    steps: int
+
+
+class ServeEngine:
+    def __init__(self, cfg: ModelConfig, params, mesh=None,
+                 recipe: Recipe = Recipe(remat="none"), max_seq: int = 512):
+        self.cfg = cfg
+        self.params = params
+        self.ctx = ShardingCtx(mesh, recipe)
+        self.max_seq = max_seq
+        self._decode = jax.jit(
+            lambda p, b, c: model_mod.decode_fn(p, cfg, b, c, self.ctx))
+        self._prefill = jax.jit(
+            lambda p, b: model_mod.prefill_fn(p, cfg, b, self.ctx))
+
+    def _empty_cache(self, batch: int):
+        shape = ShapeSpec("serve", "decode", self.max_seq, batch)
+        sds = model_mod.cache_specs(self.cfg, shape)
+        return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), sds)
+
+    def generate(self, prompts: np.ndarray, max_new_tokens: int = 16
+                 ) -> GenerationResult:
+        """prompts: (B, S0) int32 (audio: (B, S0, C)). Greedy decoding."""
+        b = prompts.shape[0]
+        s0 = prompts.shape[1]
+        t0 = time.perf_counter()
+        logits, prefill_cache = self._prefill(self.params,
+                                              {"tokens": jnp.asarray(prompts)})
+        t_prefill = time.perf_counter() - t0
+
+        cache = self._empty_cache(b)
+        cache = _splice_prefill(cache, prefill_cache, self.cfg)
+        lengths = jnp.full((b,), s0, jnp.int32)
+        audio = self.cfg.family == "audio"
+        next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)  # (B[,C])
+
+        out = [jnp.asarray(prompts)]
+        t0 = time.perf_counter()
+        for _ in range(max_new_tokens):
+            tok = next_tok[:, None] if not audio else next_tok[:, None, :]
+            out.append(tok)
+            logits, cache = self._decode(
+                self.params, {"tokens": tok, "lengths": lengths}, cache)
+            lengths = lengths + 1
+            next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        t_decode = time.perf_counter() - t0
+        tokens = np.asarray(jnp.concatenate(out, axis=1))
+        return GenerationResult(tokens, t_prefill, t_decode, max_new_tokens)
+
+
+def _splice_prefill(cache, prefill_cache, cfg: ModelConfig):
+    """Copy prefill KV/state into the (larger) decode cache buffers."""
+    def splice(dst, src):
+        if dst.ndim >= 3 and src.ndim == dst.ndim and src.shape != dst.shape:
+            # seq-extended buffers: write src into the leading slice
+            sl = tuple(slice(0, s) for s in src.shape)
+            return dst.at[sl].set(src.astype(dst.dtype))
+        return src.astype(dst.dtype)
+
+    return jax.tree.map(splice, cache, prefill_cache)

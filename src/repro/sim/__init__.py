@@ -1,0 +1,4 @@
+"""Simulated buffered-disk machine (stands in for the paper's NVMe server)."""
+from repro.sim import machine
+
+__all__ = ["machine"]

@@ -1,0 +1,4 @@
+"""Training plane: optimizer, microbatched step builder, supervised trainer."""
+from repro.train import optimizer, train_step
+
+__all__ = ["optimizer", "train_step"]

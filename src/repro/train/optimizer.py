@@ -1,0 +1,122 @@
+"""AdamW with sharded, dtype-configurable moments (fp32 / bf16 / int8).
+
+int8 moments ("8-bit Adam") store per-tensor absmax scales — at 405B params
+the fp32-moment footprint alone (12.7 GB/chip on a 256-chip pod) would blow
+the v5e HBM budget; int8 moments cut optimizer state 4x.  Moment states
+inherit the parameter's sharding, i.e. ZeRO-style: each device only holds the
+moments for its parameter shard.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["AdamWConfig", "adamw_init", "adamw_update", "cosine_schedule",
+           "global_norm"]
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    moment_dtype: str = "float32"    # float32 | bfloat16 | int8
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+
+
+def cosine_schedule(cfg: AdamWConfig) -> Callable:
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+        frac = jnp.clip((step - cfg.warmup_steps)
+                        / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1), 0, 1)
+        return cfg.lr * warm * 0.5 * (1.0 + jnp.cos(jnp.pi * frac))
+    return lr
+
+
+# ---------------------------------------------------------------------------
+# Quantized moment storage
+# ---------------------------------------------------------------------------
+
+def _quantize(x: jnp.ndarray) -> Dict[str, jnp.ndarray]:
+    scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return {"q": q, "s": scale.astype(jnp.float32)}
+
+
+def _dequantize(m: Dict[str, jnp.ndarray]) -> jnp.ndarray:
+    return m["q"].astype(jnp.float32) * m["s"]
+
+
+def _store(x: jnp.ndarray, dtype: str):
+    if dtype == "int8":
+        return _quantize(x)
+    if dtype == "bfloat16":
+        return x.astype(jnp.bfloat16)
+    return x.astype(jnp.float32)
+
+
+def _load(m, dtype: str) -> jnp.ndarray:
+    if dtype == "int8":
+        return _dequantize(m)
+    return m.astype(jnp.float32)
+
+
+def adamw_init(params, cfg: AdamWConfig):
+    def zero_like(p):
+        z = jnp.zeros(p.shape, jnp.float32)
+        return _store(z, cfg.moment_dtype)
+
+    return {
+        "m": jax.tree.map(zero_like, params),
+        "v": jax.tree.map(zero_like, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def global_norm(tree) -> jnp.ndarray:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def adamw_update(grads, opt_state, params, cfg: AdamWConfig,
+                 lr_fn: Callable) -> Tuple[Any, Any, Dict[str, jnp.ndarray]]:
+    step = opt_state["step"] + 1
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-12))
+    lr = lr_fn(step)
+    is_q = cfg.moment_dtype == "int8"
+
+    def leaf(p, g, m, v):
+        g = g.astype(jnp.float32) * scale
+        m_f = _load(m, cfg.moment_dtype)
+        v_f = _load(v, cfg.moment_dtype)
+        m_f = cfg.b1 * m_f + (1 - cfg.b1) * g
+        v_f = cfg.b2 * v_f + (1 - cfg.b2) * g * g
+        t = step.astype(jnp.float32)
+        m_hat = m_f / (1 - cfg.b1**t)
+        v_hat = v_f / (1 - cfg.b2**t)
+        upd = m_hat / (jnp.sqrt(v_hat) + cfg.eps) + cfg.weight_decay * p.astype(jnp.float32)
+        new_p = (p.astype(jnp.float32) - lr * upd).astype(p.dtype)
+        return new_p, _store(m_f, cfg.moment_dtype), _store(v_f, cfg.moment_dtype)
+
+    quant_leaf = lambda x: isinstance(x, dict) and set(x) == {"q", "s"}
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_m = jax.tree.leaves(opt_state["m"], is_leaf=quant_leaf) if is_q \
+        else jax.tree.leaves(opt_state["m"])
+    flat_v = jax.tree.leaves(opt_state["v"], is_leaf=quant_leaf) if is_q \
+        else jax.tree.leaves(opt_state["v"])
+    out = [leaf(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_params = jax.tree.unflatten(tdef, [o[0] for o in out])
+    new_m = jax.tree.unflatten(tdef, [o[1] for o in out])
+    new_v = jax.tree.unflatten(tdef, [o[2] for o in out])
+    metrics = {"grad_norm": gnorm, "lr": lr}
+    return new_params, {"m": new_m, "v": new_v, "step": step}, metrics

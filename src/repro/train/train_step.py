@@ -1,0 +1,166 @@
+"""Train step builder: microbatched gradient accumulation, AdamW update,
+optional int8+error-feedback gradient compression across the pod (DCN) axis.
+
+The returned step has signature (params, opt_state, batch) -> (params,
+opt_state, metrics) and is what launch/dryrun.py lowers for every
+(arch x train shape x mesh) cell.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.distributed import compression
+from repro.distributed.sharding import Recipe, ShardingCtx
+from repro.models import model as model_mod
+from repro.train import optimizer as opt_mod
+
+__all__ = ["make_train_step", "split_microbatches"]
+
+
+def _batch_axis(key: str) -> int:
+    return 1 if key == "positions_3d" else 0
+
+
+def split_microbatches(batch: Dict[str, Any], mb: int) -> Dict[str, Any]:
+    """Reshape each input so dim 0 indexes the microbatch."""
+    out = {}
+    for k, x in batch.items():
+        ax = _batch_axis(k)
+        b = x.shape[ax]
+        assert b % mb == 0, (k, b, mb)
+        new_shape = x.shape[:ax] + (mb, b // mb) + x.shape[ax + 1:]
+        x = x.reshape(new_shape)
+        out[k] = jnp.moveaxis(x, ax, 0)
+    return out
+
+
+def _cast_compute(params, cfg: ModelConfig):
+    """Mixed precision: fp32 master params compute in bf16 (halves the FSDP
+    gather payload and every activation)."""
+    if cfg.dtype != "bfloat16":
+        return params
+    return jax.tree.map(
+        lambda p: p.astype(jnp.bfloat16) if p.dtype == jnp.float32 else p,
+        params)
+
+
+def _grads_fn(params, batch, cfg: ModelConfig, ctx: ShardingCtx):
+    """Microbatched value_and_grad.
+
+    Gradients are taken w.r.t. the bf16 COMPUTE copy of the params and
+    accumulated in ``recipe.grad_dtype`` — with fp32 accumulation a 405B
+    model carries 2 x 6.3 GiB/device of gradient state through the scan; bf16
+    halves it (update math still runs in f32 inside AdamW).
+    """
+    mb = ctx.recipe.microbatch
+    gdt = jnp.bfloat16 if ctx.recipe.grad_dtype == "bfloat16" else jnp.float32
+    loss_of = lambda p, b: model_mod.loss_fn(p, cfg, b, ctx)
+
+    params_c = _cast_compute(params, cfg)
+    if mb <= 1:
+        loss, g = jax.value_and_grad(loss_of)(params_c, batch)
+        return loss, jax.tree.map(lambda x: x.astype(gdt), g)
+    split = split_microbatches(batch, mb)
+    if ctx.recipe.unroll_microbatches:
+        loss_sum = jnp.zeros(())
+        g_sum = jax.tree.map(lambda p: jnp.zeros(p.shape, gdt), params)
+        for i in range(mb):
+            mb_batch = {k: v[i] for k, v in split.items()}
+            loss, g = jax.value_and_grad(loss_of)(params_c, mb_batch)
+            g_sum = jax.tree.map(lambda a, b: a + b.astype(gdt), g_sum, g)
+            loss_sum = loss_sum + loss
+        inv = 1.0 / mb
+        return loss_sum * inv, jax.tree.map(lambda g: (g * inv).astype(gdt), g_sum)
+
+    def accum(carry, mb_batch):
+        loss_acc, g_acc = carry
+        loss, g = jax.value_and_grad(loss_of)(params_c, mb_batch)
+        g_acc = jax.tree.map(lambda a, b: a + b.astype(gdt), g_acc, g)
+        return (loss_acc + loss, g_acc), None
+
+    zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, gdt), params)
+    (loss_sum, g_sum), _ = jax.lax.scan(accum, (jnp.zeros(()), zeros), split)
+    inv = 1.0 / mb
+    return loss_sum * inv, jax.tree.map(lambda g: (g * inv).astype(gdt), g_sum)
+
+
+def _strip_pod(recipe: Recipe) -> Recipe:
+    """Inside shard_map the 'pod' axis is Manual; inner model constraints
+    must only reference the remaining (Auto) axes."""
+    f = lambda axes: tuple(a for a in axes if a != "pod")
+    return dataclasses.replace(
+        recipe,
+        batch_axes=f(recipe.batch_axes), fsdp_axes=f(recipe.fsdp_axes),
+        tp_axes=f(recipe.tp_axes), ep_axes=f(recipe.ep_axes),
+        seq_axes=f(recipe.seq_axes), act_embed_axes=f(recipe.act_embed_axes),
+        kv_batch_axes=(f(recipe.kv_batch_axes)
+                       if recipe.kv_batch_axes is not None else None),
+        kv_seq_axes=f(recipe.kv_seq_axes))
+
+
+def make_train_step(cfg: ModelConfig, recipe: Recipe, mesh,
+                    opt_cfg: opt_mod.AdamWConfig):
+    lr_fn = opt_mod.cosine_schedule(opt_cfg)
+    compress = (recipe.compress_pod_grads and mesh is not None
+                and "pod" in mesh.axis_names)
+    ctx = ShardingCtx(mesh, _strip_pod(recipe) if compress else recipe)
+
+    def body(params, opt_state, batch):
+        loss, grads = _grads_fn(params, batch, cfg, ctx)
+        if compress:
+            grads, new_ef = compression_tree(grads, opt_state["ef"])
+            opt_state = dict(opt_state, ef=new_ef)
+        core = {k: opt_state[k] for k in ("m", "v", "step")}
+        new_params, new_core, metrics = opt_mod.adamw_update(
+            grads, core, params, opt_cfg, lr_fn)
+        new_opt = dict(opt_state, **new_core)
+        metrics["loss"] = loss
+        return new_params, new_opt, metrics
+
+    if not compress:
+        return body
+
+    n_pods = mesh.shape["pod"]
+
+    def compression_tree(grads, ef):
+        def one(g, e):
+            mean, new_e = compression._pod_gather_mean(g, e, n_pods)
+            return mean, new_e
+
+        flat_g, tdef = jax.tree.flatten(grads)
+        flat_e = jax.tree.leaves(ef)
+        outs = [one(g, e) for g, e in zip(flat_g, flat_e)]
+        return (jax.tree.unflatten(tdef, [o[0] for o in outs]),
+                jax.tree.unflatten(tdef, [o[1] for o in outs]))
+
+    def pod_specs(batch):
+        return {k: P(*([None] * _batch_axis(k) + ["pod"])) for k in batch}
+
+    def stepped(params, opt_state, batch):
+        wrapped = jax.shard_map(
+            body,
+            mesh=mesh,
+            in_specs=(P(), P(), pod_specs(batch)),
+            out_specs=(P(), P(), P()),
+            axis_names=frozenset({"pod"}),
+            check_vma=False,
+        )
+        return wrapped(params, opt_state, batch)
+
+    return stepped
+
+
+def init_opt_state(params, cfg: ModelConfig, recipe: Recipe,
+                   opt_cfg: opt_mod.AdamWConfig):
+    state = opt_mod.adamw_init(params, opt_cfg)
+    if recipe.compress_pod_grads:
+        state["ef"] = jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    return state

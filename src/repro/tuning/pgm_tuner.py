@@ -1,0 +1,132 @@
+"""CAM-based PGM tuning under a memory budget (paper §V-B).
+
+Given total memory M split between index and buffer, pick
+
+    eps* = argmin_eps (1 - h(M - M_idx(eps))) * E[DAC(eps)]        (Eq. 15/16)
+
+M_idx(eps) follows the fitted dataset-specific power law a*eps^-b + c from a
+few sampled constructions (the multicriteria-PGM fitting trick), so the dense
+eps grid costs one CAM estimate per candidate — no index builds in the loop.
+
+The baseline ``multicriteria_pgm_tune`` reproduces the cache-oblivious tuner:
+it receives a fixed index-space budget (a reserved fraction of M) and picks
+the most accurate (smallest-eps) index that fits, ignoring the buffer interaction.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core import cam
+from repro.index import pgm
+from repro.tuning import fit
+
+__all__ = ["PGMTuneResult", "default_eps_grid", "profile_pgm_size_model",
+           "cam_tune_pgm", "multicriteria_pgm_tune"]
+
+
+@dataclasses.dataclass
+class PGMTuneResult:
+    best_eps: int
+    est_io: float
+    estimates: Dict[int, cam.CamEstimate]
+    size_model: fit.PowerLawFit
+    tuning_seconds: float
+
+
+def default_eps_grid(lo: int = 4, hi: int = 4096) -> Tuple[int, ...]:
+    """Dense sqrt(2)-spaced grid — much denser than what replay could afford."""
+    grid = []
+    e = float(lo)
+    while e <= hi:
+        grid.append(int(round(e)))
+        e *= np.sqrt(2.0)
+    return tuple(dict.fromkeys(grid))
+
+
+def profile_pgm_size_model(
+    keys: np.ndarray, sample_eps: Sequence[int] = (16, 64, 256, 1024)
+) -> Tuple[fit.PowerLawFit, float]:
+    """Build a few PGMs, fit M_idx(eps) = a*eps^-b + c (§V-B)."""
+    t0 = time.perf_counter()
+    sizes = [pgm.build_pgm(keys, e).size_bytes for e in sample_eps]
+    model = fit.fit_power_law(list(sample_eps), sizes)
+    return model, time.perf_counter() - t0
+
+
+def cam_tune_pgm(
+    keys: np.ndarray,
+    positions: np.ndarray,
+    memory_budget: float,
+    geom: cam.CamGeometry,
+    policy: str = "lru",
+    eps_grid: Optional[Sequence[int]] = None,
+    sample_eps: Sequence[int] = (16, 64, 256, 1024),
+    sample_rate: float = 1.0,
+) -> PGMTuneResult:
+    t0 = time.perf_counter()
+    size_model, _ = profile_pgm_size_model(keys, sample_eps)
+    grid = tuple(eps_grid) if eps_grid is not None else default_eps_grid()
+    estimates: Dict[int, cam.CamEstimate] = {}
+    for eps in grid:
+        idx_bytes = float(size_model(eps))
+        if idx_bytes >= memory_budget - geom.page_bytes:
+            continue  # no room left for even one buffer page
+        estimates[eps] = cam.estimate_point_io(
+            positions, eps, len(keys), geom, memory_budget, idx_bytes,
+            policy=policy, sample_rate=sample_rate,
+        )
+    if not estimates:
+        raise ValueError("memory budget too small for any candidate index")
+    best_eps = min(estimates, key=lambda e: estimates[e].io_per_query)
+    return PGMTuneResult(
+        best_eps=best_eps,
+        est_io=estimates[best_eps].io_per_query,
+        estimates=estimates,
+        size_model=size_model,
+        tuning_seconds=time.perf_counter() - t0,
+    )
+
+
+def multicriteria_pgm_tune(
+    keys: np.ndarray,
+    index_space_budget: float,
+    eps_grid: Optional[Sequence[int]] = None,
+    sample_eps: Sequence[int] = (16, 64, 256, 1024),
+    profile_lookups: int = 20_000,
+) -> Tuple[int, float]:
+    """Cache-oblivious baseline: the multicriteria PGM optimizer's
+    time-minimization-given-space mode.
+
+    Like the real tool, it PROFILES candidates: builds each feasible index
+    and measures lookup latency (traversal + last-mile search over the
+    in-memory array), picking the fastest one that fits the space budget.
+    Buffer interaction is invisible to it by construction.
+    Returns (eps, tuning_seconds).
+    """
+    t0 = time.perf_counter()
+    size_model, _ = profile_pgm_size_model(keys, sample_eps)
+    grid = tuple(eps_grid) if eps_grid is not None else default_eps_grid()
+    feasible = [e for e in grid if float(size_model(e)) <= index_space_budget]
+    if not feasible:
+        feasible = [max(grid)]
+    if profile_lookups:
+        # The real tool builds each candidate and profiles lookups; we build
+        # (real cost, reflected in tuning time) and score with the
+        # deterministic in-memory cost model it optimizes: traversal levels
+        # + log2 last-mile steps.  Wall-clock scoring on a noisy shared CPU
+        # would just measure noise.
+        rng = np.random.default_rng(0)
+        probe = keys[rng.integers(0, len(keys), size=profile_lookups)]
+        best, best_c = None, np.inf
+        for eps in feasible[:10]:
+            idx = pgm.build_pgm(keys, eps)
+            idx.predict(probe)                       # the profiling pass
+            cpu = 1.5 * len(idx.levels) + np.log2(2 * eps + 1)
+            if cpu < best_c:
+                best, best_c = eps, cpu
+        return best, time.perf_counter() - t0
+    return min(feasible), time.perf_counter() - t0

@@ -1,0 +1,74 @@
+"""Property-based invariants of the CAM pipeline (hypothesis)."""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import cam, cache_models
+from repro.data.datasets import make_dataset
+from repro.data.workloads import WorkloadSpec, point_positions
+
+GEOM = cam.CamGeometry()
+KEYS = make_dataset("wiki", 200_000, seed=11)
+N = len(KEYS)
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    st.sampled_from([8, 32, 128, 512]),              # eps
+    st.sampled_from(["w1", "w2", "w4", "w6"]),
+    st.integers(min_value=1, max_value=8),           # buffer MiB
+    st.sampled_from(["lru", "fifo", "lfu"]),
+)
+def test_cam_estimate_invariants(eps, wl, mem_mb, policy):
+    pos = point_positions(N, 20_000, WorkloadSpec(wl, seed=5))
+    est = cam.estimate_point_io(pos, eps, N, GEOM, mem_mb << 20, 4096,
+                                policy=policy, sample_rate=1.0)
+    dac = 1.0 + 2.0 * eps / GEOM.c_ipp
+    assert 0.0 <= est.hit_rate <= 1.0 + 1e-6
+    assert -1e-6 <= est.io_per_query <= dac + 1e-6   # IO in [0, E[DAC]]
+    assert abs(est.dac - dac) < 1e-4
+    assert est.distinct_pages <= GEOM.num_pages(N) + 1
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.sampled_from([16, 128]), st.sampled_from(["lru", "fifo"]))
+def test_cam_io_monotone_in_buffer(eps, policy):
+    """More buffer can only reduce estimated physical I/O."""
+    pos = point_positions(N, 20_000, WorkloadSpec("w4", seed=6))
+    prev = np.inf
+    for mem_mb in (1, 2, 4, 8):
+        est = cam.estimate_point_io(pos, eps, N, GEOM, mem_mb << 20, 4096,
+                                    policy=policy)
+        assert est.io_per_query <= prev + 1e-6
+        prev = est.io_per_query
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(min_value=2, max_value=2000), st.integers(min_value=0, max_value=99))
+def test_hit_rates_monotone_in_capacity(n_pages, seed):
+    rng = np.random.default_rng(seed)
+    p = rng.pareto(1.1, n_pages) + 1e-6
+    probs = jnp.asarray(p / p.sum(), jnp.float32)
+    for fn in (cache_models.hit_rate_lru, cache_models.hit_rate_fifo,
+               cache_models.hit_rate_lfu):
+        h_small = float(fn(probs, max(1, n_pages // 10)))
+        h_big = float(fn(probs, max(2, n_pages // 2)))
+        assert h_big >= h_small - 5e-3
+
+
+def test_sorted_estimator_policy_free_matches_replay_on_real_index():
+    """End-to-end Thm III.1: sorted probe stream through a built PGM — the
+    closed form equals replay for LRU and FIFO exactly."""
+    from repro.core.replay import replay_windows
+    from repro.index.pgm import build_pgm
+
+    idx = build_pgm(KEYS, 32)
+    qpos = np.sort(np.random.default_rng(0).integers(0, N, 4000))
+    wlo, whi = idx.window(KEYS[qpos])
+    est = cam.estimate_sorted_io(wlo, whi, 32, N, GEOM,
+                                 memory_budget_bytes=64 << 20, index_bytes=0)
+    plo, phi = wlo // GEOM.c_ipp, whi // GEOM.c_ipp
+    for policy in ("lru", "fifo"):
+        misses = replay_windows(plo, phi, est.capacity_pages, policy)
+        actual_io = misses.sum() / len(qpos)
+        assert abs(actual_io - est.io_per_query) < 1e-9, policy

@@ -1,0 +1,96 @@
+"""Pallas kernel validation: shape/dtype sweeps vs pure-jnp oracles
+(interpret mode — kernel body executes on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.cache_models import solve_che_time
+from repro.kernels import ops
+from repro.kernels import ref as R
+
+KEY = jax.random.PRNGKey(7)
+
+
+def _tol(dt):
+    return 2e-2 if dt == jnp.bfloat16 else 1e-4
+
+
+@pytest.mark.parametrize("b,sq,skv,h,hk,d", [
+    (1, 64, 64, 4, 4, 32),      # MHA
+    (2, 128, 128, 4, 2, 64),    # GQA 2:1
+    (2, 96, 96, 8, 1, 64),      # MQA, ragged seq vs 64-blocks
+    (1, 256, 256, 4, 2, 128),   # full head dim
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_attention_sweep(b, sq, skv, h, hk, d, dtype, causal):
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (b, sq, h, d), dtype)
+    k = jax.random.normal(ks[1], (b, skv, hk, d), dtype)
+    v = jax.random.normal(ks[2], (b, skv, hk, d), dtype)
+    out = ops.flash_attention(q, k, v, causal=causal, block_q=64, block_kv=64,
+                              interpret=True)
+    ref = R.flash_attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               atol=_tol(dtype), rtol=_tol(dtype))
+
+
+def test_flash_matches_blockwise_xla_path():
+    """The Pallas kernel and the lax.scan blockwise path must agree — the
+    dry-run compiles the latter, real TPUs run the former."""
+    from repro.models.attention import blockwise_attention
+
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (2, 128, 4, 64))
+    k = jax.random.normal(ks[1], (2, 128, 2, 64))
+    v = jax.random.normal(ks[2], (2, 128, 2, 64))
+    a = ops.flash_attention(q, k, v, causal=True, block_q=64, block_kv=64,
+                            interpret=True)
+    b_ = blockwise_attention(q, k, v, causal=True, block_kv=64)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b_), atol=1e-4)
+
+
+@pytest.mark.parametrize("b,s,h,hk,d", [
+    (2, 256, 4, 2, 64),
+    (3, 130, 8, 8, 32),
+    (1, 512, 8, 2, 128),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_decode_attention_sweep(b, s, h, hk, d, dtype):
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (b, 1, h, d), dtype)
+    kc = jax.random.normal(ks[1], (b, s, hk, d), dtype)
+    vc = jax.random.normal(ks[2], (b, s, hk, d), dtype)
+    lens = jnp.asarray([max(1, s // (i + 2)) for i in range(b)], jnp.int32)
+    out = ops.decode_attention(q, kc, vc, lens, block_kv=64, interpret=True)
+    ref = R.decode_attention_ref(q, kc, vc, lens)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               atol=_tol(dtype), rtol=_tol(dtype))
+
+
+@pytest.mark.parametrize("n", [100, 5000, 70000])
+@pytest.mark.parametrize("k", [4, 8])
+def test_che_sums_sweep(n, k):
+    rng = np.random.default_rng(n)
+    p = rng.zipf(1.3, n).astype(np.float64)
+    p = jnp.asarray(p / p.sum(), jnp.float32)
+    ts = jnp.asarray(np.logspace(0, 6, k), jnp.float32)
+    out = ops.che_sums(p, ts, interpret=True)
+    ref = R.che_sums_ref(p, ts)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-4, atol=1e-3)
+
+
+def test_che_solve_matches_bisection():
+    rng = np.random.default_rng(3)
+    p = rng.zipf(1.2, 20000).astype(np.float64)
+    p = jnp.asarray(p / p.sum(), jnp.float32)
+    for cap in (100.0, 2000.0, 15000.0):
+        t_kernel = ops.che_solve(p, cap, iters=14, interpret=True)
+        consistency = float(jnp.sum(-jnp.expm1(-p * t_kernel)))
+        assert abs(consistency - cap) / cap < 1e-2
+        t_ref = float(solve_che_time(p, cap))
+        assert abs(float(t_kernel) - t_ref) / t_ref < 0.02

@@ -1,0 +1,135 @@
+"""Page-reference estimator tests: LUT vs brute-force Eq. 12, DAC lemmas vs
+their exact finite sums, histogram mass conservation, range diff-array."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import dac, page_ref
+
+
+# ---------------------------------------------------------------------------
+# Eq. 12 LUT == brute-force enumeration
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=30, deadline=None)
+@given(
+    st.integers(min_value=1, max_value=100),   # eps
+    st.integers(min_value=2, max_value=64),    # c_ipp
+    st.integers(min_value=0, max_value=10_000),
+)
+def test_point_lut_matches_bruteforce(eps, c_ipp, seed):
+    rng = np.random.default_rng(seed)
+    lut = np.asarray(page_ref.point_lut(eps, c_ipp))
+    d_radius = page_ref.lut_radius(eps, c_ipp)
+    # Interior position far from boundaries.
+    q_page = 10 * d_radius + 5
+    for _ in range(4):
+        s = int(rng.integers(0, c_ipp))
+        d = int(rng.integers(-d_radius, d_radius + 1))
+        r = q_page * c_ipp + s
+        exact = page_ref.point_access_prob_exact(r, q_page + d, eps, c_ipp)
+        assert abs(float(lut[d + d_radius, s]) - exact) < 1e-6
+
+
+def test_lut_row_sums_equal_expected_dac():
+    """Summing the LUT over d for every s and averaging over s must equal the
+    all-at-once E[DAC] of Lemma III.2 — the two derivations are consistent."""
+    for eps, c_ipp in [(8, 16), (64, 16), (13, 7), (256, 256), (1024, 512)]:
+        lut = np.asarray(page_ref.point_lut(eps, c_ipp))
+        mean_pages = lut.sum(axis=0).mean()
+        closed = float(dac.expected_dac_all_at_once(eps, c_ipp))
+        assert abs(mean_pages - closed) < 1e-4, (eps, c_ipp)
+
+
+# ---------------------------------------------------------------------------
+# DAC lemmas: closed forms == exact proof sums
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=50, deadline=None)
+@given(st.integers(min_value=1, max_value=2048), st.integers(min_value=2, max_value=512))
+def test_lemma_iii2_all_at_once(eps, c_ipp):
+    closed = float(dac.expected_dac_all_at_once(eps, c_ipp))
+    exact = dac.expected_dac_all_at_once_exact(eps, c_ipp)
+    assert abs(closed - exact) < 1e-6 * max(1.0, closed)
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.integers(min_value=1, max_value=1024), st.integers(min_value=2, max_value=256))
+def test_lemma_iii3_one_by_one(eps, c_ipp):
+    closed = float(dac.expected_dac_one_by_one(eps, c_ipp))
+    exact = dac.expected_dac_one_by_one_exact(eps, c_ipp)
+    assert abs(closed - exact) < 1e-6 * max(1.0, closed)
+
+
+def test_one_by_one_saves_eps_over_cipp():
+    """Remark after Lemma III.3: S1 reduces E[DAC] by exactly eps/C_ipp."""
+    for eps, c_ipp in [(8, 4), (64, 32), (500, 128)]:
+        gap = float(dac.expected_dac_all_at_once(eps, c_ipp)) - float(
+            dac.expected_dac_one_by_one(eps, c_ipp))
+        assert abs(gap - eps / c_ipp) < 1e-6
+
+
+# ---------------------------------------------------------------------------
+# Histogram estimators
+# ---------------------------------------------------------------------------
+
+def test_point_refs_mass_conservation_interior():
+    """For interior queries, total histogram mass == Q * E[DAC]."""
+    eps, c_ipp = 32, 16
+    n = 100_000
+    rng = np.random.default_rng(0)
+    pos = rng.integers(10 * eps, n - 10 * eps, size=5000)
+    counts, total = page_ref.point_page_refs(
+        jnp.asarray(pos, jnp.int32), eps, c_ipp, n // c_ipp
+    )
+    expected = 5000 * float(dac.expected_dac_all_at_once(eps, c_ipp))
+    assert abs(float(total) - expected) < 1e-2 * expected
+    assert abs(float(counts.sum()) - float(total)) < 1e-3 * float(total)
+
+
+def test_point_refs_match_monte_carlo():
+    """Histogram ≈ Monte-Carlo simulation of the uniform-error window model."""
+    eps, c_ipp, n = 24, 8, 4096
+    num_pages = n // c_ipp
+    rng = np.random.default_rng(1)
+    pos = rng.integers(4 * eps, n - 4 * eps, size=800)
+    counts, _ = page_ref.point_page_refs(jnp.asarray(pos, jnp.int32), eps, c_ipp, num_pages)
+    mc = np.zeros(num_pages)
+    for r in pos:
+        e = rng.integers(-eps, eps + 1, size=200)
+        lo = (r + e - eps) // c_ipp
+        hi = (r + e + eps) // c_ipp
+        for a, b in zip(lo, hi):
+            mc[max(a, 0): min(b, num_pages - 1) + 1] += 1.0 / 200
+    err = np.abs(np.asarray(counts) - mc).sum() / mc.sum()
+    assert err < 0.05
+
+
+def test_range_refs_diff_array():
+    eps, c_ipp, n = 16, 8, 10_000
+    num_pages = -(-n // c_ipp)
+    lo = np.array([100, 500, 500, 9000])
+    hi = np.array([200, 800, 600, 9999])
+    counts, total = page_ref.range_page_refs(
+        jnp.asarray(lo, jnp.int32), jnp.asarray(hi, jnp.int32), eps, c_ipp, num_pages, n
+    )
+    # Oracle: explicit loop over Eq. 14 intervals.
+    oracle = np.zeros(num_pages)
+    t = 0
+    for a, b in zip(lo, hi):
+        s = max(0, a - 2 * eps) // c_ipp
+        e = min(n - 1, b + 2 * eps) // c_ipp
+        oracle[s : e + 1] += 1
+        t += e - s + 1
+    np.testing.assert_allclose(np.asarray(counts), oracle, atol=1e-5)
+    assert float(total) == t
+
+
+def test_sorted_workload_rn_union():
+    lo = jnp.asarray([0, 2, 10, 10, 40], jnp.int32)
+    hi = jnp.asarray([3, 5, 12, 20, 41], jnp.int32)
+    r, n = page_ref.sorted_workload_rn(lo, hi)
+    assert float(r) == (4 + 4 + 3 + 11 + 2)
+    # union: [0,5] ∪ [10,20] ∪ [40,41] = 6 + 11 + 2 = 19
+    assert float(n) == 19

@@ -1,0 +1,157 @@
+"""Tuning + hybrid-join tests: U-curve, budget feasibility, Algorithm 2
+invariants, executor correctness vs numpy join oracle."""
+import numpy as np
+import pytest
+
+from repro.core import cam
+from repro.data.datasets import make_dataset
+from repro.data.workloads import WorkloadSpec, point_workload, join_outer_keys
+from repro.index.disk_layout import PageLayout
+from repro.index.pgm import build_pgm
+from repro.join.calibrate import calibrate
+from repro.join.executors import hybrid_join, inlj, point_only, range_only
+from repro.join.hybrid import JoinCostParams, partition_probes
+from repro.tuning.fit import fit_power_law
+from repro.tuning.pgm_tuner import cam_tune_pgm, multicriteria_pgm_tune
+from repro.tuning.rmi_tuner import cam_tune_rmi, cdfshop_tune_rmi
+
+
+@pytest.fixture(scope="module")
+def setup():
+    keys = make_dataset("books", 500_000, seed=1)
+    spec = WorkloadSpec("w4", seed=3)
+    qk, qpos = point_workload(keys, 30_000, spec)
+    return keys, qk, qpos
+
+
+def test_power_law_fit_recovers_params():
+    eps = np.array([8, 16, 32, 64, 128, 256, 512])
+    truth = 3e7 * eps ** -1.1 + 5e3
+    fitted = fit_power_law(eps, truth)
+    pred = fitted(eps)
+    assert np.max(np.abs(pred - truth) / truth) < 0.05
+
+
+def test_cam_tune_pgm_respects_budget(setup):
+    keys, qk, qpos = setup
+    geom = cam.CamGeometry()
+    M = 2 << 20
+    res = cam_tune_pgm(keys, qpos, M, geom, "lru", sample_rate=0.5)
+    assert res.best_eps in res.estimates
+    assert float(res.size_model(res.best_eps)) < M
+    # every evaluated candidate left room for at least one buffer page
+    for e, est in res.estimates.items():
+        assert est.capacity_pages >= 0
+
+
+def test_cam_tune_pgm_ucurve_under_tight_budget(setup):
+    """With a tight budget the cost curve must rise at BOTH extremes
+    (tiny eps → index starves the buffer; huge eps → DAC dominates)."""
+    keys, qk, qpos = setup
+    geom = cam.CamGeometry()
+    M = int(1.2 * 2**20)
+    res = cam_tune_pgm(keys, qpos, M, geom, "lru",
+                       eps_grid=(8, 16, 32, 64, 128, 256, 512, 1024, 2048))
+    ios = {e: est.io_per_query for e, est in res.estimates.items()}
+    eps_sorted = sorted(ios)
+    best = res.best_eps
+    assert ios[eps_sorted[-1]] > ios[best]  # right arm rises (DAC dominates)
+    assert best != eps_sorted[-1]
+
+
+def test_multicriteria_returns_smallest_feasible(setup):
+    keys, _, _ = setup
+    eps, _ = multicriteria_pgm_tune(keys, index_space_budget=64 << 10)
+    eps_loose, _ = multicriteria_pgm_tune(keys, index_space_budget=8 << 20)
+    assert eps_loose <= eps  # looser space → more accurate index
+
+
+def test_cam_tune_rmi_runs(setup):
+    keys, qk, qpos = setup
+    geom = cam.CamGeometry()
+    res = cam_tune_rmi(keys, qpos, qk, 2 << 20, geom, "lru",
+                       branch_grid=(256, 1024, 4096), sample_rate=0.5)
+    assert res.best_branch in (256, 1024, 4096)
+    b, _, built = cdfshop_tune_rmi(keys, 1 << 20, branch_grid=(256, 1024, 4096))
+    assert b in built
+
+
+# ---------------------------------------------------------------------------
+# Algorithm 2
+# ---------------------------------------------------------------------------
+
+def test_partition_covers_stream_without_overlap():
+    rng = np.random.default_rng(0)
+    lo = np.sort(rng.integers(0, 5000, size=3000))
+    hi = lo + rng.integers(0, 3, size=3000)
+    segs = partition_probes(lo, hi, JoinCostParams(), n_min=64, k_max=512)
+    assert segs[0].start == 0 and segs[-1].end == 3000
+    for a, b in zip(segs, segs[1:]):
+        assert a.end == b.start
+    for s in segs:
+        assert s.page_lo <= s.page_hi
+        assert s.n_keys == s.end - s.start
+
+
+def test_partition_dense_region_uses_range():
+    """A dense run of probes (every page hit repeatedly) must flip to range
+    probing; an extremely sparse run must stay point probing."""
+    dense_lo = np.repeat(np.arange(200), 40)        # 8000 probes over 200 pages
+    dense_hi = dense_lo
+    segs = partition_probes(dense_lo, dense_hi, JoinCostParams(), n_min=64, k_max=10**9)
+    assert any(s.use_range for s in segs)
+    sparse_lo = np.arange(0, 3_000_000, 5000)       # 1 probe per 5000 pages
+    segs = partition_probes(sparse_lo, sparse_lo, JoinCostParams(), n_min=64, k_max=10**9)
+    assert not any(s.use_range for s in segs)
+
+
+# ---------------------------------------------------------------------------
+# Join executors
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def join_setup():
+    keys = make_dataset("books", 300_000, seed=5)
+    idx = build_pgm(keys, eps=32)
+    outer = join_outer_keys(keys, 20_000, WorkloadSpec("w4", seed=9))
+    layout = PageLayout()
+    capacity = (2 << 20) // layout.page_bytes
+    return keys, idx, outer, layout, capacity
+
+
+def test_all_strategies_same_matches(join_setup):
+    keys, idx, outer, layout, cap = join_setup
+    oracle = int(np.isin(outer, keys).sum())
+    for fn in (inlj, point_only, range_only):
+        st = fn(idx, keys, outer, layout, cap)
+        assert st.matches == oracle, st.strategy
+    st = hybrid_join(idx, keys, outer, layout, cap, n_min=128)
+    assert st.matches == oracle
+
+
+def test_sorted_probing_beats_unsorted(join_setup):
+    keys, idx, outer, layout, cap = join_setup
+    st_inlj = inlj(idx, keys, outer, layout, cap)
+    st_point = point_only(idx, keys, outer, layout, cap)
+    assert st_point.physical_ios <= st_inlj.physical_ios
+    assert st_point.seconds <= st_inlj.seconds
+
+
+def test_hybrid_not_worse_than_both_pure(join_setup):
+    keys, idx, outer, layout, cap = join_setup
+    params = calibrate(idx, keys, layout, cap)
+    st_p = point_only(idx, keys, outer, layout, cap)
+    st_r = range_only(idx, keys, outer, layout, cap)
+    st_h = hybrid_join(idx, keys, outer, layout, cap, params=params, n_min=128)
+    assert st_h.seconds <= 1.15 * min(st_p.seconds, st_r.seconds)
+
+
+def test_calibration_recovers_machine_constants(join_setup):
+    keys, idx, _, layout, cap = join_setup
+    from repro.sim.machine import MachineParams
+
+    machine = MachineParams()
+    params = calibrate(idx, keys, layout, cap, machine=machine)
+    assert abs(params.lambda_point - machine.miss_latency_point) / machine.miss_latency_point < 0.05
+    assert abs(params.lambda_range - machine.miss_latency_range) / machine.miss_latency_range < 0.05
+    assert abs(params.beta - machine.cpu_per_page_scan) / machine.cpu_per_page_scan < 0.15
