@@ -1,0 +1,139 @@
+"""Batched knob-grid estimation: ``CostSession.estimate_grid`` vs the legacy
+per-candidate ``estimate_point_io`` loop (the seed tuner's inner loop), over a
+>= 25-candidate eps grid — plus grid-tuning all three index families through
+the same session.  Results are recorded to ``benchmarks/results/estimate_grid.json``.
+
+The legacy loop pays K Python round trips and K per-eps jit specializations
+(``point_page_refs`` marks eps static); the grid path compiles ONE kernel for
+the whole grid and solves every hit-rate fixed point in a single vmapped
+bisection over shared page-ref state.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+import warnings
+
+import numpy as np
+
+from benchmarks.common import DEFAULT_N, GEOM, dataset, emit
+from repro.core import cam
+from repro.core.session import CostSession, GridCandidate, System
+from repro.core.workload import Workload
+from repro.data.workloads import WorkloadSpec, point_workload
+from repro.tuning.pgm_tuner import cam_tune_pgm, profile_pgm_size_model
+from repro.tuning.rmi_tuner import cam_tune_rmi
+from repro.tuning.rs_tuner import cam_tune_radixspline
+
+OUT_PATH = os.path.join(os.path.dirname(__file__), "results",
+                        "estimate_grid.json")
+
+
+def _eps_grid(k: int = 28) -> tuple:
+    return tuple(int(e) for e in
+                 dict.fromkeys(np.round(np.geomspace(4, 4096, k)).astype(int)))
+
+
+def run(n=DEFAULT_N, n_queries=100_000, budget_mb=4, out_path=OUT_PATH):
+    keys = dataset("books", n)
+    qk, qpos = point_workload(keys, n_queries, WorkloadSpec("w4", seed=3))
+    budget = int(budget_mb * 2**20)
+    grid = _eps_grid()
+    size_model, _ = profile_pgm_size_model(keys)
+    sizes = {e: float(size_model(e)) for e in grid}
+    feasible = [e for e in grid if sizes[e] < budget - GEOM.page_bytes]
+
+    def legacy_loop():
+        out = {}
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore", DeprecationWarning)
+            for eps in feasible:
+                out[eps] = cam.estimate_point_io(
+                    qpos, eps, n, GEOM, budget, sizes[eps], policy="lru")
+        return out
+
+    session = CostSession(System(GEOM, budget, "lru"))
+    wl = Workload.point(qpos, n=n)
+    cands = [GridCandidate(knob=e, eps=e, size_bytes=sizes[e]) for e in grid]
+
+    t0 = time.perf_counter()
+    loop_cold = legacy_loop()
+    loop_cold_s = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    legacy_loop()
+    loop_warm_s = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    res = session.estimate_grid(cands, wl)
+    grid_cold_s = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    res = session.estimate_grid(cands, wl)
+    grid_warm_s = time.perf_counter() - t0
+
+    rel_err = max(
+        abs(res.estimates[e].io_per_query - loop_cold[e].io_per_query)
+        / max(loop_cold[e].io_per_query, 1e-9)
+        for e in feasible)
+
+    # --- the same session API grid-tunes every family -----------------------
+    small = min(n, 500_000)
+    skeys = keys[:small]
+    sqk, sqpos = point_workload(skeys, min(n_queries, 30_000),
+                                WorkloadSpec("w4", seed=3))
+    t0 = time.perf_counter()
+    pgm_res = cam_tune_pgm(skeys, sqpos, 2 << 20, GEOM, "lru",
+                           eps_grid=(8, 16, 32, 64, 128, 256, 512, 1024))
+    t_pgm = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    rmi_res = cam_tune_rmi(skeys, sqpos, sqk, 2 << 20, GEOM, "lru",
+                           branch_grid=(2**8, 2**10, 2**12, 2**14))
+    t_rmi = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    rs_res = cam_tune_radixspline(skeys, sqpos, 2 << 20, GEOM, "lru",
+                                  eps_grid=(16, 32, 64, 128, 256, 512, 1024),
+                                  radix_bits=12)
+    t_rs = time.perf_counter() - t0
+
+    record = {
+        "n": int(n),
+        "n_queries": int(n_queries),
+        "budget_mb": budget_mb,
+        "n_candidates": len(grid),
+        "n_feasible": len(feasible),
+        "legacy_loop_cold_seconds": loop_cold_s,
+        "legacy_loop_warm_seconds": loop_warm_s,
+        "estimate_grid_cold_seconds": grid_cold_s,
+        "estimate_grid_warm_seconds": grid_warm_s,
+        "speedup_cold": loop_cold_s / max(grid_cold_s, 1e-9),
+        "speedup_warm": loop_warm_s / max(grid_warm_s, 1e-9),
+        "max_rel_io_diff_vs_legacy": rel_err,
+        "best_eps": int(res.best_knob),
+        "families": {
+            "pgm": {"knob": "eps", "best": int(pgm_res.best_eps),
+                    "est_io": pgm_res.est_io, "tuning_seconds": t_pgm},
+            "rmi": {"knob": "branch", "best": int(rmi_res.best_branch),
+                    "est_io": rmi_res.est_io, "tuning_seconds": t_rmi},
+            "radixspline": {"knob": "eps", "best": int(rs_res.best_eps),
+                            "est_io": rs_res.est_io, "tuning_seconds": t_rs},
+        },
+    }
+    os.makedirs(os.path.dirname(out_path), exist_ok=True)
+    with open(out_path, "w") as f:
+        json.dump(record, f, indent=2)
+
+    emit("estimate_grid/loop_cold", loop_cold_s * 1e6 / len(feasible),
+         f"candidates={len(feasible)}")
+    emit("estimate_grid/grid_cold", grid_cold_s * 1e6 / len(feasible),
+         f"speedup={record['speedup_cold']:.1f}x")
+    emit("estimate_grid/grid_warm", grid_warm_s * 1e6 / len(feasible),
+         f"speedup={record['speedup_warm']:.1f}x"
+         f";max_rel_diff={rel_err:.2e}")
+    emit("estimate_grid/families", 0.0,
+         f"pgm_eps={pgm_res.best_eps};rmi_branch={rmi_res.best_branch}"
+         f";rs_eps={rs_res.best_eps};json={os.path.relpath(out_path)}")
+    return record
+
+
+if __name__ == "__main__":
+    run()

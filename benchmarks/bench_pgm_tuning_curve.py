@@ -1,13 +1,17 @@
 """Fig. 7: CAM-estimated vs actual I/O across eps and eviction policies under
-memory budgets — the U-shaped index-footprint/buffer trade-off."""
+memory budgets — the U-shaped index-footprint/buffer trade-off.
+
+Each (policy, budget) curve now prices through ONE ``CostSession.estimate_grid``
+call instead of a per-eps loop; replay ground truth is unchanged."""
 from __future__ import annotations
 
 import numpy as np
 
-from benchmarks.common import DEFAULT_N, GEOM, Timer, dataset, emit, pgm_for
-from repro.core import cam
+from benchmarks.common import DEFAULT_N, GEOM, dataset, emit, pgm_for
 from repro.core.qerror import q_error
 from repro.core.replay import replay_windows
+from repro.core.session import CostSession, GridCandidate, System
+from repro.core.workload import Workload
 from repro.data.workloads import WorkloadSpec, point_workload
 
 EPS_GRID = (8, 16, 32, 64, 128, 256, 512, 1024)
@@ -16,26 +20,31 @@ EPS_GRID = (8, 16, 32, 64, 128, 256, 512, 1024)
 def run(n=DEFAULT_N, n_queries=100_000, budgets_mb=(2, 4, 6)):
     keys = dataset("books", n)
     qk, qpos = point_workload(keys, n_queries, WorkloadSpec("w4", seed=3))
+    wl = Workload.point(qpos, n=n)
+    indexes = {eps: pgm_for("books", eps, n) for eps in EPS_GRID}
     for policy in ("fifo", "lru", "lfu"):
         for mem_mb in budgets_mb:
             m_budget = mem_mb << 20
-            curve_est, curve_act = {}, {}
-            for eps in EPS_GRID:
-                idx = pgm_for("books", eps, n)
-                if idx.size_bytes >= m_budget - GEOM.page_bytes:
-                    continue
-                est = cam.estimate_point_io(qpos, eps, n, GEOM, m_budget,
-                                            idx.size_bytes, policy=policy)
+            session = CostSession(System(GEOM, m_budget, policy))
+            cands = [GridCandidate(knob=eps, eps=eps,
+                                   size_bytes=float(idx.size_bytes))
+                     for eps, idx in indexes.items()
+                     if idx.size_bytes < m_budget - GEOM.page_bytes]
+            res = session.estimate_grid(cands, wl)
+            curve_est = {eps: e.io_per_query
+                         for eps, e in res.estimates.items()}
+            curve_act = {}
+            for eps in curve_est:
+                idx = indexes[eps]
                 cap = max(1, (m_budget - idx.size_bytes) // GEOM.page_bytes)
                 wlo, whi = idx.window(qk)
                 misses = replay_windows(wlo // GEOM.c_ipp, whi // GEOM.c_ipp,
                                         cap, policy)
-                curve_est[eps] = est.io_per_query
                 curve_act[eps] = float(misses.mean())
             best_est = min(curve_est, key=curve_est.get)
             best_act = min(curve_act, key=curve_act.get)
             qerrs = [float(q_error(curve_est[e], curve_act[e])) for e in curve_est]
-            emit(f"fig7/{policy}/{mem_mb}MB", 0.0,
+            emit(f"fig7/{policy}/{mem_mb}MB", res.seconds * 1e6 / len(cands),
                  f"eps_star_cam={best_est};eps_star_actual={best_act}"
                  f";curve_qerr={np.mean(qerrs):.3f}"
                  f";ushaped={int(_is_ushaped(curve_act))}")

@@ -13,8 +13,10 @@ from repro.data.workloads import WorkloadSpec, point_workload
 from repro.index.pgm import build_pgm
 from repro.index.rmi import build_rmi
 from repro.sim.machine import simulate_point_queries
+from repro.index.radixspline import build_radixspline
 from repro.tuning.pgm_tuner import cam_tune_pgm, multicriteria_pgm_tune
 from repro.tuning.rmi_tuner import cam_tune_rmi, cdfshop_tune_rmi
+from repro.tuning.rs_tuner import cam_tune_radixspline
 
 BASELINE_BUFFER_FRAC = 0.5
 
@@ -68,6 +70,24 @@ def run(n=DEFAULT_N, n_queries=100_000, budgets_mb=(0.5, 0.8, 1.0, 1.5, 2, 3.5))
              f";cdfshop_branch={cb};cdfshop_qps={qps_cdf:.0f}"
              f";qps_gain={qps_cam_rmi / max(qps_cdf, 1):.2f}x"
              f";tuning_time_ratio={rres.tuning_seconds / max(ct, 1e-9):.2f}")
+
+        # --- RadixSpline (third family, tunable via CostSession for the
+        # first time — corridor eps is the knob, same grid machinery as PGM)
+        try:
+            rs = cam_tune_radixspline(
+                keys, qpos, m_budget, GEOM, "lru",
+                eps_grid=(16, 32, 64, 128, 256, 512, 1024), radix_bits=12,
+                sample_rate=0.3)
+        except ValueError:
+            continue  # budget below the radix-table floor
+        rs_idx = build_radixspline(keys, rs.best_eps, radix_bits=12)
+        cap = max(1, (m_budget - rs_idx.size_bytes) // GEOM.page_bytes)
+        wlo, whi = rs_idx.window(qk)
+        _, qps_rs, _ = simulate_point_queries(
+            wlo // GEOM.c_ipp, whi // GEOM.c_ipp, cap, "lru")
+        emit(f"fig10b/radixspline/{mem_mb}MB", rs.tuning_seconds * 1e6,
+             f"cam_eps={rs.best_eps};cam_qps={qps_rs:.0f}"
+             f";index_kib={rs_idx.size_bytes / 1024:.0f}")
 
 
 if __name__ == "__main__":

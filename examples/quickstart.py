@@ -1,39 +1,48 @@
-"""Quickstart: CAM in 40 lines — estimate physical I/O for a disk-resident
-PGM-index WITHOUT replaying the workload, and check it against ground truth.
+"""Quickstart: CAM through the index-agnostic CostSession API — estimate
+physical I/O for THREE disk-resident learned indexes (PGM, RMI, RadixSpline)
+WITHOUT replaying the workload, and check each against ground truth.
 
     PYTHONPATH=src python examples/quickstart.py
 """
 import numpy as np
 
-from repro.core import cam
+from repro.core.cam import CamGeometry
 from repro.core.qerror import q_error
 from repro.core.replay import replay_windows
+from repro.core.session import CostSession, System
+from repro.core.workload import Workload
 from repro.data.datasets import make_dataset
 from repro.data.workloads import WorkloadSpec, point_workload
-from repro.index.pgm import build_pgm
+from repro.index.adapters import PGMAdapter, RMIAdapter, RadixSplineAdapter
 
-# 1. a sorted key set ("on disk") and a skewed point-lookup workload
+# 1. a sorted key set ("on disk") and a skewed point-lookup workload;
+#    the Workload locates true positions ONCE and caches them for every
+#    estimate that follows
 keys = make_dataset("books", 1_000_000, seed=1)
-query_keys, query_positions = point_workload(
-    keys, 100_000, WorkloadSpec("w4", seed=3))
+query_keys, _ = point_workload(keys, 100_000, WorkloadSpec("w4", seed=3))
+workload = Workload.from_keys(keys, query_keys)
 
-# 2. a disk-based PGM-index with error bound eps (index in memory, data paged)
-eps = 64
-index = build_pgm(keys, eps)
-print(f"PGM eps={eps}: {index.num_segments} segments, "
-      f"{index.size_bytes / 1024:.1f} KiB in memory")
+# 2. the System: page geometry + a 2 MiB memory budget shared by index and
+#    buffer + LRU eviction
+system = System(geom=CamGeometry(c_ipp=256, page_bytes=4096),
+                memory_budget_bytes=2 << 20, policy="lru")
+session = CostSession(system)
 
-# 3. CAM: replay-free physical-I/O estimate under an 8 MiB LRU page buffer
-geom = cam.CamGeometry(c_ipp=256, page_bytes=4096)
-budget = 8 << 20
-est = cam.estimate_point_io(query_positions, eps, len(keys), geom,
-                            budget, index.size_bytes, policy="lru")
-print(f"CAM:    {est.io_per_query:.4f} physical I/Os per query "
-      f"(hit rate {est.hit_rate:.3f}) in {est.estimation_seconds*1e3:.0f} ms")
+# 3. three different index designs, ONE estimation surface
+for adapter in (PGMAdapter.build(keys, eps=64),
+                RMIAdapter.build(keys, branch=4096),
+                RadixSplineAdapter.build(keys, eps=64, radix_bits=12)):
+    est = session.estimate(adapter, workload)
 
-# 4. ground truth: replay the actual last-mile windows through a real buffer
-lo, hi = index.window(query_keys)
-capacity = (budget - index.size_bytes) // geom.page_bytes
-misses = replay_windows(lo // geom.c_ipp, hi // geom.c_ipp, capacity, "lru")
-print(f"Replay: {misses.mean():.4f} physical I/Os per query")
-print(f"Q-error: {float(q_error(est.io_per_query, misses.mean())):.3f}")
+    # ground truth: replay the actual last-mile windows through a real buffer
+    lo, hi = adapter.window(query_keys)
+    capacity = max(1, system.capacity_for(adapter.size_bytes))
+    misses = replay_windows(lo // system.geom.c_ipp, hi // system.geom.c_ipp,
+                            capacity, system.policy)
+    print(f"{adapter.family:12s} ({adapter.size_bytes / 1024:7.1f} KiB, "
+          f"knobs {adapter.knobs()!r}):")
+    print(f"  CAM    {est.io_per_query:.4f} IO/query "
+          f"(hit rate {est.hit_rate:.3f}) in "
+          f"{est.estimation_seconds * 1e3:.0f} ms")
+    print(f"  replay {misses.mean():.4f} IO/query   "
+          f"Q-error {float(q_error(est.io_per_query, misses.mean())):.3f}\n")

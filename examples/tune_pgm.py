@@ -1,25 +1,32 @@
 """Memory-budgeted index tuning (paper §V): CAM picks eps* by trading index
 footprint against buffer capacity; the cache-oblivious baseline can't.
 
+The whole eps grid prices through ONE batched ``CostSession.estimate_grid``
+call (shared page-ref state, vmapped hit-rate solves) — the same machinery
+also grid-tunes RadixSpline, which had no tuning path before the CostSession
+redesign.
+
     PYTHONPATH=src python examples/tune_pgm.py
 """
-from repro.core import cam
-from repro.core.replay import replay_windows
+from repro.core.cam import CamGeometry
+from repro.core.workload import Workload
 from repro.data.datasets import make_dataset
 from repro.data.workloads import WorkloadSpec, point_workload
 from repro.index.pgm import build_pgm
 from repro.sim.machine import simulate_point_queries
 from repro.tuning.pgm_tuner import cam_tune_pgm, multicriteria_pgm_tune
+from repro.tuning.rs_tuner import cam_tune_radixspline
 
-GEOM = cam.CamGeometry()
+GEOM = CamGeometry()
 keys = make_dataset("books", 1_000_000, seed=1)
 qk, qpos = point_workload(keys, 100_000, WorkloadSpec("w4", seed=3))
+workload = Workload.point(qpos, n=len(keys), query_keys=qk)
 BUDGET = int(1.0 * 2**20)   # 1 MiB total for index + buffer — tight!
 
 print(f"memory budget: {BUDGET / 2**20:.1f} MiB (shared by index AND buffer)")
 res = cam_tune_pgm(keys, qpos, BUDGET, GEOM, "lru", sample_rate=0.3)
-print(f"\nCAM sweep ({len(res.estimates)} candidates, "
-      f"{res.tuning_seconds:.1f}s):")
+print(f"\nCAM batched grid ({len(res.estimates)} candidates, "
+      f"{res.tuning_seconds:.1f}s incl. size-model fit):")
 for eps in sorted(res.estimates):
     e = res.estimates[eps]
     star = " <-- eps*" if eps == res.best_eps else ""
@@ -38,3 +45,10 @@ for name, eps in [("CAM", res.best_eps), ("baseline", base_eps)]:
                                             cap, "lru")
     print(f"{name:9s} eps={eps:5d}: {qps:12,.0f} QPS "
           f"({misses} physical IOs)")
+
+# Same session machinery, third index family: tune RadixSpline's corridor eps
+rs = cam_tune_radixspline(keys, qpos, 2 << 20, GEOM, "lru",
+                          eps_grid=(16, 32, 64, 128, 256, 512, 1024),
+                          radix_bits=12, sample_rate=0.3)
+print(f"\nRadixSpline under 2 MiB: eps*={rs.best_eps} "
+      f"(est {rs.est_io:.4f} IO/q, {rs.tuning_seconds:.1f}s)")

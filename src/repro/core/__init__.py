@@ -1,5 +1,6 @@
 """CAM core: the paper's contribution as a composable JAX module."""
-from repro.core import cache_models, cam, dac, device_models, lpm, page_ref, qerror, replay
+from repro.core import (cache_models, cam, dac, device_models, lpm, page_ref,
+                        qerror, replay, session, workload)
 
 __all__ = [
     "cache_models",
@@ -10,4 +11,6 @@ __all__ = [
     "page_ref",
     "qerror",
     "replay",
+    "session",
+    "workload",
 ]

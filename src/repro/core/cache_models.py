@@ -30,6 +30,7 @@ __all__ = [
     "hit_rate_lfu",
     "hit_rate_compulsory",
     "hit_rate",
+    "hit_rate_grid",
     "POLICIES",
 ]
 
@@ -201,3 +202,48 @@ def hit_rate(
     if policy not in POLICIES:
         raise ValueError(f"unknown policy {policy!r}; expected one of {POLICIES}")
     return _hit_rate_jit(policy, probs, capacity)
+
+
+# ---------------------------------------------------------------------------
+# Batched grid solver (CostSession.estimate_grid)
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("policy",))
+def hit_rate_grid(
+    policy: str,
+    counts: jnp.ndarray,
+    sample_refs: jnp.ndarray,
+    full_refs: jnp.ndarray,
+    capacities: jnp.ndarray,
+):
+    """Hit rates for K (histogram, capacity) candidates in one vmapped solve.
+
+    The per-candidate dispatch of :func:`hit_rate` (compulsory closed form
+    when ``C >= N``, zero when ``C < 1``, policy fixed point otherwise)
+    becomes branchless ``where`` selects so the whole knob grid solves under
+    a single jit — K bisections run lockstep instead of K Python round trips.
+
+    Args:
+      counts:      (K, P) expected page-reference histograms.
+      sample_refs: (K,) sample request mass (normalizer of Pr_req).
+      full_refs:   (K,) full-workload request volume R (compulsory branch).
+      capacities:  (K,) buffer capacities in pages (may be <= 0).
+
+    Returns:
+      (hit_rates (K,), distinct_pages (K,)).
+    """
+    if policy == "lru":
+        fn = hit_rate_lru
+    elif policy == "fifo":
+        fn = hit_rate_fifo
+    elif policy == "lfu":
+        fn = hit_rate_lfu
+    else:
+        raise ValueError(f"unknown policy {policy!r}; expected one of {POLICIES}")
+    probs = counts / jnp.maximum(sample_refs[:, None], 1e-30)
+    n_distinct = jnp.sum(counts > 0, axis=1).astype(jnp.float32)
+    cap = capacities.astype(jnp.float32)
+    h_policy = jax.vmap(lambda p, c: fn(p, jnp.maximum(c, 1.0)))(probs, cap)
+    h_comp = hit_rate_compulsory(full_refs, n_distinct)
+    h = jnp.where(cap >= n_distinct, h_comp, h_policy)
+    return jnp.where(cap < 1.0, 0.0, h), n_distinct

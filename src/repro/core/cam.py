@@ -9,17 +9,21 @@ Composition:  Cost_CAM = (1 - h) * E[DAC]          (Eq. 3)
   5. optionally compose with a device-side model        (§III-A).
 
 Everything after step 1 is pure JAX.
+
+NOTE: the per-shape entry points below (``estimate_point_io`` /
+``estimate_range_io`` / ``estimate_sorted_io``) are DEPRECATED shims kept for
+golden equivalence; new code should use the index-agnostic
+:class:`repro.core.session.CostSession` with a
+:class:`repro.core.workload.Workload` — which also adds batched knob-grid
+estimation (``estimate_grid``) these one-shot functions cannot express.
 """
 from __future__ import annotations
 
 import dataclasses
-import time
+import warnings
 from typing import Optional
 
-import jax.numpy as jnp
 import numpy as np
-
-from repro.core import cache_models, dac, page_ref
 
 __all__ = ["CamGeometry", "CamEstimate", "estimate_point_io", "estimate_range_io",
            "estimate_sorted_io", "sample_workload", "capacity_pages"]
@@ -49,6 +53,7 @@ class CamEstimate:
     distinct_pages: float       # N (pages with nonzero mass)
     estimation_seconds: float
     policy: str
+    device_cost: Optional[float] = None   # §III-A composition, if a device set
 
     @property
     def miss_rate(self) -> float:
@@ -60,60 +65,30 @@ def capacity_pages(memory_budget_bytes: float, index_bytes: float, page_bytes: i
     return int(max(0, (memory_budget_bytes - index_bytes) // page_bytes))
 
 
+def _deprecated(old: str) -> None:
+    warnings.warn(
+        f"cam.{old} is deprecated; use repro.core.session.CostSession with a "
+        "repro.core.workload.Workload (estimate / estimate_grid)",
+        DeprecationWarning, stacklevel=3)
+
+
 def sample_workload(arr: np.ndarray, rate: float, seed: int = 0) -> np.ndarray:
-    """CAM-x: estimate from an x% workload sample (keeps order for sorted use)."""
+    """CAM-x: estimate from an x% workload sample (keeps order for sorted use).
+
+    Deprecated shim over :meth:`repro.core.workload.Workload.sample`.
+    """
+    arr = np.asarray(arr)
     if rate >= 1.0:
         return arr
-    rng = np.random.default_rng(seed)
-    k = max(1, int(round(arr.shape[0] * rate)))
-    idx = np.sort(rng.choice(arr.shape[0], size=k, replace=False))
-    return arr[idx]
+    from repro.core.workload import subsample_indices
+
+    return arr[subsample_indices(arr.shape[0], rate, seed)]
 
 
-def _finish(
-    probs_counts: jnp.ndarray,
-    sample_refs: float,
-    full_refs: float,
-    expected_dac: float,
-    capacity: int,
-    policy: str,
-    sorted_workload: bool,
-    t_start: float,
-    distinct_override: Optional[float] = None,
-) -> CamEstimate:
-    counts = probs_counts
-    n_distinct = (
-        float(distinct_override)
-        if distinct_override is not None
-        else float(jnp.sum(counts > 0))
-    )
-    if capacity <= 0:
-        h = 0.0
-    else:
-        # Normalize by the SAMPLE mass (probabilities must sum to 1); the
-        # full-workload request volume only enters the compulsory branch.
-        probs = counts / jnp.maximum(float(sample_refs), 1e-30)
-        h = float(
-            cache_models.hit_rate(
-                policy,
-                capacity,
-                probs,
-                total_requests=full_refs,
-                distinct_pages=n_distinct,
-                sorted_workload=sorted_workload,
-            )
-        )
-    io = (1.0 - h) * float(expected_dac)
-    return CamEstimate(
-        io_per_query=io,
-        hit_rate=h,
-        dac=float(expected_dac),
-        capacity_pages=capacity,
-        total_refs=float(full_refs),
-        distinct_pages=n_distinct,
-        estimation_seconds=time.perf_counter() - t_start,
-        policy=policy,
-    )
+def _session(geom: CamGeometry, memory_budget_bytes: float, policy: str):
+    from repro.core.session import CostSession, System
+
+    return CostSession(System(geom, memory_budget_bytes, policy))
 
 
 def estimate_point_io(
@@ -127,25 +102,20 @@ def estimate_point_io(
     sample_rate: float = 1.0,
     seed: int = 0,
 ) -> CamEstimate:
-    """Algorithm 1 for point workloads.
+    """Algorithm 1 for point workloads (deprecated shim).
 
     ``positions`` are the true ranks of the query keys (LocateQueries output —
     computed once per (dataset, workload) pair and reused across every
     (eps, M) candidate, which is where CAM's tuning-loop speedup comes from).
     """
-    t0 = time.perf_counter()
-    pos = sample_workload(np.asarray(positions), sample_rate, seed)
-    num_pages = geom.num_pages(n)
-    counts, total = page_ref.point_page_refs(
-        jnp.asarray(pos, jnp.int32), int(eps), geom.c_ipp, num_pages
-    )
-    e_dac = float(dac.expected_dac(eps, geom.c_ipp, geom.strategy))
-    cap = capacity_pages(memory_budget_bytes, index_bytes, geom.page_bytes)
-    # Scale R to the full workload for the compulsory-miss branch only
-    # (probabilities are normalized by the sample mass).
-    scale = max(1.0, len(positions) / max(len(pos), 1))
-    return _finish(counts, float(total), float(total) * scale, e_dac, cap,
-                   policy, False, t0)
+    _deprecated("estimate_point_io")
+    from repro.core.session import UniformEpsModel
+    from repro.core.workload import Workload
+
+    return _session(geom, memory_budget_bytes, policy).estimate(
+        UniformEpsModel(int(eps), int(n), float(index_bytes)),
+        Workload.point(positions, n=int(n)),
+        sample_rate=sample_rate, seed=seed)
 
 
 def estimate_range_io(
@@ -160,25 +130,15 @@ def estimate_range_io(
     sample_rate: float = 1.0,
     seed: int = 0,
 ) -> CamEstimate:
-    """Algorithm 1 for range workloads (§IV-B)."""
-    t0 = time.perf_counter()
-    lo = np.asarray(lo_positions)
-    hi = np.asarray(hi_positions)
-    if sample_rate < 1.0:
-        rng = np.random.default_rng(seed)
-        k = max(1, int(round(lo.shape[0] * sample_rate)))
-        idx = np.sort(rng.choice(lo.shape[0], size=k, replace=False))
-        lo, hi = lo[idx], hi[idx]
-    num_pages = geom.num_pages(n)
-    counts, total = page_ref.range_page_refs(
-        jnp.asarray(lo, jnp.int32), jnp.asarray(hi, jnp.int32),
-        int(eps), geom.c_ipp, num_pages, n,
-    )
-    e_dac = float(total) / max(lo.shape[0], 1)
-    cap = capacity_pages(memory_budget_bytes, index_bytes, geom.page_bytes)
-    scale = max(1.0, len(lo_positions) / max(lo.shape[0], 1))
-    return _finish(counts, float(total), float(total) * scale, e_dac, cap,
-                   policy, False, t0)
+    """Algorithm 1 for range workloads (§IV-B) (deprecated shim)."""
+    _deprecated("estimate_range_io")
+    from repro.core.session import UniformEpsModel
+    from repro.core.workload import Workload
+
+    return _session(geom, memory_budget_bytes, policy).estimate(
+        UniformEpsModel(int(eps), int(n), float(index_bytes)),
+        Workload.range_scan(lo_positions, hi_positions, n=int(n)),
+        sample_rate=sample_rate, seed=seed)
 
 
 def estimate_sorted_io(
@@ -194,25 +154,12 @@ def estimate_sorted_io(
 
     ``window_lo/hi`` are per-query *position* windows in sorted order.  Needs
     only (R, N); requires C >= 1 + ceil(2*eps/C_ipp) to be exact.
+    (Deprecated shim.)
     """
-    t0 = time.perf_counter()
-    num_pages = geom.num_pages(n)
-    plo, phi = page_ref.page_intervals(
-        jnp.asarray(window_lo, jnp.int32), jnp.asarray(window_hi, jnp.int32),
-        geom.c_ipp, num_pages,
-    )
-    r_total, n_distinct = page_ref.sorted_workload_rn(plo, phi)
-    r_total, n_distinct = float(r_total), float(n_distinct)
-    e_dac = r_total / max(window_lo.shape[0], 1)
-    cap = capacity_pages(memory_budget_bytes, index_bytes, geom.page_bytes)
-    min_cap = 1 + int(np.ceil(2 * eps / geom.c_ipp))
-    if cap < min_cap:
-        # Below the theorem's capacity premise: fall back to the conservative
-        # no-reuse bound (every reference that isn't an immediate window
-        # overlap misses) — flagged via hit_rate=0 diagnostics.
-        h = 0.0
-    else:
-        h = (r_total - n_distinct) / max(r_total, 1e-30)
-    io = (1.0 - h) * e_dac
-    return CamEstimate(io, h, e_dac, cap, r_total, n_distinct,
-                       time.perf_counter() - t0, "sorted-closed-form")
+    _deprecated("estimate_sorted_io")
+    from repro.core.session import UniformEpsModel
+    from repro.core.workload import Workload
+
+    return _session(geom, memory_budget_bytes, "lru").estimate(
+        UniformEpsModel(int(eps), int(n), float(index_bytes)),
+        Workload.sorted_stream(window_lo, window_hi, n=int(n)))

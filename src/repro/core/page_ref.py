@@ -27,8 +27,10 @@ import numpy as np
 __all__ = [
     "point_lut",
     "point_page_refs",
+    "point_page_refs_grid",
     "point_page_refs_mixed_eps",
     "range_page_refs",
+    "range_page_refs_grid",
     "page_intervals",
     "sorted_workload_rn",
     "point_access_prob_exact",
@@ -102,6 +104,99 @@ def point_page_refs(
         contribs.reshape(-1), flat_t, num_segments=num_pages
     )
     return counts, jnp.sum(contribs)
+
+
+def _point_lut_traced(eps: jnp.ndarray, d_radius: int, c_ipp: int) -> jnp.ndarray:
+    """Eq. 12 LUT with a *traced* eps and a static padded radius.
+
+    Entries with |d| beyond the candidate's own radius get width 0 from the
+    max(0, ·) clamp, so padding to the grid-wide max radius is exact — this is
+    what lets a whole eps grid share one compiled kernel.
+    """
+    d = jnp.arange(-d_radius, d_radius + 1)[:, None]
+    s = jnp.arange(c_ipp)[None, :]
+    eps = eps.astype(jnp.int32)
+    lo = jnp.maximum(-eps, d * c_ipp - s - eps)
+    hi = jnp.minimum(eps, d * c_ipp - s + c_ipp - 1 + eps)
+    width = jnp.maximum(0, hi - lo + 1)
+    return width.astype(jnp.float32) / (2.0 * eps.astype(jnp.float32) + 1.0)
+
+
+@functools.partial(jax.jit, static_argnames=("d_radius", "c_ipp", "num_pages"))
+def point_page_refs_grid(
+    positions: jnp.ndarray,
+    eps_grid: jnp.ndarray,
+    d_radius: int,
+    c_ipp: int,
+    num_pages: int,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Eq. 13 histograms for a WHOLE eps grid in one compiled pass.
+
+    Since every query at true position (q, s) contributes ``LUT[d, s]`` to
+    page ``q + d``, the workload enters only through its (page, offset)
+    occupancy histogram — computed ONCE and shared by every candidate.  Each
+    candidate's page histogram is then a banded contraction
+
+        counts_k[q + d] += sum_s pos_hist[q, s] * LUT_k[d, s]
+
+    i.e. one (K*(2D+1), C_ipp) x (C_ipp, P) matmul plus 2D+1 shifted adds —
+    no per-query scatter, no per-eps recompiles, work independent of |Q|
+    beyond the single bincount.  This replaces K jit specializations of
+    :func:`point_page_refs` in the legacy tuning loop.
+
+    Args:
+      positions: (Q,) true ranks, shared page-ref state for the grid.
+      eps_grid:  (K,) int32 candidate error bounds.
+      d_radius:  static padded radius — ``lut_radius(max(eps_grid), c_ipp)``.
+
+    Returns:
+      counts: (K, num_pages) expected reference histograms (boundary-clipped,
+              matching :func:`point_page_refs`).
+      totals: (K,) total expected logical references per candidate.
+    """
+    k = eps_grid.shape[0]
+    width = 2 * d_radius + 1
+    pos_hist = jax.ops.segment_sum(
+        jnp.ones(positions.shape[0], jnp.float32),
+        positions.astype(jnp.int32),
+        num_segments=num_pages * c_ipp,
+    ).reshape(num_pages, c_ipp)                            # shared state
+    lut = _point_lut_traced(
+        eps_grid.astype(jnp.int32)[:, None, None], d_radius, c_ipp
+    )                                                      # (K, 2D+1, C_ipp)
+    band = (lut.reshape(k * width, c_ipp) @ pos_hist.T).reshape(
+        k, width, num_pages)
+    out = jnp.zeros((k, num_pages + 2 * d_radius), jnp.float32)
+    for j in range(width):                                 # shifted adds
+        out = out.at[:, j:j + num_pages].add(band[:, j, :])
+    counts = out[:, d_radius:d_radius + num_pages]         # clip to valid pages
+    return counts, jnp.sum(counts, axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=("c_ipp", "num_pages", "n"))
+def range_page_refs_grid(
+    lo_pos: jnp.ndarray,
+    hi_pos: jnp.ndarray,
+    eps_grid: jnp.ndarray,
+    c_ipp: int,
+    num_pages: int,
+    n: int,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Eq. 14 histograms for an eps grid in one compiled pass (cf. point)."""
+    lo_pos = lo_pos.astype(jnp.int32)
+    hi_pos = hi_pos.astype(jnp.int32)
+
+    def one(eps):
+        eps = eps.astype(jnp.int32)
+        start = jnp.maximum(0, lo_pos - 2 * eps) // c_ipp
+        end = jnp.minimum(n - 1, hi_pos + 2 * eps) // c_ipp
+        ones = jnp.ones_like(start, jnp.float32)
+        diff = jax.ops.segment_sum(ones, start, num_segments=num_pages + 1)
+        diff = diff - jax.ops.segment_sum(ones, end + 1, num_segments=num_pages + 1)
+        counts = jnp.cumsum(diff)[:num_pages]
+        return counts, jnp.sum((end - start + 1).astype(jnp.float32))
+
+    return jax.lax.map(one, eps_grid.astype(jnp.int32))
 
 
 def point_page_refs_mixed_eps(

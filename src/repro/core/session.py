@@ -1,0 +1,423 @@
+"""CostSession — the index-agnostic estimation surface of CAM.
+
+The paper's claim that CAM "is not tied to a particular learned index design"
+is realized here as three nouns plus a session object:
+
+* :class:`~repro.core.workload.Workload` — queries, cached true positions,
+  shapes (point / range / sorted / mixed), CAM-x sampling;
+* :class:`IndexModel` — anything exposing ``size_bytes`` + knob metadata +
+  a ``page_ref_profile(workload, geom)`` returning the Eq. 12/13/14
+  histograms (adapters for PGM, RMI and RadixSpline live in
+  ``repro.index.adapters``);
+* :class:`System` — page geometry, memory budget, cache policy, optional
+  device-side cost model.
+
+``CostSession.estimate`` reproduces Algorithm 1 for a single configuration;
+``CostSession.estimate_grid`` evaluates an entire knob grid (eps grid x
+per-candidate buffer capacities) in ONE jitted pass over shared page-ref
+state — K lockstep bisections instead of K Python loop iterations with K
+per-eps recompiles, which is the tuning-loop speedup the paper's §V needs.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, Optional, Protocol, Sequence, runtime_checkable
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import cache_models, dac, page_ref
+from repro.core.cam import CamEstimate, CamGeometry, capacity_pages
+from repro.core.workload import MIXED, POINT, RANGE, SORTED, Workload
+
+__all__ = [
+    "System",
+    "PageRefProfile",
+    "IndexModel",
+    "UniformEpsModel",
+    "GridCandidate",
+    "GridResult",
+    "CostSession",
+    "uniform_eps_profile",
+]
+
+
+# ---------------------------------------------------------------------------
+# System: where the index runs
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class System:
+    """Disk geometry + memory budget + cache policy (+ device model)."""
+
+    geom: CamGeometry = CamGeometry()
+    memory_budget_bytes: float = 8 << 20
+    policy: str = "lru"
+    device: Optional[object] = None   # repro.core.device_models instance
+
+    def __post_init__(self):
+        # Validate eagerly: the compulsory-miss branch never consults the
+        # policy, so a typo could otherwise survive a whole tuning run.
+        if self.policy not in cache_models.POLICIES:
+            raise ValueError(f"unknown policy {self.policy!r}; expected one "
+                             f"of {cache_models.POLICIES}")
+
+    def capacity_for(self, index_bytes: float) -> int:
+        """Buffer capacity left once the index is resident (Alg. 1 l. 15)."""
+        return capacity_pages(self.memory_budget_bytes, index_bytes,
+                              self.geom.page_bytes)
+
+
+# ---------------------------------------------------------------------------
+# Page-reference profiles and the IndexModel protocol
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class PageRefProfile:
+    """Structural page-reference summary an index reports for a workload.
+
+    ``counts`` is the Eq. 13/14 expected-reference histogram; sorted probe
+    streams need only (R, N) for the Theorem III.1 closed form and leave
+    ``counts`` as None.
+    """
+
+    counts: Optional[jnp.ndarray]
+    total_refs: float                     # sample request mass R
+    expected_dac: float                   # E[DAC] per query
+    sorted_stream: bool = False
+    distinct_pages: Optional[float] = None
+    min_capacity: int = 1                 # Thm III.1 capacity premise
+
+
+@runtime_checkable
+class IndexModel(Protocol):
+    """What CAM needs from a learned index — nothing design-specific."""
+
+    family: str
+
+    @property
+    def size_bytes(self) -> float: ...    # in-memory footprint M_idx
+
+    def knobs(self) -> Dict[str, object]: ...
+
+    def page_ref_profile(self, workload: Workload,
+                         geom: CamGeometry) -> PageRefProfile: ...
+
+
+def uniform_eps_profile(workload: Workload, eps: int, geom: CamGeometry,
+                        n: Optional[int] = None) -> PageRefProfile:
+    """Shared profile for any uniformly error-bounded design (PGM, RadixSpline).
+
+    Dispatches on the workload shape; mixed workloads sum part histograms.
+    """
+    n = int(n if n is not None else workload.n)
+    num_pages = geom.num_pages(n)
+    if workload.kind == POINT:
+        counts, total = page_ref.point_page_refs(
+            jnp.asarray(workload.positions, jnp.int32), int(eps),
+            geom.c_ipp, num_pages)
+        e_dac = float(dac.expected_dac(eps, geom.c_ipp, geom.strategy))
+        return PageRefProfile(counts, float(total), e_dac)
+    if workload.kind == RANGE:
+        counts, total = page_ref.range_page_refs(
+            jnp.asarray(workload.positions, jnp.int32),
+            jnp.asarray(workload.hi_positions, jnp.int32),
+            int(eps), geom.c_ipp, num_pages, n)
+        e_dac = float(total) / max(workload.n_queries, 1)
+        return PageRefProfile(counts, float(total), e_dac)
+    if workload.kind == SORTED:
+        plo, phi = page_ref.page_intervals(
+            jnp.asarray(workload.positions, jnp.int32),
+            jnp.asarray(workload.hi_positions, jnp.int32),
+            geom.c_ipp, num_pages)
+        r_total, n_distinct = page_ref.sorted_workload_rn(plo, phi)
+        r_total, n_distinct = float(r_total), float(n_distinct)
+        return PageRefProfile(
+            counts=None, total_refs=r_total,
+            expected_dac=r_total / max(workload.n_queries, 1),
+            sorted_stream=True, distinct_pages=n_distinct,
+            min_capacity=1 + int(np.ceil(2 * eps / geom.c_ipp)))
+    if workload.kind == MIXED:
+        counts = jnp.zeros((num_pages,), jnp.float32)
+        total = 0.0
+        dac_mass = 0.0
+        for part in workload.parts:
+            prof = uniform_eps_profile(part, eps, geom, n)
+            if prof.sorted_stream:
+                raise ValueError("sorted parts cannot join a mixed histogram")
+            counts = counts + prof.counts
+            total += prof.total_refs
+            dac_mass += prof.expected_dac * part.n_queries
+        return PageRefProfile(counts, total,
+                              dac_mass / max(workload.n_queries, 1))
+    raise ValueError(f"unsupported workload kind {workload.kind!r}")
+
+
+@dataclasses.dataclass(frozen=True)
+class UniformEpsModel:
+    """Un-built stand-in for any error-bounded index: knob metadata only.
+
+    Lets tuners price an (eps, size) candidate — size typically from a fitted
+    power law — without constructing the index (paper §V-B).
+    """
+
+    eps: int
+    n: int
+    size_bytes: float
+    family: str = "uniform-eps"
+
+    def knobs(self) -> Dict[str, object]:
+        return {"eps": {"value": self.eps, "kind": "error_bound",
+                        "tunable": True}}
+
+    def page_ref_profile(self, workload: Workload,
+                         geom: CamGeometry) -> PageRefProfile:
+        return uniform_eps_profile(workload, self.eps, geom, self.n)
+
+
+# ---------------------------------------------------------------------------
+# Grid candidates / results
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class GridCandidate:
+    """One knob configuration in an ``estimate_grid`` sweep.
+
+    Either ``eps`` (uniform error bound — enables the fully batched kernel,
+    no index build needed) or ``index`` (a built :class:`IndexModel`, e.g. an
+    RMI whose per-leaf mixture has no uniform eps) must be set.
+    """
+
+    knob: object
+    size_bytes: float
+    eps: Optional[int] = None
+    index: Optional[IndexModel] = None
+
+    def __post_init__(self):
+        if self.eps is None and self.index is None:
+            raise ValueError("GridCandidate needs eps or index")
+
+
+@dataclasses.dataclass
+class GridResult:
+    """All candidate estimates + argmin, from one batched pass."""
+
+    estimates: Dict[object, CamEstimate]
+    best_knob: object
+    seconds: float
+    skipped: tuple = ()                   # knobs infeasible under the budget
+
+    @property
+    def best(self) -> CamEstimate:
+        return self.estimates[self.best_knob]
+
+    @property
+    def est_io(self) -> float:
+        return self.best.io_per_query
+
+
+# ---------------------------------------------------------------------------
+# The session
+# ---------------------------------------------------------------------------
+
+class CostSession:
+    """Reusable estimation context bound to one :class:`System`.
+
+    Holds the sampled-workload cache so repeated ``estimate``/``estimate_grid``
+    calls over the same workload (the tuning loop) never re-sample or
+    re-locate queries.
+    """
+
+    _SAMPLE_CACHE_MAX = 16
+
+    def __init__(self, system: System):
+        self.system = system
+        self._sample_cache: Dict[tuple, tuple] = {}
+
+    # ------------------------------------------------------------------ single
+    def estimate(self, index: IndexModel, workload: Workload,
+                 sample_rate: float = 1.0, seed: int = 0) -> CamEstimate:
+        """Algorithm 1 for one (index, workload) pair."""
+        t0 = time.perf_counter()
+        wl = self._sampled(workload, sample_rate, seed)
+        prof = index.page_ref_profile(wl, self.system.geom)
+        cap = self.system.capacity_for(index.size_bytes)
+        return self._finish(prof, wl, cap, t0)
+
+    # ------------------------------------------------------------------- grid
+    def estimate_grid(self, candidates: Sequence[GridCandidate],
+                      workload: Workload, sample_rate: float = 1.0,
+                      seed: int = 0) -> GridResult:
+        """Estimate a whole knob grid in one jitted/vmapped pass.
+
+        Page-ref state (positions, scatter targets) is shared across
+        candidates; histograms for uniform-eps candidates come from the
+        batched grid kernel, built indexes (RMI) contribute their mixture
+        profiles; ALL hit-rate fixed points then solve in a single vmapped
+        bisection.
+        """
+        t0 = time.perf_counter()
+        wl = self._sampled(workload, sample_rate, seed)
+        geom = self.system.geom
+        feasible, skipped = [], []
+        for c in candidates:
+            (feasible if self.system.capacity_for(c.size_bytes) >= 1
+             else skipped).append(c)
+        if not feasible:
+            raise ValueError("memory budget too small for any candidate index")
+
+        if wl.kind == SORTED:
+            # Theorem III.1 is already closed-form per candidate — no solver
+            # to batch; evaluate directly (fresh clock per candidate so
+            # estimation_seconds stays per-call, like the non-sorted path).
+            estimates = {}
+            for c in feasible:
+                c_t0 = time.perf_counter()
+                prof = (c.index.page_ref_profile(wl, geom)
+                        if c.index is not None
+                        else uniform_eps_profile(wl, c.eps, geom))
+                estimates[c.knob] = self._finish(
+                    prof, wl, self.system.capacity_for(c.size_bytes), c_t0)
+            best = min(estimates, key=lambda k: estimates[k].io_per_query)
+            return GridResult(estimates, best, time.perf_counter() - t0,
+                              tuple(c.knob for c in skipped))
+
+        uniform = [c for c in feasible if c.index is None]
+        backed = [c for c in feasible if c.index is not None]
+
+        rows, totals, dacs, caps, knobs = [], [], [], [], []
+        if uniform:
+            counts_u, totals_u, dacs_u = self._uniform_grid(uniform, wl)
+            rows.extend(counts_u)
+            totals.extend(totals_u)
+            dacs.extend(dacs_u)
+            caps.extend(self.system.capacity_for(c.size_bytes) for c in uniform)
+            knobs.extend(c.knob for c in uniform)
+        for c in backed:
+            prof = c.index.page_ref_profile(wl, geom)
+            rows.append(prof.counts)
+            totals.append(prof.total_refs)
+            dacs.append(prof.expected_dac)
+            caps.append(self.system.capacity_for(c.size_bytes))
+            knobs.append(c.knob)
+
+        counts = jnp.stack([jnp.asarray(r, jnp.float32) for r in rows])
+        sample_refs = jnp.asarray(totals, jnp.float32)
+        full_refs = sample_refs * wl.scale
+        h, n_distinct = cache_models.hit_rate_grid(
+            self.system.policy, counts, sample_refs, full_refs,
+            jnp.asarray(caps, jnp.float32))
+        h = np.asarray(h, np.float64)
+        n_distinct = np.asarray(n_distinct, np.float64)
+
+        elapsed = time.perf_counter() - t0
+        per = elapsed / max(len(knobs), 1)
+        estimates: Dict[object, CamEstimate] = {}
+        for i, knob in enumerate(knobs):
+            io = (1.0 - float(h[i])) * float(dacs[i])
+            estimates[knob] = CamEstimate(
+                io_per_query=io, hit_rate=float(h[i]), dac=float(dacs[i]),
+                capacity_pages=int(caps[i]),
+                total_refs=float(totals[i]) * wl.scale,
+                distinct_pages=float(n_distinct[i]),
+                estimation_seconds=per, policy=self.system.policy,
+                device_cost=self._device_cost(io))
+        best = min(estimates, key=lambda k: estimates[k].io_per_query)
+        return GridResult(estimates, best, elapsed,
+                          tuple(c.knob for c in skipped))
+
+    # -------------------------------------------------------------- internals
+    def _uniform_grid(self, cands: Sequence[GridCandidate], wl: Workload):
+        """(counts rows, totals, dacs) for uniform-eps candidates, batched."""
+        geom = self.system.geom
+        if wl.n is None:
+            raise ValueError("Workload.n (key-file size) required for "
+                             "grid estimation")
+        num_pages = geom.num_pages(int(wl.n))
+        eps_arr = jnp.asarray([c.eps for c in cands], jnp.int32)
+        eps_f = np.asarray([c.eps for c in cands], np.float64)
+        dac_per_query = np.asarray(
+            dac.expected_dac(eps_f, geom.c_ipp, geom.strategy), np.float64)
+
+        def grid_counts(w: Workload):
+            if w.kind == POINT:
+                d_radius = page_ref.lut_radius(max(c.eps for c in cands),
+                                               geom.c_ipp)
+                counts, totals = page_ref.point_page_refs_grid(
+                    jnp.asarray(w.positions, jnp.int32), eps_arr, d_radius,
+                    geom.c_ipp, num_pages)
+                dac_mass = dac_per_query * w.n_queries
+                return counts, np.asarray(totals, np.float64), dac_mass
+            if w.kind == RANGE:
+                counts, totals = page_ref.range_page_refs_grid(
+                    jnp.asarray(w.positions, jnp.int32),
+                    jnp.asarray(w.hi_positions, jnp.int32),
+                    eps_arr, geom.c_ipp, num_pages, int(wl.n))
+                totals = np.asarray(totals, np.float64)
+                return counts, totals, totals.copy()
+            if w.kind == MIXED:
+                counts = jnp.zeros((len(cands), num_pages), jnp.float32)
+                totals = np.zeros(len(cands))
+                dac_mass = np.zeros(len(cands))
+                for part in w.parts:
+                    c, t, d = grid_counts(part)
+                    counts, totals, dac_mass = counts + c, totals + t, dac_mass + d
+                return counts, totals, dac_mass
+            raise ValueError(f"grid estimation unsupported for {w.kind!r}")
+
+        counts, totals, dac_mass = grid_counts(wl)
+        dacs = dac_mass / max(wl.n_queries, 1)
+        return list(counts), list(totals), list(dacs)
+
+    def _finish(self, prof: PageRefProfile, wl: Workload, cap: int,
+                t0: float) -> CamEstimate:
+        """Compose a profile with the cache model — Eq. 3 (legacy-identical)."""
+        if prof.sorted_stream:
+            r, nd = prof.total_refs, float(prof.distinct_pages)
+            h = 0.0 if cap < prof.min_capacity else (r - nd) / max(r, 1e-30)
+            io = (1.0 - h) * prof.expected_dac
+            return CamEstimate(io, h, prof.expected_dac, cap, r, nd,
+                               time.perf_counter() - t0, "sorted-closed-form",
+                               device_cost=self._device_cost(io))
+        full_refs = prof.total_refs * wl.scale
+        n_distinct = (float(prof.distinct_pages)
+                      if prof.distinct_pages is not None
+                      else float(jnp.sum(prof.counts > 0)))
+        if cap <= 0:
+            h = 0.0
+        else:
+            probs = prof.counts / jnp.maximum(float(prof.total_refs), 1e-30)
+            h = float(cache_models.hit_rate(
+                self.system.policy, cap, probs, total_requests=full_refs,
+                distinct_pages=n_distinct))
+        io = (1.0 - h) * float(prof.expected_dac)
+        return CamEstimate(
+            io_per_query=io, hit_rate=h, dac=float(prof.expected_dac),
+            capacity_pages=cap, total_refs=float(full_refs),
+            distinct_pages=n_distinct,
+            estimation_seconds=time.perf_counter() - t0,
+            policy=self.system.policy, device_cost=self._device_cost(io))
+
+    def _device_cost(self, io_per_query: float) -> Optional[float]:
+        """Compose with the device model (§III-A): one run per query."""
+        if self.system.device is None:
+            return None
+        return float(self.system.device.cost(np.asarray([io_per_query])))
+
+    def _sampled(self, workload: Workload, rate: float, seed: int) -> Workload:
+        if rate >= 1.0:
+            return workload
+        # Keyed by identity (the workload object is the unit of reuse in a
+        # tuning loop); the strong reference in the value keeps the id valid
+        # for the entry's lifetime.  FIFO-bounded so a long-lived session
+        # over many workloads cannot pin arbitrary amounts of array memory.
+        key = (id(workload), rate, seed)
+        hit = self._sample_cache.get(key)
+        if hit is not None:
+            return hit[1]
+        sampled = workload.sample(rate, seed)
+        while len(self._sample_cache) >= self._SAMPLE_CACHE_MAX:
+            self._sample_cache.pop(next(iter(self._sample_cache)))
+        self._sample_cache[key] = (workload, sampled)
+        return sampled

@@ -1,0 +1,149 @@
+"""Workload — the query-side noun of the CostSession API.
+
+A :class:`Workload` owns everything CAM needs to know about the queries and
+nothing about any particular index: the query keys, their *true positions*
+(ranks in the sorted key file — located once via ``searchsorted`` and cached,
+so every (knob, budget) candidate reuses them), and the query shape
+(point / range / sorted probe stream / mixed).
+
+``sample()`` is the single implementation of CAM-x workload sampling that
+previously existed as three divergent copies (``cam.sample_workload`` plus
+inline variants in ``cam.estimate_range_io`` and ``rmi_tuner``).  Sampling
+keeps positional order (required by the sorted closed form) and remembers the
+pre-sample query count so compulsory-miss scaling stays exact.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import numpy as np
+
+__all__ = ["Workload", "locate", "subsample_indices"]
+
+POINT = "point"
+RANGE = "range"
+SORTED = "sorted"
+MIXED = "mixed"
+
+_KINDS = (POINT, RANGE, SORTED, MIXED)
+
+
+def locate(keys: np.ndarray, query_keys: np.ndarray) -> np.ndarray:
+    """True ranks of ``query_keys`` in the sorted key file (LocateQueries).
+
+    Computed ONCE per (dataset, workload) pair; every estimation call reuses
+    the cached result — this is where CAM's tuning-loop speedup starts.
+    """
+    keys = np.asarray(keys)
+    pos = np.searchsorted(keys, np.asarray(query_keys), side="left")
+    return np.minimum(pos, keys.shape[0] - 1).astype(np.int64)
+
+
+def subsample_indices(n: int, rate: float, seed: int = 0) -> np.ndarray:
+    """Order-preserving CAM-x sample indices (sorted choice w/o replacement)."""
+    rng = np.random.default_rng(seed)
+    k = max(1, int(round(n * rate)))
+    return np.sort(rng.choice(n, size=k, replace=False))
+
+
+@dataclasses.dataclass(frozen=True)
+class Workload:
+    """Index-agnostic query description.
+
+    Fields
+    ------
+    kind:          "point" | "range" | "sorted" | "mixed".
+    positions:     point → true ranks; range → lower-bound ranks;
+                   sorted → per-probe window-lo positions.
+    hi_positions:  range → upper-bound ranks; sorted → window-hi positions.
+    query_keys:    original query keys (needed by routing indexes, e.g. RMI).
+    n:             size of the indexed key file (defines the page count).
+    parts:         sub-workloads of a mixed workload.
+    base_queries:  pre-sampling |Q| (compulsory-miss scaling of CAM-x).
+    """
+
+    kind: str
+    positions: Optional[np.ndarray] = None
+    hi_positions: Optional[np.ndarray] = None
+    query_keys: Optional[np.ndarray] = None
+    n: Optional[int] = None
+    parts: Tuple["Workload", ...] = ()
+    base_queries: Optional[int] = None
+
+    def __post_init__(self):
+        if self.kind not in _KINDS:
+            raise ValueError(f"unknown workload kind {self.kind!r}; "
+                             f"expected one of {_KINDS}")
+
+    # ------------------------------------------------------------------ build
+    @classmethod
+    def point(cls, positions: np.ndarray, *, n: Optional[int] = None,
+              query_keys: Optional[np.ndarray] = None) -> "Workload":
+        """Point lookups from pre-located true ranks."""
+        return cls(POINT, positions=np.asarray(positions, np.int64),
+                   query_keys=None if query_keys is None else np.asarray(query_keys),
+                   n=n)
+
+    @classmethod
+    def from_keys(cls, keys: np.ndarray, query_keys: np.ndarray) -> "Workload":
+        """Point lookups from raw query keys — locates once and caches."""
+        keys = np.asarray(keys)
+        return cls.point(locate(keys, query_keys), n=int(keys.shape[0]),
+                         query_keys=np.asarray(query_keys))
+
+    @classmethod
+    def range_scan(cls, lo_positions: np.ndarray, hi_positions: np.ndarray,
+                   *, n: Optional[int] = None) -> "Workload":
+        """Range scans [lo, hi] given rank bounds."""
+        return cls(RANGE, positions=np.asarray(lo_positions, np.int64),
+                   hi_positions=np.asarray(hi_positions, np.int64), n=n)
+
+    @classmethod
+    def sorted_stream(cls, window_lo: np.ndarray, window_hi: np.ndarray,
+                      *, n: Optional[int] = None) -> "Workload":
+        """Sorted probe stream (joins): per-probe position windows, in order."""
+        return cls(SORTED, positions=np.asarray(window_lo, np.int64),
+                   hi_positions=np.asarray(window_hi, np.int64), n=n)
+
+    @classmethod
+    def mixed(cls, *parts: "Workload") -> "Workload":
+        """Composite workload; page-reference histograms add across parts."""
+        if not parts:
+            raise ValueError("mixed workload needs at least one part")
+        ns = {p.n for p in parts if p.n is not None}
+        if len(ns) > 1:
+            raise ValueError(f"mixed parts disagree on key-file size: {ns}")
+        return cls(MIXED, parts=tuple(parts), n=ns.pop() if ns else None)
+
+    # ------------------------------------------------------------- properties
+    @property
+    def n_queries(self) -> int:
+        if self.kind == MIXED:
+            return sum(p.n_queries for p in self.parts)
+        return 0 if self.positions is None else int(self.positions.shape[0])
+
+    @property
+    def scale(self) -> float:
+        """Full-workload / sample request-volume ratio (compulsory branch)."""
+        base = self.base_queries if self.base_queries is not None else self.n_queries
+        return max(1.0, base / max(self.n_queries, 1))
+
+    # --------------------------------------------------------------- sampling
+    def sample(self, rate: float, seed: int = 0) -> "Workload":
+        """CAM-x: estimate from an x% sample (order preserved)."""
+        if rate >= 1.0:
+            return self
+        if self.kind == MIXED:
+            return dataclasses.replace(
+                self, parts=tuple(p.sample(rate, seed) for p in self.parts))
+        idx = subsample_indices(self.n_queries, rate, seed)
+        take = lambda a: None if a is None else a[idx]  # noqa: E731
+        return dataclasses.replace(
+            self,
+            positions=take(self.positions),
+            hi_positions=take(self.hi_positions),
+            query_keys=take(self.query_keys),
+            base_queries=self.base_queries if self.base_queries is not None
+            else self.n_queries,
+        )

@@ -1,4 +1,5 @@
-"""Learned-index substrate: ε-PLA, PGM, RMI, RadixSpline, disk layout."""
-from repro.index import disk_layout, pgm, pla, radixspline, rmi
+"""Learned-index substrate: ε-PLA, PGM, RMI, RadixSpline, disk layout,
+and the IndexModel adapters that plug every family into CostSession."""
+from repro.index import adapters, disk_layout, pgm, pla, radixspline, rmi
 
-__all__ = ["disk_layout", "pgm", "pla", "radixspline", "rmi"]
+__all__ = ["adapters", "disk_layout", "pgm", "pla", "radixspline", "rmi"]

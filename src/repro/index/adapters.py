@@ -1,0 +1,171 @@
+"""IndexModel adapters: one estimation surface over PGM, RMI and RadixSpline.
+
+Each adapter exposes the :class:`repro.core.session.IndexModel` protocol —
+``size_bytes``, knob metadata, and ``page_ref_profile(workload, geom)``
+returning the Eq. 12/13/14 histograms — so a :class:`CostSession` can price
+any of the three families (and grid-tune their knobs) without knowing which
+design it is holding.  ``window()`` exposes the last-mile search windows the
+replay oracle needs, making every adapter directly checkable against ground
+truth.
+
+PGM and RadixSpline are uniformly error-bounded, so both delegate to the
+shared ``uniform_eps_profile`` — RadixSpline's greedy spline corridor gives
+the same |predict - rank| <= eps guarantee, which is exactly the paper's
+index-agnosticism claim (§I property i) and what makes RadixSpline *tunable*
+here for the first time: eps is its knob, same as PGM's.
+
+RMI has no global bound; its profile is the §V-C workload-weighted mixture of
+per-leaf Eq. 12 patterns with leaf error bounds quantized up to powers of two
+(bounds LUT instantiations at ~log2(max_eps), windows stay conservative).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+import numpy as np
+
+from repro.core import dac as dac_mod
+from repro.core import page_ref
+from repro.core.cam import CamGeometry
+from repro.core.session import PageRefProfile, uniform_eps_profile
+from repro.core.workload import POINT, Workload
+from repro.index import pgm as pgm_mod
+from repro.index import radixspline as rs_mod
+from repro.index import rmi as rmi_mod
+
+__all__ = ["PGMAdapter", "RMIAdapter", "RadixSplineAdapter", "quantize_eps",
+           "ADAPTERS"]
+
+
+def quantize_eps(eps: np.ndarray) -> np.ndarray:
+    """Round leaf error bounds up to powers of two (conservative windows)."""
+    eps = np.maximum(np.asarray(eps, np.int64), 1)
+    return (2 ** np.ceil(np.log2(eps))).astype(np.int64)
+
+
+@dataclasses.dataclass(frozen=True)
+class PGMAdapter:
+    """Disk-based PGM-index under the IndexModel protocol (knob: eps)."""
+
+    index: pgm_mod.PGMIndex
+    family: str = "pgm"
+
+    @classmethod
+    def build(cls, keys: np.ndarray, eps: int) -> "PGMAdapter":
+        return cls(pgm_mod.build_pgm(keys, eps))
+
+    @property
+    def size_bytes(self) -> float:
+        return float(self.index.size_bytes)
+
+    @property
+    def eps(self) -> int:
+        return self.index.eps
+
+    @property
+    def n(self) -> int:
+        return self.index.n
+
+    def knobs(self) -> Dict[str, object]:
+        return {"eps": {"value": self.index.eps, "kind": "error_bound",
+                        "tunable": True}}
+
+    def page_ref_profile(self, workload: Workload,
+                         geom: CamGeometry) -> PageRefProfile:
+        return uniform_eps_profile(workload, self.index.eps, geom, self.index.n)
+
+    def window(self, query_keys: np.ndarray):
+        return self.index.window(query_keys)
+
+
+@dataclasses.dataclass(frozen=True)
+class RadixSplineAdapter:
+    """RadixSpline under the IndexModel protocol (knob: corridor eps).
+
+    The fixed-eps spline corridor makes the whole uniform-eps machinery —
+    including batched grid tuning — apply unchanged.
+    """
+
+    index: rs_mod.RadixSplineIndex
+    family: str = "radixspline"
+
+    @classmethod
+    def build(cls, keys: np.ndarray, eps: int,
+              radix_bits: int = 16) -> "RadixSplineAdapter":
+        return cls(rs_mod.build_radixspline(keys, eps, radix_bits))
+
+    @property
+    def size_bytes(self) -> float:
+        return float(self.index.size_bytes)
+
+    @property
+    def eps(self) -> int:
+        return self.index.eps
+
+    @property
+    def n(self) -> int:
+        return self.index.n
+
+    def knobs(self) -> Dict[str, object]:
+        return {"eps": {"value": self.index.eps, "kind": "error_bound",
+                        "tunable": True},
+                "radix_bits": {"value": self.index.radix_bits,
+                               "kind": "lookup_accel", "tunable": False}}
+
+    def page_ref_profile(self, workload: Workload,
+                         geom: CamGeometry) -> PageRefProfile:
+        return uniform_eps_profile(workload, self.index.eps, geom, self.index.n)
+
+    def window(self, query_keys: np.ndarray):
+        return self.index.window(query_keys)
+
+
+@dataclasses.dataclass(frozen=True)
+class RMIAdapter:
+    """Two-layer RMI under the IndexModel protocol (knob: branch factor)."""
+
+    index: rmi_mod.RMIIndex
+    family: str = "rmi"
+
+    @classmethod
+    def build(cls, keys: np.ndarray, branch: int) -> "RMIAdapter":
+        return cls(rmi_mod.build_rmi(keys, branch))
+
+    @property
+    def size_bytes(self) -> float:
+        return float(self.index.size_bytes)
+
+    @property
+    def n(self) -> int:
+        return self.index.n
+
+    def knobs(self) -> Dict[str, object]:
+        return {"branch": {"value": self.index.branch, "kind": "fanout",
+                           "tunable": True}}
+
+    def page_ref_profile(self, workload: Workload,
+                         geom: CamGeometry) -> PageRefProfile:
+        """§V-C mixture: per-query leaf error bounds, quantized to pow2."""
+        if workload.kind != POINT or workload.query_keys is None:
+            raise ValueError("RMI profiling needs a point workload with "
+                             "query_keys (the root must route them)")
+        index = self.index
+        leaf = index.route(workload.query_keys)
+        eps_q = quantize_eps(index.leaf_eps[leaf])
+        num_pages = geom.num_pages(index.n)
+        counts, total = page_ref.point_page_refs_mixed_eps(
+            workload.positions, eps_q, geom.c_ipp, num_pages)
+        weights = np.bincount(leaf, minlength=index.branch).astype(np.float64)
+        weights /= max(weights.sum(), 1.0)
+        e_dac = float(dac_mod.expected_dac_rmi(
+            index.leaf_eps, weights, geom.c_ipp, geom.strategy))
+        return PageRefProfile(counts, float(total), e_dac)
+
+    def window(self, query_keys: np.ndarray):
+        lo, hi, _ = self.index.window(query_keys)
+        return lo, hi
+
+
+ADAPTERS = {"pgm": PGMAdapter, "rmi": RMIAdapter,
+            "radixspline": RadixSplineAdapter}

@@ -19,7 +19,7 @@ from repro.join.hybrid import JoinCostParams
 from repro.sim.machine import BufferedDisk, MachineParams
 from repro.tuning.fit import ols
 
-__all__ = ["calibrate"]
+__all__ = ["calibrate", "calibrate_system"]
 
 
 def _point_runs(index, layout, capacity, policy, machine, rng, inner_n, n_runs=24):
@@ -52,6 +52,27 @@ def _range_runs(index, layout, capacity, policy, machine, rng, inner_n, n_runs=2
         total = machine.range_op_setup + span * machine.cpu_per_page_scan + io_t
         rows.append((span, misses, io_t, total))
     return np.asarray(rows, np.float64)
+
+
+def calibrate_system(
+    index,
+    inner_keys: np.ndarray,
+    system,
+    machine: MachineParams = MachineParams(),
+    seed: int = 0,
+) -> JoinCostParams:
+    """CostSession-era entry point: derive layout, capacity and policy from a
+    :class:`repro.core.session.System` instead of four loose arguments.
+
+    ``index`` may be a raw index or an IndexModel adapter — anything with
+    ``size_bytes`` charges its footprint against the memory budget.
+    """
+    layout = PageLayout(c_ipp=system.geom.c_ipp,
+                        page_bytes=system.geom.page_bytes)
+    index_bytes = float(getattr(index, "size_bytes", 0.0))
+    capacity = max(1, system.capacity_for(index_bytes))
+    return calibrate(index, inner_keys, layout, capacity,
+                     policy=system.policy, machine=machine, seed=seed)
 
 
 def calibrate(

@@ -1,4 +1,4 @@
 """Memory-budgeted index tuning via CAM (paper §V) + cache-oblivious baselines."""
-from repro.tuning import fit, pgm_tuner, rmi_tuner
+from repro.tuning import fit, pgm_tuner, rmi_tuner, rs_tuner
 
-__all__ = ["fit", "pgm_tuner", "rmi_tuner"]
+__all__ = ["fit", "pgm_tuner", "rmi_tuner", "rs_tuner"]

@@ -7,6 +7,8 @@ Given total memory M split between index and buffer, pick
 M_idx(eps) follows the fitted dataset-specific power law a*eps^-b + c from a
 few sampled constructions (the multicriteria-PGM fitting trick), so the dense
 eps grid costs one CAM estimate per candidate — no index builds in the loop.
+The whole grid now prices through ``CostSession.estimate_grid``: one jitted
+pass over shared page-ref state instead of a per-candidate Python loop.
 
 The baseline ``multicriteria_pgm_tune`` reproduces the cache-oblivious tuner:
 it receives a fixed index-space budget (a reserved fraction of M) and picks
@@ -21,11 +23,13 @@ from typing import Dict, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.core import cam
+from repro.core.session import CostSession, GridCandidate, System
+from repro.core.workload import Workload
 from repro.index import pgm
 from repro.tuning import fit
 
 __all__ = ["PGMTuneResult", "default_eps_grid", "profile_pgm_size_model",
-           "cam_tune_pgm", "multicriteria_pgm_tune"]
+           "cam_tune_pgm", "cam_tune_uniform_eps", "multicriteria_pgm_tune"]
 
 
 @dataclasses.dataclass
@@ -57,6 +61,29 @@ def profile_pgm_size_model(
     return model, time.perf_counter() - t0
 
 
+def cam_tune_uniform_eps(
+    workload: Workload,
+    size_model: fit.PowerLawFit,
+    system: System,
+    eps_grid: Sequence[int],
+    sample_rate: float = 1.0,
+) -> Tuple[int, Dict[int, cam.CamEstimate], float]:
+    """Shared grid tuner for any uniformly error-bounded family.
+
+    One batched ``estimate_grid`` call prices the entire eps grid; the
+    session itself drops infeasible candidates (no room for even one buffer
+    page) into ``GridResult.skipped`` and raises when none remain.
+    Returns (best_eps, estimates, grid_seconds).
+    """
+    session = CostSession(system)
+    cands = [
+        GridCandidate(knob=int(e), eps=int(e), size_bytes=float(size_model(e)))
+        for e in eps_grid
+    ]
+    res = session.estimate_grid(cands, workload, sample_rate=sample_rate)
+    return int(res.best_knob), dict(res.estimates), res.seconds
+
+
 def cam_tune_pgm(
     keys: np.ndarray,
     positions: np.ndarray,
@@ -70,18 +97,9 @@ def cam_tune_pgm(
     t0 = time.perf_counter()
     size_model, _ = profile_pgm_size_model(keys, sample_eps)
     grid = tuple(eps_grid) if eps_grid is not None else default_eps_grid()
-    estimates: Dict[int, cam.CamEstimate] = {}
-    for eps in grid:
-        idx_bytes = float(size_model(eps))
-        if idx_bytes >= memory_budget - geom.page_bytes:
-            continue  # no room left for even one buffer page
-        estimates[eps] = cam.estimate_point_io(
-            positions, eps, len(keys), geom, memory_budget, idx_bytes,
-            policy=policy, sample_rate=sample_rate,
-        )
-    if not estimates:
-        raise ValueError("memory budget too small for any candidate index")
-    best_eps = min(estimates, key=lambda e: estimates[e].io_per_query)
+    best_eps, estimates, _ = cam_tune_uniform_eps(
+        Workload.point(positions, n=len(keys)), size_model,
+        System(geom, memory_budget, policy), grid, sample_rate)
     return PGMTuneResult(
         best_eps=best_eps,
         est_io=estimates[best_eps].io_per_query,

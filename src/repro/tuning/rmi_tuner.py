@@ -8,23 +8,28 @@ it analytically from the per-leaf error bounds, bypassing last-mile execution:
     Pr_req   = workload-weighted mixture of leaf-specific Eq. 12 patterns
 
 Leaf error bounds are quantized up to powers of two before the mixture
-estimate, bounding the number of LUT instantiations at ~log2(max_eps) while
-keeping every window conservative (a TPU/XLA-friendly adaptation: few big
-vectorized passes instead of thousands of per-leaf loops).
+estimate (see ``repro.index.adapters.quantize_eps``), bounding the number of
+LUT instantiations at ~log2(max_eps) while keeping every window conservative.
+The built candidates price through one ``CostSession.estimate_grid`` call, so
+all hit-rate fixed points solve in a single vmapped pass.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
+import warnings
 from typing import Dict, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.core import cam, cache_models, dac, page_ref
+from repro.core import cam
+from repro.core.session import CostSession, GridCandidate, System
+from repro.core.workload import Workload
 from repro.index import rmi
-from repro.tuning import fit as fit_mod
+from repro.index.adapters import RMIAdapter
 
-__all__ = ["RMITuneResult", "default_branch_grid", "cam_tune_rmi", "cdfshop_tune_rmi"]
+__all__ = ["RMITuneResult", "default_branch_grid", "cam_tune_rmi",
+           "estimate_rmi_io", "cdfshop_tune_rmi"]
 
 
 @dataclasses.dataclass
@@ -44,12 +49,6 @@ def default_branch_grid(lo: int = 2**6, hi: int = 2**16) -> Tuple[int, ...]:
     return tuple(grid)
 
 
-def _quantize_eps(eps: np.ndarray) -> np.ndarray:
-    """Round leaf error bounds up to powers of two (conservative windows)."""
-    eps = np.maximum(np.asarray(eps, np.int64), 1)
-    return (2 ** np.ceil(np.log2(eps))).astype(np.int64)
-
-
 def estimate_rmi_io(
     index: rmi.RMIIndex,
     positions: np.ndarray,
@@ -59,40 +58,14 @@ def estimate_rmi_io(
     policy: str = "lru",
     sample_rate: float = 1.0,
 ) -> cam.CamEstimate:
-    """CAM estimate for a built RMI (workload-weighted leaf mixture)."""
-    t0 = time.perf_counter()
-    pos = np.asarray(positions)
-    qk = np.asarray(query_keys)
-    if sample_rate < 1.0:
-        rng = np.random.default_rng(0)
-        k = max(1, int(round(pos.shape[0] * sample_rate)))
-        sel = np.sort(rng.choice(pos.shape[0], size=k, replace=False))
-        pos, qk = pos[sel], qk[sel]
-    leaf = index.route(qk)
-    eps_q = _quantize_eps(index.leaf_eps[leaf])
-    num_pages = geom.num_pages(index.n)
-    counts, total = page_ref.point_page_refs_mixed_eps(pos, eps_q, geom.c_ipp, num_pages)
-
-    weights = np.bincount(leaf, minlength=index.branch).astype(np.float64)
-    weights /= max(weights.sum(), 1.0)
-    e_dac = float(dac.expected_dac_rmi(index.leaf_eps, weights, geom.c_ipp, geom.strategy))
-
-    capv = cam.capacity_pages(memory_budget, index.size_bytes, geom.page_bytes)
-    sample_refs = float(total)
-    total_f = sample_refs * max(1.0, len(positions) / max(len(pos), 1))
-    n_distinct = float((np.asarray(counts) > 0).sum())
-    if capv <= 0:
-        h = 0.0
-    else:
-        import jax.numpy as jnp
-
-        probs = jnp.asarray(counts) / max(sample_refs, 1e-30)
-        h = float(cache_models.hit_rate(policy, capv, probs,
-                                        total_requests=total_f,
-                                        distinct_pages=n_distinct))
-    io = (1.0 - h) * e_dac
-    return cam.CamEstimate(io, h, e_dac, capv, total_f, n_distinct,
-                           time.perf_counter() - t0, policy)
+    """CAM estimate for a built RMI (deprecated shim over CostSession)."""
+    warnings.warn(
+        "estimate_rmi_io is deprecated; use CostSession.estimate with an "
+        "RMIAdapter and a point Workload carrying query_keys",
+        DeprecationWarning, stacklevel=2)
+    session = CostSession(System(geom, memory_budget, policy))
+    wl = Workload.point(positions, n=index.n, query_keys=query_keys)
+    return session.estimate(RMIAdapter(index), wl, sample_rate=sample_rate)
 
 
 def cam_tune_rmi(
@@ -107,21 +80,21 @@ def cam_tune_rmi(
 ) -> RMITuneResult:
     t0 = time.perf_counter()
     grid = tuple(branch_grid) if branch_grid is not None else default_branch_grid()
-    estimates: Dict[int, cam.CamEstimate] = {}
+    session = CostSession(System(geom, memory_budget, policy))
+    wl = Workload.point(positions, n=len(keys), query_keys=query_keys)
+    cands = []
     indexes: Dict[int, rmi.RMIIndex] = {}
     for branch in grid:
         index = rmi.build_rmi(keys, branch)
-        if index.size_bytes >= memory_budget - geom.page_bytes:
-            continue
         indexes[branch] = index
-        estimates[branch] = estimate_rmi_io(
-            index, positions, query_keys, geom, memory_budget,
-            policy=policy, sample_rate=sample_rate,
-        )
-    if not estimates:
-        raise ValueError("memory budget too small for any RMI candidate")
-    best = min(estimates, key=lambda b: estimates[b].io_per_query)
-    return RMITuneResult(best, estimates[best].io_per_query, estimates, indexes,
+        cands.append(GridCandidate(knob=branch, size_bytes=index.size_bytes,
+                                   index=RMIAdapter(index)))
+    # estimate_grid drops budget-infeasible branches into res.skipped and
+    # raises when none remain.
+    res = session.estimate_grid(cands, wl, sample_rate=sample_rate)
+    best = int(res.best_knob)
+    return RMITuneResult(best, res.estimates[best].io_per_query,
+                         dict(res.estimates), indexes,
                          time.perf_counter() - t0)
 
 

@@ -1,0 +1,40 @@
+"""Optional-hypothesis shim.
+
+``hypothesis`` is a dev-only dependency (declared in pyproject's ``dev``
+extra).  When it is installed, this module re-exports the real API; when it
+is not, property-based tests degrade to skips while every plain test in the
+same module keeps running — the suite must never ERROR at collection over a
+missing dev extra.
+"""
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    import pytest
+
+    HAVE_HYPOTHESIS = False
+
+    class _AnyStrategy:
+        """Accepts any ``st.<name>(...)`` call made at decoration time."""
+
+        def __getattr__(self, name):
+            return lambda *args, **kwargs: None
+
+    st = _AnyStrategy()
+
+    def settings(*args, **kwargs):
+        return lambda fn: fn
+
+    def given(*args, **kwargs):
+        def deco(fn):
+            # Replace the test with a zero-fixture stub (pytest ignores
+            # *args/**kwargs when collecting fixture names) that skips.
+            def stub(*a, **k):
+                pytest.skip("hypothesis not installed (pip install .[dev])")
+
+            stub.__name__ = fn.__name__
+            stub.__doc__ = fn.__doc__
+            return stub
+
+        return deco

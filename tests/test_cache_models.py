@@ -3,7 +3,7 @@ and the sorted-workload theorem (exact, property-based)."""
 import numpy as np
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st
 
 from repro.core import cache_models as cm
 from repro.core import replay

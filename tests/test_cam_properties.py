@@ -1,7 +1,7 @@
 """Property-based invariants of the CAM pipeline (hypothesis)."""
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st
 
 from repro.core import cam, cache_models
 from repro.data.datasets import make_dataset

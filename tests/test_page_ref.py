@@ -3,7 +3,7 @@ their exact finite sums, histogram mass conservation, range diff-array."""
 import numpy as np
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st
 
 from repro.core import dac, page_ref
 

@@ -1,0 +1,241 @@
+"""CostSession API tests.
+
+* Golden equivalence: the session pipeline must reproduce the seed CAM math
+  (an inline re-implementation of Algorithm 1 from the raw kernels) to 1e-6,
+  and the deprecated ``cam.estimate_*`` shims must agree exactly.
+* Grid equivalence: ``estimate_grid`` (one jitted pass) must match the
+  candidate-by-candidate loop.
+* Estimator-vs-replay oracle: ONE parametrized test runs all three index
+  families (PGM, RMI, RadixSpline) through the same session and checks the
+  estimate against ground-truth trace replay.
+"""
+import warnings
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import cache_models, cam, dac, page_ref
+from repro.core.qerror import q_error
+from repro.core.replay import replay_windows
+from repro.core.session import (CostSession, GridCandidate, System,
+                                UniformEpsModel)
+from repro.core.workload import Workload, locate
+from repro.data.datasets import make_dataset
+from repro.data.workloads import WorkloadSpec, point_workload, range_workload
+from repro.index.adapters import (ADAPTERS, PGMAdapter, RMIAdapter,
+                                  RadixSplineAdapter)
+from repro.tuning.pgm_tuner import cam_tune_pgm
+from repro.tuning.rmi_tuner import cam_tune_rmi
+from repro.tuning.rs_tuner import cam_tune_radixspline
+
+GEOM = cam.CamGeometry()
+BUDGET = 3 << 20
+
+
+@pytest.fixture(scope="module")
+def world():
+    keys = make_dataset("books", 200_000, seed=1)
+    qk, qpos = point_workload(keys, 20_000, WorkloadSpec("w4", seed=3))
+    return keys, qk, qpos
+
+
+def _seed_point_oracle(positions, eps, n, geom, budget, index_bytes, policy):
+    """The seed repo's estimate_point_io math, re-derived from raw kernels."""
+    counts, total = page_ref.point_page_refs(
+        jnp.asarray(positions, jnp.int32), int(eps), geom.c_ipp,
+        geom.num_pages(n))
+    e_dac = float(dac.expected_dac(eps, geom.c_ipp, geom.strategy))
+    capv = cam.capacity_pages(budget, index_bytes, geom.page_bytes)
+    n_distinct = float(jnp.sum(counts > 0))
+    if capv <= 0:
+        h = 0.0
+    else:
+        probs = counts / jnp.maximum(float(total), 1e-30)
+        h = float(cache_models.hit_rate(policy, capv, probs,
+                                        total_requests=float(total),
+                                        distinct_pages=n_distinct))
+    return (1.0 - h) * e_dac, h
+
+
+# ---------------------------------------------------------------------------
+# Golden equivalence
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("eps", [16, 128])
+@pytest.mark.parametrize("policy", ["lru", "fifo", "lfu"])
+def test_session_matches_seed_math_point(world, eps, policy):
+    keys, qk, qpos = world
+    n = len(keys)
+    io_ref, h_ref = _seed_point_oracle(qpos, eps, n, GEOM, BUDGET, 65_536,
+                                       policy)
+    session = CostSession(System(GEOM, BUDGET, policy))
+    est = session.estimate(UniformEpsModel(eps, n, 65_536.0),
+                           Workload.point(qpos, n=n))
+    assert abs(est.io_per_query - io_ref) < 1e-6
+    assert abs(est.hit_rate - h_ref) < 1e-6
+
+
+@pytest.mark.parametrize("eps", [16, 128])
+def test_legacy_shims_equal_session(world, eps):
+    keys, qk, qpos = world
+    n = len(keys)
+    session = CostSession(System(GEOM, BUDGET, "lru"))
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        legacy = cam.estimate_point_io(qpos, eps, n, GEOM, BUDGET, 65_536,
+                                       policy="lru", sample_rate=0.5)
+    new = session.estimate(UniformEpsModel(eps, n, 65_536.0),
+                           Workload.point(qpos, n=n), sample_rate=0.5)
+    assert abs(legacy.io_per_query - new.io_per_query) < 1e-6
+    assert abs(legacy.hit_rate - new.hit_rate) < 1e-6
+    assert legacy.capacity_pages == new.capacity_pages
+    assert abs(legacy.total_refs - new.total_refs) < 1e-3
+
+
+def test_legacy_range_and_sorted_shims(world):
+    keys, qk, qpos = world
+    n = len(keys)
+    _, _, lo_pos, hi_pos = range_workload(keys, 5_000, WorkloadSpec("w4", seed=3))
+    session = CostSession(System(GEOM, BUDGET, "lru"))
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        legacy_r = cam.estimate_range_io(lo_pos, hi_pos, 64, n, GEOM, BUDGET,
+                                         65_536)
+        wlo = np.sort(qpos)
+        legacy_s = cam.estimate_sorted_io(wlo - 64, wlo + 64, 64, n, GEOM,
+                                          BUDGET, 65_536)
+    new_r = session.estimate(UniformEpsModel(64, n, 65_536.0),
+                             Workload.range_scan(lo_pos, hi_pos, n=n))
+    new_s = session.estimate(UniformEpsModel(64, n, 65_536.0),
+                             Workload.sorted_stream(wlo - 64, wlo + 64, n=n))
+    assert abs(legacy_r.io_per_query - new_r.io_per_query) < 1e-6
+    assert abs(legacy_s.io_per_query - new_s.io_per_query) < 1e-6
+    assert new_s.policy == "sorted-closed-form"
+
+
+def test_locate_once_matches_generator_positions(world):
+    keys, qk, qpos = world
+    wl = Workload.from_keys(keys, qk)
+    np.testing.assert_array_equal(wl.positions, locate(keys, qk))
+    assert wl.n == len(keys)
+    # generator positions ARE ranks of the drawn keys, so locating the keys
+    # again must land on a position holding the same key
+    np.testing.assert_array_equal(keys[wl.positions], keys[qpos])
+
+
+def test_workload_sample_preserves_order_and_scale(world):
+    _, qk, qpos = world
+    wl = Workload.point(qpos, n=200_000, query_keys=qk)
+    s = wl.sample(0.25, seed=7)
+    assert s.n_queries == round(0.25 * wl.n_queries)
+    assert s.base_queries == wl.n_queries
+    assert abs(s.scale - 4.0) < 1e-9
+    # order-preserving: sampled positions appear in original relative order
+    sel = cam.sample_workload(qpos, 0.25, seed=7)
+    np.testing.assert_array_equal(s.positions, sel)
+    assert s.query_keys is not None and len(s.query_keys) == s.n_queries
+
+
+# ---------------------------------------------------------------------------
+# Grid equivalence
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("policy", ["lru", "fifo", "lfu"])
+def test_estimate_grid_matches_single_loop(world, policy):
+    keys, qk, qpos = world
+    n = len(keys)
+    session = CostSession(System(GEOM, BUDGET, policy))
+    wl = Workload.point(qpos, n=n)
+    grid = (8, 16, 32, 64, 128, 256, 512, 1024)
+    sizes = {e: 2e9 / e for e in grid}   # synthetic shrinking footprint
+    cands = [GridCandidate(knob=e, eps=e, size_bytes=sizes[e]) for e in grid]
+    res = session.estimate_grid(cands, wl)
+    kept = [e for e in grid if sizes[e] < BUDGET - GEOM.page_bytes]
+    assert set(res.estimates) == set(kept)
+    assert set(res.skipped) == set(grid) - set(kept)
+    for e in kept:
+        single = session.estimate(UniformEpsModel(e, n, sizes[e]), wl)
+        g = res.estimates[e]
+        tol = 1e-4 * max(single.io_per_query, 1e-3)
+        assert abs(g.io_per_query - single.io_per_query) < tol, (e, policy)
+        assert g.capacity_pages == single.capacity_pages
+
+
+def test_estimate_grid_range_and_mixed(world):
+    keys, qk, qpos = world
+    n = len(keys)
+    _, _, lo_pos, hi_pos = range_workload(keys, 5_000, WorkloadSpec("w4", seed=3))
+    session = CostSession(System(GEOM, BUDGET, "lru"))
+    wl = Workload.mixed(Workload.point(qpos, n=n),
+                        Workload.range_scan(lo_pos, hi_pos, n=n))
+    cands = [GridCandidate(knob=e, eps=e, size_bytes=65_536.0)
+             for e in (32, 128)]
+    res = session.estimate_grid(cands, wl)
+    for e in (32, 128):
+        single = session.estimate(UniformEpsModel(e, n, 65_536.0), wl)
+        g = res.estimates[e]
+        assert abs(g.io_per_query - single.io_per_query) \
+            < 1e-4 * max(single.io_per_query, 1e-3)
+    # mixed E[DAC] interpolates between the pure shapes' request volumes
+    assert res.estimates[32].dac > 1.0
+
+
+def test_estimate_grid_infeasible_budget_raises(world):
+    keys, _, qpos = world
+    session = CostSession(System(GEOM, 8192, "lru"))
+    cands = [GridCandidate(knob=64, eps=64, size_bytes=1e9)]
+    with pytest.raises(ValueError, match="memory budget too small"):
+        session.estimate_grid(cands, Workload.point(qpos, n=len(keys)))
+
+
+# ---------------------------------------------------------------------------
+# Estimator vs replay — the shared oracle across ALL THREE families
+# ---------------------------------------------------------------------------
+
+_BUILDERS = {
+    "pgm": lambda keys: PGMAdapter.build(keys, 64),
+    "rmi": lambda keys: RMIAdapter.build(keys, 1024),
+    "radixspline": lambda keys: RadixSplineAdapter.build(keys, 64),
+}
+
+
+@pytest.mark.parametrize("family", sorted(_BUILDERS))
+@pytest.mark.parametrize("policy", ["lru", "fifo"])
+def test_estimator_matches_replay_all_families(world, family, policy):
+    """The paper's index-agnosticism claim, enforced: one session, one
+    workload, three designs — every estimate must track ground truth."""
+    keys, qk, qpos = world
+    adapter = _BUILDERS[family](keys)
+    assert adapter.family == family and family in ADAPTERS
+    assert adapter.knobs()
+    # 2 MiB keeps capacity well below the page count: the IRM steady state is
+    # the regime CAM models (near-full caching is compulsory-miss noise).
+    system = System(GEOM, 2 << 20, policy)
+    est = CostSession(system).estimate(
+        adapter, Workload.point(qpos, n=len(keys), query_keys=qk))
+    cap = max(1, system.capacity_for(adapter.size_bytes))
+    lo, hi = adapter.window(qk)
+    misses = replay_windows(lo // GEOM.c_ipp, hi // GEOM.c_ipp, cap, policy)
+    assert float(q_error(est.io_per_query, misses.mean())) < 1.4, family
+
+
+@pytest.mark.parametrize("family,tune", [
+    ("pgm", lambda keys, qpos, qk: cam_tune_pgm(
+        keys, qpos, 2 << 20, GEOM, "lru", eps_grid=(16, 64, 256, 1024))),
+    ("rmi", lambda keys, qpos, qk: cam_tune_rmi(
+        keys, qpos, qk, 2 << 20, GEOM, "lru",
+        branch_grid=(256, 1024, 4096))),
+    ("radixspline", lambda keys, qpos, qk: cam_tune_radixspline(
+        keys, qpos, 2 << 20, GEOM, "lru", eps_grid=(16, 64, 256, 1024),
+        radix_bits=12)),
+])
+def test_grid_tuning_all_families(world, family, tune):
+    """All three families grid-tune through the same estimate_grid path."""
+    keys, qk, qpos = world
+    res = tune(keys, qpos, qk)
+    knob = res.best_eps if hasattr(res, "best_eps") else res.best_branch
+    assert knob in res.estimates
+    assert res.est_io == res.estimates[knob].io_per_query
+    assert all(e.io_per_query >= res.est_io - 1e-9
+               for e in res.estimates.values())
