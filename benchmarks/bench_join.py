@@ -1,38 +1,128 @@
-"""Fig. 11: end-to-end join — INLJ vs POINT-ONLY vs RANGE-ONLY vs HYBRID
-across the w1-w6 workload mixtures (1:20-scaled relation sizes)."""
+"""Fig. 11: end-to-end join through the JoinSession plan API.
+
+Three sections:
+
+* fig11/*    — INLJ vs POINT-ONLY vs RANGE-ONLY vs HYBRID across the w1-w6
+               outer mixtures, all executed as plans of one JoinSession;
+               ``choose`` column records whether CAM-predicted selection
+               matched the replayed best.
+* mix/*      — Workload.mixed read-blend outer streams (sorted-run / point
+               blends per the ROADMAP "workload shapes" item).
+* partition/ — vectorized Algorithm 2 vs the legacy per-probe Python loop
+               on the probe stream (golden-identical segments required);
+               speedup recorded to benchmarks/results/join_partition.json.
+
+Run directly with ``--smoke`` for CI-sized inputs:
+
+    python -m benchmarks.bench_join --smoke
+"""
 from __future__ import annotations
 
-from benchmarks.common import DEFAULT_N, LAYOUT, Timer, dataset, emit
+import json
+import pathlib
+import time
+
+import numpy as np
+
+from benchmarks.common import GEOM, dataset, emit
+from repro.core.session import System
+from repro.core.workload import Workload, locate
 from repro.data.workloads import WorkloadSpec, join_outer_keys
-from repro.index.pgm import build_pgm
-from repro.join.calibrate import calibrate
-from repro.join.executors import hybrid_join, inlj, point_only, range_only
+from repro.index.adapters import PGMAdapter
+from repro.join.hybrid import partition_probes, partition_probes_loop
+from repro.join.session import STRATEGIES, JoinSession
 
 BUFFER_MB = 2          # paper: 16MB vs 200M rows; scaled ~1:10
+RESULTS = pathlib.Path(__file__).parent / "results"
+
+
+def _session(keys, eps):
+    inner = PGMAdapter.build(keys, eps)
+    system = System(GEOM, memory_budget_bytes=(BUFFER_MB << 20)
+                    + inner.size_bytes, policy="lru")
+    s = JoinSession(inner, system, inner_keys=keys)
+    s.calibrate()
+    return s
+
+
+def _mixed_outer(keys, n_outer, sorted_frac, seed=9):
+    """Read-blend outer stream: a contiguous sorted run + mixture points."""
+    rng = np.random.default_rng(seed)
+    n_run = int(n_outer * sorted_frac)
+    parts = []
+    if n_outer - n_run:
+        qk = join_outer_keys(keys, n_outer - n_run, WorkloadSpec("w4", seed=seed))
+        parts.append(Workload.point(locate(keys, qk), n=len(keys),
+                                    query_keys=qk))
+    if n_run:
+        start = int(rng.integers(0, max(1, len(keys) - n_run)))
+        run = keys[start:start + n_run]
+        parts.append(Workload.point(locate(keys, run), n=len(keys),
+                                    query_keys=run))
+    return Workload.mixed(*parts)
 
 
 def run(n=4_000_000, n_outer=30_000, eps=64):
     keys = dataset("books", n)
-    idx = build_pgm(keys, eps)
-    capacity = (BUFFER_MB << 20) // LAYOUT.page_bytes
-    params = calibrate(idx, keys, LAYOUT, capacity)
+    session = _session(keys, eps)
+
+    # ---- fig11: the four strategies as plans + model-guided selection ----
     for wl in ("w1", "w2", "w3", "w4", "w5", "w6"):
         outer = join_outer_keys(keys, n_outer, WorkloadSpec(wl, seed=9))
-        stats = {}
-        for fn in (inlj, point_only, range_only):
-            st = fn(idx, keys, outer, LAYOUT, capacity)
-            stats[st.strategy] = st
-        st = hybrid_join(idx, keys, outer, LAYOUT, capacity, params=params,
-                         n_min=128, k_max=4096)
-        stats[st.strategy] = st
-        base = stats["inlj"].seconds
+        res = session.choose(outer, n_min=128, k_max=4096)
+        stats = {s: session.execute(res.plans[s]) for s in STRATEGIES}
+        best = min(stats, key=lambda s: stats[s].seconds)
+        hy = stats["hybrid"]
         emit(f"fig11/{wl}", 0.0,
              ";".join(f"{k}={v.seconds:.4f}s(io={v.physical_ios})"
                       for k, v in stats.items())
-             + f";hybrid_speedup_vs_inlj={base / max(stats['hybrid'].seconds, 1e-12):.2f}x"
-             + f";range_segs={stats['hybrid'].n_range_segments}"
-               f"/{stats['hybrid'].n_segments}")
+             + f";choose={res.strategy}(best={best},"
+               f"ratio={stats[res.strategy].seconds / max(stats[best].seconds, 1e-12):.2f})"
+             + f";hybrid_speedup_vs_inlj="
+               f"{stats['inlj'].seconds / max(hy.seconds, 1e-12):.2f}x"
+             + f";range_segs={hy.n_range_segments}/{hy.n_segments}")
+
+    # ---- mixed read-blend outer streams (Workload.mixed) ----
+    for frac in (0.0, 0.5, 0.9):
+        outer = _mixed_outer(keys, n_outer, frac)
+        res = session.choose(outer, n_min=128, k_max=4096)
+        stats = {s: session.execute(res.plans[s]) for s in STRATEGIES}
+        best = min(stats, key=lambda s: stats[s].seconds)
+        emit(f"mix/sorted{int(frac * 100):02d}", 0.0,
+             f"choose={res.strategy};best={best};"
+             f"ratio={stats[res.strategy].seconds / max(stats[best].seconds, 1e-12):.2f};"
+             + ";".join(f"{k}={v.seconds:.4f}s" for k, v in stats.items()))
+
+    # ---- vectorized vs loop Algorithm 2 ----
+    outer = join_outer_keys(keys, n_outer, WorkloadSpec("w4", seed=9))
+    plan = session.plan(outer, "hybrid", n_min=128, k_max=4096)
+    plo, phi = plan.page_lo, plan.page_hi
+    p = session.params
+    t0 = time.perf_counter()
+    segs_v = partition_probes(plo, phi, p, n_min=128, k_max=4096)
+    t_vec = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    segs_l = partition_probes_loop(plo, phi, p, n_min=128, k_max=4096)
+    t_loop = time.perf_counter() - t0
+    identical = segs_v == segs_l
+    record = {"n_probes": int(plo.shape[0]), "segments": len(segs_v),
+              "loop_seconds": t_loop, "vectorized_seconds": t_vec,
+              "speedup": t_loop / max(t_vec, 1e-12), "identical": identical}
+    RESULTS.mkdir(exist_ok=True)
+    (RESULTS / "join_partition.json").write_text(json.dumps(record, indent=2))
+    emit("partition/vectorized_vs_loop", t_vec * 1e6,
+         f"speedup={record['speedup']:.1f}x;segments={len(segs_v)};"
+         f"identical={identical}")
 
 
 if __name__ == "__main__":
-    run()
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized inputs (~20x below the CPU default)")
+    args = ap.parse_args()
+    if args.smoke:
+        run(n=200_000, n_outer=5_000)
+    else:
+        run()

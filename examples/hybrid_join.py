@@ -1,34 +1,67 @@
 """CAM-guided hybrid join (paper §VI): density-aware point/range probing.
 
+JoinSession quickstart — the three-noun API end to end
+------------------------------------------------------
+
+The join layer speaks the same three nouns as cost estimation:
+
+1. **IndexModel** — adapt the inner relation's learned index::
+
+       inner = PGMAdapter.build(inner_keys, eps=64)
+
+2. **System** — where it runs (page geometry, memory budget, policy)::
+
+       system = System(CamGeometry(), memory_budget_bytes=2 << 20,
+                       policy="lru")
+
+3. **Workload** — the outer probe stream (raw keys, or a
+   ``Workload.mixed`` read blend)::
+
+       outer = join_outer_keys(inner_keys, 100_000, WorkloadSpec("w4"))
+
+Bind the first two in a session, then let the model pick the plan::
+
+       session = JoinSession(inner, system, inner_keys=inner_keys)
+       session.calibrate()                    # fit Eq. 17 coefficients
+       result = session.choose(outer)         # CAM-predicted selection
+       stats = session.execute(result.plan)   # one execution path
+
+``session.plan(outer, strategy)`` builds any specific strategy — "inlj",
+"point-only", "range-only", or "hybrid" (Algorithm 2 segments) — as a typed
+plan with predicted costs; ``execute`` replays it exactly.
+
     PYTHONPATH=src python examples/hybrid_join.py
 """
+from repro.core.cam import CamGeometry
+from repro.core.session import System
 from repro.data.datasets import make_dataset
 from repro.data.workloads import WorkloadSpec, join_outer_keys
-from repro.index.disk_layout import PageLayout
-from repro.index.pgm import build_pgm
-from repro.join.calibrate import calibrate
-from repro.join.executors import hybrid_join, inlj, point_only, range_only
+from repro.index.adapters import PGMAdapter
+from repro.join.session import STRATEGIES, JoinSession
 
-LAYOUT = PageLayout()
-inner = make_dataset("books", 1_000_000, seed=1)
-index = build_pgm(inner, eps=64)
-capacity = (1 << 20) // LAYOUT.page_bytes
+inner_keys = make_dataset("books", 1_000_000, seed=1)
+inner = PGMAdapter.build(inner_keys, eps=64)
+system = System(CamGeometry(), memory_budget_bytes=(1 << 20)
+                + inner.size_bytes, policy="lru")
 
-params = calibrate(index, inner, LAYOUT, capacity)
+session = JoinSession(inner, system, inner_keys=inner_keys)
+params = session.calibrate()
 print(f"calibrated cost model: alpha={params.alpha:.2e} beta={params.beta:.2e}"
       f" lambda_point={params.lambda_point:.2e}"
       f" lambda_range={params.lambda_range:.2e}\n")
 
 for wl in ("w1", "w3", "w4"):
-    outer = join_outer_keys(inner, 100_000, WorkloadSpec(wl, seed=9))
+    outer = join_outer_keys(inner_keys, 100_000, WorkloadSpec(wl, seed=9))
     print(f"workload {wl} (100k outer x 1M inner, "
-          f"{capacity} buffer pages):")
-    for fn in (inlj, point_only, range_only):
-        st = fn(index, inner, outer, LAYOUT, capacity)
-        print(f"  {st.strategy:11s} {st.seconds:7.3f}s  "
-              f"io={st.physical_ios:7d}  matches={st.matches}")
-    st = hybrid_join(index, inner, outer, LAYOUT, capacity, params=params,
-                     n_min=256, k_max=4096)
-    print(f"  {st.strategy:11s} {st.seconds:7.3f}s  "
-          f"io={st.physical_ios:7d}  matches={st.matches}  "
-          f"[{st.n_range_segments}/{st.n_segments} segments ran as range]\n")
+          f"{session.capacity} buffer pages):")
+    chosen = session.choose(outer, n_min=256, k_max=4096)
+    for strategy in STRATEGIES:
+        plan = chosen.plans[strategy]
+        st = session.execute(plan)
+        mark = " <- chosen" if strategy == chosen.strategy else ""
+        extra = (f"  [{plan.n_range_segments}/{len(plan.segments)} "
+                 f"segments ran as range]" if strategy == "hybrid" else "")
+        print(f"  {st.strategy:11s} {st.seconds:7.3f}s "
+              f"(predicted {plan.cost.seconds:7.3f}s)  "
+              f"io={st.physical_ios:7d}  matches={st.matches}{extra}{mark}")
+    print()

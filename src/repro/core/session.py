@@ -38,6 +38,7 @@ __all__ = [
     "UniformEpsModel",
     "GridCandidate",
     "GridResult",
+    "PlanCost",
     "CostSession",
     "uniform_eps_profile",
 ]
@@ -67,6 +68,40 @@ class System:
         """Buffer capacity left once the index is resident (Alg. 1 l. 15)."""
         return capacity_pages(self.memory_budget_bytes, index_bytes,
                               self.geom.page_bytes)
+
+    def layout(self):
+        """The :class:`repro.index.disk_layout.PageLayout` this geometry
+        implies — the bridge every execution-side consumer (joins, the
+        simulated machine, benchmarks) uses instead of re-deriving page
+        counts from raw constants."""
+        from repro.index.disk_layout import PageLayout
+
+        return PageLayout(c_ipp=self.geom.c_ipp,
+                          page_bytes=self.geom.page_bytes)
+
+
+# ---------------------------------------------------------------------------
+# Plan-level cost summaries (shared by CostSession consumers and JoinSession)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class PlanCost:
+    """Model-predicted cost of one executable plan / strategy.
+
+    The join planner emits one per candidate strategy; anything that ranks
+    alternatives by predicted cost (plan selection, knob grids with attached
+    execution strategies) compares these.  ``seconds`` is the Eq. 17-style
+    fitted-time prediction, ``physical_ios`` the CAM cache-aware miss count
+    it was derived from, and ``logical_refs`` the request mass R.
+    """
+
+    strategy: str
+    seconds: float
+    physical_ios: float
+    logical_refs: float
+
+    def __lt__(self, other: "PlanCost") -> bool:
+        return self.seconds < other.seconds
 
 
 # ---------------------------------------------------------------------------

@@ -35,13 +35,23 @@ from repro.index import radixspline as rs_mod
 from repro.index import rmi as rmi_mod
 
 __all__ = ["PGMAdapter", "RMIAdapter", "RadixSplineAdapter", "quantize_eps",
-           "ADAPTERS"]
+           "ADAPTERS", "wrap_index"]
 
 
 def quantize_eps(eps: np.ndarray) -> np.ndarray:
     """Round leaf error bounds up to powers of two (conservative windows)."""
     eps = np.maximum(np.asarray(eps, np.int64), 1)
     return (2 ** np.ceil(np.log2(eps))).astype(np.int64)
+
+
+def _probe_windows(adapter, query_keys: np.ndarray, geom: CamGeometry):
+    """Shared ``probe_windows`` body: adapter windows -> inclusive page
+    intervals, clipped to the valid page range (PAGEINTERVALS in Alg. 2)."""
+    lo, hi = adapter.window(query_keys)
+    num_pages = geom.num_pages(adapter.n)
+    page_lo = np.asarray(lo, np.int64) // geom.c_ipp
+    page_hi = np.minimum(np.asarray(hi, np.int64) // geom.c_ipp, num_pages - 1)
+    return page_lo, np.maximum(page_hi, page_lo)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -77,6 +87,9 @@ class PGMAdapter:
 
     def window(self, query_keys: np.ndarray):
         return self.index.window(query_keys)
+
+    def probe_windows(self, query_keys: np.ndarray, geom: CamGeometry):
+        return _probe_windows(self, query_keys, geom)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -119,6 +132,9 @@ class RadixSplineAdapter:
 
     def window(self, query_keys: np.ndarray):
         return self.index.window(query_keys)
+
+    def probe_windows(self, query_keys: np.ndarray, geom: CamGeometry):
+        return _probe_windows(self, query_keys, geom)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -166,6 +182,31 @@ class RMIAdapter:
         lo, hi, _ = self.index.window(query_keys)
         return lo, hi
 
+    def probe_windows(self, query_keys: np.ndarray, geom: CamGeometry):
+        return _probe_windows(self, query_keys, geom)
+
 
 ADAPTERS = {"pgm": PGMAdapter, "rmi": RMIAdapter,
             "radixspline": RadixSplineAdapter}
+
+_RAW_CLASSES = {pgm_mod.PGMIndex: PGMAdapter, rmi_mod.RMIIndex: RMIAdapter,
+                rs_mod.RadixSplineIndex: RadixSplineAdapter}
+
+
+def wrap_index(index) -> "PGMAdapter | RMIAdapter | RadixSplineAdapter":
+    """Normalize a raw index or adapter to the IndexModel protocol.
+
+    This is what lets execution paths (join executors, replay harnesses)
+    accept any index family without per-design tuple-shape special cases:
+    whatever comes in, what comes out has ``probe_windows`` / ``window``
+    with one uniform signature.
+    """
+    if hasattr(index, "probe_windows"):
+        return index
+    for raw_cls, adapter_cls in _RAW_CLASSES.items():
+        if isinstance(index, raw_cls):
+            return adapter_cls(index)
+    raise TypeError(
+        f"cannot adapt {type(index).__name__} to the IndexModel "
+        f"protocol; expected one of {[c.__name__ for c in _RAW_CLASSES]} "
+        "or an object exposing probe_windows()")

@@ -1,4 +1,7 @@
-"""CAM-guided hybrid join (paper §VI)."""
-from repro.join import calibrate, executors, hybrid
+"""CAM-guided hybrid join (paper §VI) behind the JoinSession plan API."""
+from repro.join import calibrate, executors, hybrid, session
+from repro.join.session import (ChooseResult, JoinPlan, JoinSession,
+                                JoinStats)
 
-__all__ = ["calibrate", "executors", "hybrid"]
+__all__ = ["calibrate", "executors", "hybrid", "session", "JoinSession",
+           "JoinPlan", "JoinStats", "ChooseResult"]

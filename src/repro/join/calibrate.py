@@ -65,13 +65,13 @@ def calibrate_system(
     :class:`repro.core.session.System` instead of four loose arguments.
 
     ``index`` may be a raw index or an IndexModel adapter — anything with
-    ``size_bytes`` charges its footprint against the memory budget.
+    ``size_bytes`` charges its footprint against the memory budget.  This is
+    the primary entry point (``JoinSession.calibrate`` routes through it);
+    the loose-argument ``calibrate`` below remains for legacy callers.
     """
-    layout = PageLayout(c_ipp=system.geom.c_ipp,
-                        page_bytes=system.geom.page_bytes)
     index_bytes = float(getattr(index, "size_bytes", 0.0))
     capacity = max(1, system.capacity_for(index_bytes))
-    return calibrate(index, inner_keys, layout, capacity,
+    return calibrate(index, inner_keys, system.layout(), capacity,
                      policy=system.policy, machine=machine, seed=seed)
 
 

@@ -1,139 +1,77 @@
-"""Learned-index join executors (paper §VI-A, §VII-D).
+"""Legacy join-executor entry points (paper §VI-A, §VII-D).
 
-Four strategies over a simulated buffered disk:
+The four strategies — INLJ, POINT-ONLY, RANGE-ONLY, HYBRID — are now
+degenerate plans of :class:`repro.join.session.JoinSession`; these wrappers
+keep the original loose-argument signatures for callers that still think in
+``(layout, capacity, policy)`` tuples and route everything through the one
+session execution path.  New code should construct a ``JoinSession`` with a
+:class:`repro.core.session.System` directly.
 
-* INLJ       — index nested-loop join, original (unsorted) probe order.
-* POINT-ONLY — sort outer keys, one indexed point lookup per key.
-* RANGE-ONLY — sort outer keys, one coalesced range scan between the
-               workload's two endpoint windows (sort-merge flavored).
-* HYBRID     — Algorithm 2 partitioning; per-segment point/range selection.
-
-Physical I/O is exact (true replay through the buffer); time comes from the
-simulated machine constants.  All executors also verify join results against
-a numpy oracle in tests.
+Any index family (raw index or IndexModel adapter) is accepted: windows are
+normalized by ``wrap_index`` / ``probe_windows``, so there is no per-design
+tuple-shape special casing here anymore.
 """
 from __future__ import annotations
 
-import dataclasses
-import time
-from typing import List, Optional
+from typing import Optional
 
 import numpy as np
 
+from repro.core.cam import CamGeometry
+from repro.core.session import System
+from repro.index.adapters import wrap_index
 from repro.index.disk_layout import PageLayout
-from repro.join.hybrid import JoinCostParams, Segment, partition_probes
-from repro.sim.machine import BufferedDisk, MachineParams
+from repro.join.hybrid import JoinCostParams
+from repro.join.session import JoinSession, JoinStats
+from repro.sim.machine import MachineParams
 
-__all__ = ["JoinStats", "inlj", "point_only", "range_only", "hybrid_join"]
-
-
-@dataclasses.dataclass
-class JoinStats:
-    strategy: str
-    seconds: float          # simulated end-to-end time
-    physical_ios: int
-    logical_refs: int
-    matches: int
-    n_segments: int = 1
-    n_range_segments: int = 0
-    wall_seconds: float = 0.0
+__all__ = ["JoinStats", "inlj", "point_only", "range_only", "hybrid_join",
+           "session_for"]
 
 
-def _probe_windows(index, outer_keys: np.ndarray, layout: PageLayout):
-    """Per-probe inclusive page intervals from the index's last-mile windows."""
-    out = index.window(outer_keys)
-    wlo, whi = out[0], out[1]  # PGM returns 2-tuple, RMI returns 3-tuple
-    return wlo // layout.c_ipp, whi // layout.c_ipp
+def session_for(index, inner_keys: np.ndarray, layout: PageLayout,
+                capacity: int, policy: str = "lru",
+                machine: MachineParams = MachineParams(),
+                params: Optional[JoinCostParams] = None) -> JoinSession:
+    """Bridge loose (layout, capacity, policy) arguments to a JoinSession.
 
-
-def _count_matches(inner_keys: np.ndarray, outer_keys: np.ndarray) -> int:
-    pos = np.searchsorted(inner_keys, outer_keys)
-    pos = np.minimum(pos, inner_keys.shape[0] - 1)
-    return int((inner_keys[pos] == outer_keys).sum())
-
-
-def _execute_points(disk: BufferedDisk, plo, phi, machine: MachineParams):
-    seconds = 0.0
-    for a, b in zip(plo, phi):
-        misses = disk.fetch_window(int(a), int(b))
-        seconds += (machine.cpu_per_key + machine.point_op_setup
-                    + misses * machine.miss_latency_point)
-    return seconds
-
-
-def _execute_range(disk: BufferedDisk, page_lo: int, page_hi: int,
-                   n_keys: int, machine: MachineParams):
-    misses = disk.fetch_window(int(page_lo), int(page_hi))
-    span = page_hi - page_lo + 1
-    return (machine.range_op_setup
-            + span * machine.cpu_per_page_scan
-            + misses * machine.miss_latency_range
-            + n_keys * machine.cpu_per_key * 0.25)  # result extraction
-
-
-def _make_disk(layout: PageLayout, n: int, capacity: int, policy: str):
-    return BufferedDisk(layout.num_pages(n), capacity, policy)
+    The synthesized System's memory budget is exactly ``capacity`` buffer
+    pages once the index footprint is charged (the half-page slack absorbs
+    float rounding in ``size_bytes``).
+    """
+    model = wrap_index(index)
+    geom = CamGeometry(c_ipp=layout.c_ipp, page_bytes=layout.page_bytes)
+    budget = (capacity + 0.5) * layout.page_bytes + float(model.size_bytes)
+    system = System(geom=geom, memory_budget_bytes=budget, policy=policy)
+    return JoinSession(model, system, inner_keys=inner_keys, machine=machine,
+                       params=params)
 
 
 def inlj(index, inner_keys, outer_keys, layout: PageLayout, capacity: int,
          policy: str = "lru", machine: MachineParams = MachineParams()) -> JoinStats:
-    t0 = time.perf_counter()
-    disk = _make_disk(layout, len(inner_keys), capacity, policy)
-    plo, phi = _probe_windows(index, outer_keys, layout)
-    seconds = _execute_points(disk, plo, phi, machine)
-    return JoinStats("inlj", seconds, disk.physical_reads, disk.logical_reads,
-                     _count_matches(inner_keys, outer_keys),
-                     wall_seconds=time.perf_counter() - t0)
+    s = session_for(index, inner_keys, layout, capacity, policy, machine,
+                    params=JoinCostParams())
+    return s.run(outer_keys, "inlj")
 
 
 def point_only(index, inner_keys, outer_keys, layout: PageLayout, capacity: int,
                policy: str = "lru", machine: MachineParams = MachineParams()) -> JoinStats:
-    t0 = time.perf_counter()
-    outer = np.sort(outer_keys)
-    disk = _make_disk(layout, len(inner_keys), capacity, policy)
-    plo, phi = _probe_windows(index, outer, layout)
-    seconds = len(outer) * machine.sort_per_key
-    seconds += _execute_points(disk, plo, phi, machine)
-    return JoinStats("point-only", seconds, disk.physical_reads, disk.logical_reads,
-                     _count_matches(inner_keys, outer),
-                     wall_seconds=time.perf_counter() - t0)
+    s = session_for(index, inner_keys, layout, capacity, policy, machine,
+                    params=JoinCostParams())
+    return s.run(outer_keys, "point-only")
 
 
 def range_only(index, inner_keys, outer_keys, layout: PageLayout, capacity: int,
                policy: str = "lru", machine: MachineParams = MachineParams()) -> JoinStats:
-    t0 = time.perf_counter()
-    outer = np.sort(outer_keys)
-    disk = _make_disk(layout, len(inner_keys), capacity, policy)
-    plo, phi = _probe_windows(index, outer, layout)
-    seconds = len(outer) * machine.sort_per_key
-    seconds += _execute_range(disk, int(plo.min()), int(phi.max()), len(outer), machine)
-    return JoinStats("range-only", seconds, disk.physical_reads, disk.logical_reads,
-                     _count_matches(inner_keys, outer),
-                     wall_seconds=time.perf_counter() - t0)
+    s = session_for(index, inner_keys, layout, capacity, policy, machine,
+                    params=JoinCostParams())
+    return s.run(outer_keys, "range-only")
 
 
 def hybrid_join(index, inner_keys, outer_keys, layout: PageLayout, capacity: int,
                 policy: str = "lru", machine: MachineParams = MachineParams(),
                 params: Optional[JoinCostParams] = None,
                 n_min: int = 1024, k_max: int = 8192, gamma: float = 0.05) -> JoinStats:
-    t0 = time.perf_counter()
-    outer = np.sort(outer_keys)
-    disk = _make_disk(layout, len(inner_keys), capacity, policy)
-    plo, phi = _probe_windows(index, outer, layout)
-    params = params or JoinCostParams()
-    segments: List[Segment] = partition_probes(plo, phi, params,
-                                               n_min=n_min, k_max=k_max, gamma=gamma)
-    seconds = len(outer) * machine.sort_per_key
-    n_range = 0
-    for seg in segments:
-        if seg.use_range:
-            n_range += 1
-            seconds += _execute_range(disk, seg.page_lo, seg.page_hi,
-                                      seg.n_keys, machine)
-        else:
-            seconds += _execute_points(disk, plo[seg.start:seg.end],
-                                       phi[seg.start:seg.end], machine)
-    return JoinStats("hybrid", seconds, disk.physical_reads, disk.logical_reads,
-                     _count_matches(inner_keys, outer),
-                     n_segments=len(segments), n_range_segments=n_range,
-                     wall_seconds=time.perf_counter() - t0)
+    s = session_for(index, inner_keys, layout, capacity, policy, machine,
+                    params=params or JoinCostParams())
+    return s.run(outer_keys, "hybrid", n_min=n_min, k_max=k_max, gamma=gamma)

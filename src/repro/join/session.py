@@ -1,0 +1,356 @@
+"""JoinSession — plan-based join API on the CostSession nouns (paper §VI).
+
+The paper frames the hybrid join as "the same modeling principle" applied to
+joins; this module makes that literal.  A :class:`JoinSession` binds the two
+session nouns the estimation side already uses — an
+:class:`~repro.core.session.IndexModel` for the inner relation and a
+:class:`~repro.core.session.System` for where it runs — and splits the join
+into the classic planner/executor pair:
+
+* ``plan(outer, strategy)``   -> :class:`JoinPlan`: typed segments plus a
+  model-predicted :class:`~repro.core.session.PlanCost`.  The four classic
+  strategies (INLJ / point-only / range-only / hybrid) are all just plans —
+  the pure strategies are single-segment degenerate cases of the hybrid
+  partitioning.
+* ``execute(plan)``           -> :class:`JoinStats`: ONE execution path
+  replays any plan through the simulated buffered disk.
+* ``choose(outer)``           -> :class:`ChooseResult`: CAM-predicted costs
+  for every strategy, with the cheapest plan selected *up front* — the
+  model drives the plan, it doesn't just report on it afterwards.
+
+Cost predictions compose Eq. 17's fitted coefficients with CAM's cache-aware
+miss estimates rather than charging the fitted constants blindly:
+
+* sorted streams price point probing at one compulsory miss per distinct
+  page (Theorem III.1) — unless the buffer cannot hold a probe window, in
+  which case every logical reference misses (the thrash regime);
+* the unsorted INLJ stream is priced through the full CostSession IRM
+  hit-rate machinery (Algorithm 1) on the outer point workload.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, Optional, Tuple, Union
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import cache_models
+from repro.core.session import CostSession, PlanCost, System
+from repro.core.workload import Workload, locate
+from repro.index.adapters import wrap_index
+from repro.join.calibrate import calibrate_system
+from repro.join.hybrid import (JoinCostParams, Segment, partition_probes,
+                               segment_costs)
+from repro.sim.machine import BufferedDisk, MachineParams
+
+__all__ = ["JoinPlan", "JoinStats", "ChooseResult", "JoinSession",
+           "STRATEGIES"]
+
+STRATEGIES = ("inlj", "point-only", "range-only", "hybrid")
+
+
+@dataclasses.dataclass
+class JoinStats:
+    """Replayed (ground-truth) execution outcome of one plan."""
+
+    strategy: str
+    seconds: float          # simulated end-to-end time
+    physical_ios: int
+    logical_refs: int
+    matches: int
+    n_segments: int = 1
+    n_range_segments: int = 0
+    wall_seconds: float = 0.0
+
+
+@dataclasses.dataclass(frozen=True)
+class JoinPlan:
+    """An executable join plan: probe order, page windows, typed segments.
+
+    ``segments`` reuse the Algorithm 2 :class:`Segment` type; pure strategies
+    carry exactly one.  ``cost`` is the model prediction this plan was ranked
+    by; ``thrash`` records whether the buffer was below the Theorem III.1
+    capacity premise when the point-miss terms were priced.
+    """
+
+    strategy: str
+    outer_keys: np.ndarray            # in probe order (sorted unless inlj)
+    page_lo: np.ndarray
+    page_hi: np.ndarray
+    segments: Tuple[Segment, ...]
+    sorted_stream: bool
+    cost: PlanCost
+    params: JoinCostParams
+    capacity: int
+    thrash: bool = False
+
+    @property
+    def n_range_segments(self) -> int:
+        return sum(1 for s in self.segments if s.use_range)
+
+
+@dataclasses.dataclass(frozen=True)
+class ChooseResult:
+    """Outcome of model-guided strategy selection.
+
+    All candidate plans are retained — executing a non-chosen strategy for
+    comparison reuses the plan built during selection instead of re-planning.
+    """
+
+    plan: JoinPlan
+    costs: Dict[str, PlanCost]        # every strategy's predicted cost
+    plans: Dict[str, JoinPlan] = dataclasses.field(default_factory=dict)
+
+    @property
+    def strategy(self) -> str:
+        return self.plan.strategy
+
+
+def _union_size(page_lo: np.ndarray, page_hi: np.ndarray) -> int:
+    """|union of inclusive page intervals| — exact for any order (sorts by
+    lo, then the running-frontier sweep of Theorem III.1)."""
+    if page_lo.shape[0] == 0:
+        return 0
+    order = np.argsort(page_lo, kind="stable")
+    lo, hi = page_lo[order], page_hi[order]
+    cm = np.maximum.accumulate(hi)
+    prev = np.concatenate([[lo[0] - 1], cm[:-1]])
+    return int(np.maximum(0, hi - np.maximum(lo, prev + 1) + 1).sum())
+
+
+def _count_matches(inner_keys: np.ndarray, outer_keys: np.ndarray) -> int:
+    pos = np.searchsorted(inner_keys, outer_keys)
+    pos = np.minimum(pos, inner_keys.shape[0] - 1)
+    return int((inner_keys[pos] == outer_keys).sum())
+
+
+class JoinSession:
+    """Join planner/executor bound to (inner IndexModel, System).
+
+    ``inner`` may be a raw index (PGM / RMI / RadixSpline) or an adapter;
+    it is normalized through :func:`repro.index.adapters.wrap_index`.
+    ``inner_keys`` (the sorted key file) enables match counting and the
+    INLJ CostSession estimate; planning and execution of sorted strategies
+    work without it.
+    """
+
+    def __init__(self, inner, system: System,
+                 inner_keys: Optional[np.ndarray] = None,
+                 machine: MachineParams = MachineParams(),
+                 params: Optional[JoinCostParams] = None):
+        self.inner = wrap_index(inner)
+        self.system = system
+        self.inner_keys = None if inner_keys is None else np.asarray(inner_keys)
+        self.machine = machine
+        self.layout = system.layout()
+        self.capacity = max(1, system.capacity_for(self.inner.size_bytes))
+        self.num_pages = self.layout.num_pages(self.inner.n)
+        self._params = params
+        self._cost_session = CostSession(system)
+
+    # ------------------------------------------------------------ calibration
+    @property
+    def params(self) -> JoinCostParams:
+        """Eq. 17 coefficients; lazily calibrated against the machine."""
+        if self._params is None:
+            if self.inner_keys is None:
+                self._params = JoinCostParams()
+            else:
+                self._params = self.calibrate()
+        return self._params
+
+    def calibrate(self, seed: int = 0) -> JoinCostParams:
+        """Fit Eq. 17 against the simulated machine (join/calibrate.py)."""
+        self._params = calibrate_system(self.inner, self.inner_keys,
+                                        self.system, machine=self.machine,
+                                        seed=seed)
+        return self._params
+
+    # --------------------------------------------------------------- planning
+    def plan(self, outer: Union[np.ndarray, Workload], strategy: str = "hybrid",
+             n_min: int = 1024, k_max: int = 8192, gamma: float = 0.05,
+             params: Optional[JoinCostParams] = None,
+             sample_rate: float = 1.0) -> JoinPlan:
+        """Build a typed plan with model-predicted per-segment costs."""
+        if strategy not in STRATEGIES:
+            raise ValueError(f"unknown strategy {strategy!r}; expected one "
+                             f"of {STRATEGIES}")
+        outer_keys = self._outer_keys(outer)
+        p = params or self.params
+        sorted_stream = strategy != "inlj"
+        probe = np.sort(outer_keys) if sorted_stream else outer_keys
+        plo, phi = self.inner.probe_windows(probe, self.system.geom)
+        # Thrash regime = the buffer cannot hold a *typical* probe window
+        # (99th-percentile width, so one badly-predicted outlier window —
+        # e.g. a single poor RMI leaf — does not flip the whole plan onto
+        # worst-case pricing).
+        widths = phi - plo + 1
+        typical_w = int(np.quantile(widths, 0.99)) if widths.size else 0
+        thrash = self.capacity < typical_w + 1
+        n = probe.shape[0]
+        refs = int(widths.sum())
+        miss_scale = (1.0 if thrash or not sorted_stream
+                      else self._sorted_miss_scale(plo, phi))
+
+        if strategy == "hybrid":
+            # Bias Algorithm 2's point/range decisions by the same policy
+            # correction the prediction uses.
+            p_eff = (p if miss_scale == 1.0 else dataclasses.replace(
+                p, lambda_point=p.lambda_point * miss_scale))
+            segments = tuple(partition_probes(plo, phi, p_eff, n_min=n_min,
+                                              k_max=k_max, gamma=gamma,
+                                              thrash=thrash))
+        else:
+            distinct = _union_size(plo, phi)
+            span = (int(phi.max()) - int(plo.min()) + 1) if n else 0
+            miss = refs if thrash else distinct
+            cost_p, cost_r = segment_costs(n, miss, span, p)
+            segments = (Segment(0, n, int(plo.min()) if n else 0,
+                                int(phi.max()) if n else 0, n, distinct,
+                                strategy == "range-only", cost_p, cost_r,
+                                refs),)
+
+        cost = self._predict(strategy, segments, probe, p, thrash, sample_rate,
+                             miss_scale)
+        return JoinPlan(strategy, probe, plo, phi, segments, sorted_stream,
+                        cost, p, self.capacity, thrash)
+
+    def choose(self, outer: Union[np.ndarray, Workload],
+               n_min: int = 1024, k_max: int = 8192, gamma: float = 0.05,
+               params: Optional[JoinCostParams] = None,
+               sample_rate: float = 1.0) -> ChooseResult:
+        """CAM-predicted plan selection: price all strategies, pick cheapest.
+
+        This replaces "run all four and compare" — the model selects the
+        strategy up front; tests validate the pick against exhaustive
+        replay (§VII-D).  ``sample_rate`` prices the INLJ hit-rate estimate
+        from a CAM-x workload sample.
+        """
+        plans = {s: self.plan(outer, s, n_min=n_min, k_max=k_max, gamma=gamma,
+                              params=params, sample_rate=sample_rate)
+                 for s in STRATEGIES}
+        costs = {s: pl.cost for s, pl in plans.items()}
+        best = min(costs, key=lambda s: costs[s].seconds)
+        return ChooseResult(plans[best], costs, plans)
+
+    # -------------------------------------------------------------- execution
+    def execute(self, plan: JoinPlan) -> JoinStats:
+        """Replay ANY plan through the buffered disk — the single execution
+        path that subsumes the four legacy executors."""
+        t0 = time.perf_counter()
+        m = self.machine
+        disk = BufferedDisk(self.num_pages, self.capacity, self.system.policy)
+        plo, phi = plan.page_lo, plan.page_hi
+        seconds = plan.outer_keys.shape[0] * m.sort_per_key \
+            if plan.sorted_stream else 0.0
+        n_range = 0
+        for seg in plan.segments:
+            if seg.use_range:
+                n_range += 1
+                misses = disk.fetch_window(seg.page_lo, seg.page_hi)
+                span = seg.page_hi - seg.page_lo + 1
+                seconds += (m.range_op_setup + span * m.cpu_per_page_scan
+                            + misses * m.miss_latency_range
+                            + seg.n_keys * m.cpu_per_key * 0.25)
+            else:
+                for a, b in zip(plo[seg.start:seg.end], phi[seg.start:seg.end]):
+                    misses = disk.fetch_window(int(a), int(b))
+                    seconds += (m.cpu_per_key + m.point_op_setup
+                                + misses * m.miss_latency_point)
+        matches = (_count_matches(self.inner_keys, plan.outer_keys)
+                   if self.inner_keys is not None else 0)
+        return JoinStats(plan.strategy, seconds, disk.physical_reads,
+                         disk.logical_reads, matches,
+                         n_segments=len(plan.segments),
+                         n_range_segments=n_range,
+                         wall_seconds=time.perf_counter() - t0)
+
+    def run(self, outer: Union[np.ndarray, Workload],
+            strategy: Optional[str] = None, **plan_kwargs) -> JoinStats:
+        """plan (or choose, when ``strategy`` is None) + execute."""
+        if strategy is None:
+            return self.execute(self.choose(outer, **plan_kwargs).plan)
+        return self.execute(self.plan(outer, strategy, **plan_kwargs))
+
+    # -------------------------------------------------------------- internals
+    def _outer_keys(self, outer: Union[np.ndarray, Workload]) -> np.ndarray:
+        if isinstance(outer, Workload):
+            if outer.parts:        # mixed read-blend: concatenate the parts
+                return np.concatenate(
+                    [self._outer_keys(p) for p in outer.parts])
+            if outer.query_keys is None:
+                raise ValueError("outer Workload needs query_keys (the join "
+                                 "probes the inner index with them)")
+            return np.asarray(outer.query_keys)
+        return np.asarray(outer)
+
+    def _predict(self, strategy: str, segments: Tuple[Segment, ...],
+                 probe: np.ndarray, p: JoinCostParams, thrash: bool,
+                 sample_rate: float = 1.0,
+                 miss_scale: float = 1.0) -> PlanCost:
+        """Eq. 17 composed with CAM miss estimates, per strategy."""
+        n = probe.shape[0]
+        refs = float(sum(s.total_refs for s in segments))
+        if strategy == "inlj":
+            io = self._inlj_misses(probe, sample_rate)
+            seconds = p.delta + p.alpha * n + p.lambda_point * io
+            return PlanCost(strategy, seconds, io, refs)
+        seconds = n * p.sort_per_key
+        io = 0.0
+        for s in segments:
+            if s.use_range:
+                span = s.page_hi - s.page_lo + 1
+                io += span
+                seconds += (p.eta + (p.beta + p.lambda_range) * span
+                            + 0.25 * p.alpha * s.n_keys)   # result extraction
+            else:
+                miss = (s.total_refs if thrash
+                        else min(s.distinct_pages * miss_scale, s.total_refs))
+                io += miss
+                seconds += p.delta + p.alpha * s.n_keys + p.lambda_point * miss
+        return PlanCost(strategy, seconds, io, refs)
+
+    def _sorted_miss_scale(self, plo: np.ndarray, phi: np.ndarray) -> float:
+        """Policy correction for sorted streams (point probing).
+
+        Theorem III.1's one-compulsory-miss-per-distinct-page closed form
+        relies on recency-based eviction keeping the sliding probe window
+        resident; LRU and FIFO replay confirm it, but frequency-based LFU
+        evicts the advancing frontier and misses more.  For such policies
+        the segment miss terms are scaled by the ratio of the IRM hit-rate
+        model's miss count (Algorithm 1 on the window-coverage histogram)
+        to the compulsory count.
+        """
+        if self.system.policy in ("lru", "fifo") or plo.shape[0] == 0:
+            return 1.0
+        np_pages = self.num_pages
+        diff = (np.bincount(plo, minlength=np_pages + 1)[:np_pages]
+                - np.bincount(phi + 1, minlength=np_pages + 2)[:np_pages])
+        counts = np.cumsum(diff).astype(np.float64)
+        r = counts.sum()
+        distinct = float((counts > 0).sum())
+        if distinct == 0 or r <= 0:
+            return 1.0
+        h = float(cache_models.hit_rate(
+            self.system.policy, self.capacity,
+            jnp.asarray(counts / r, jnp.float32),
+            total_requests=float(r), distinct_pages=distinct))
+        return max(1.0, (1.0 - h) * r / distinct)
+
+    def _inlj_misses(self, probe: np.ndarray,
+                     sample_rate: float = 1.0) -> float:
+        """Expected INLJ physical I/O via the full Algorithm 1 pipeline
+        (structural page refs -> IRM hit rate) on the unsorted stream."""
+        if self.inner_keys is None:
+            # No key file to locate against: assume every probe window is
+            # cold (upper bound) — keeps planning possible, biased against
+            # INLJ, which exhaustive replay tests tolerate.
+            plo, phi = self.inner.probe_windows(probe, self.system.geom)
+            return float((phi - plo + 1).sum())
+        wl = Workload.point(locate(self.inner_keys, probe),
+                            n=self.inner.n, query_keys=probe)
+        est = self._cost_session.estimate(self.inner, wl,
+                                          sample_rate=sample_rate)
+        return est.io_per_query * probe.shape[0]

@@ -1,0 +1,235 @@
+"""JoinSession tests.
+
+* Golden: vectorized ``partition_probes`` must match the legacy per-probe
+  loop segment-for-segment on fixed seeds (and be materially faster).
+* Plan-vs-replay physical-I/O oracle: every strategy's predicted I/O is
+  checked against ground-truth buffered replay across all three cache
+  policies and all three index families.
+* CAM-predicted selection: ``choose`` must pick the strategy with the lowest
+  replayed cost (or within 10% of it) on uniform, skewed and sparse outer
+  streams — validated against exhaustive replay.
+* Degenerate plans subsume the legacy executors: identical match counts,
+  and RadixSpline works as a join inner through the uniform
+  ``probe_windows`` protocol (no tuple-shape special cases).
+"""
+import time
+
+import numpy as np
+import pytest
+
+from repro.core.cam import CamGeometry
+from repro.core.qerror import q_error
+from repro.core.session import PlanCost, System
+from repro.core.workload import Workload, locate
+from repro.data.datasets import make_dataset
+from repro.data.workloads import WorkloadSpec, join_outer_keys
+from repro.index.adapters import (PGMAdapter, RadixSplineAdapter, RMIAdapter,
+                                  wrap_index)
+from repro.index.pgm import build_pgm
+from repro.join.hybrid import (JoinCostParams, partition_probes,
+                               partition_probes_loop)
+from repro.join.session import STRATEGIES, JoinSession
+
+GEOM = CamGeometry()
+POLICIES = ("lru", "fifo", "lfu")
+
+
+def _adapter(family, keys):
+    if family == "pgm":
+        return PGMAdapter.build(keys, eps=32)
+    if family == "rmi":
+        return RMIAdapter.build(keys, branch=256)
+    return RadixSplineAdapter.build(keys, eps=32)
+
+
+@pytest.fixture(scope="module")
+def world():
+    keys = make_dataset("books", 200_000, seed=5)
+    outer = join_outer_keys(keys, 15_000, WorkloadSpec("w4", seed=9))
+    return keys, outer
+
+
+def _session(keys, family="pgm", policy="lru", budget=2 << 20):
+    inner = _adapter(family, keys)
+    system = System(GEOM, memory_budget_bytes=budget + inner.size_bytes,
+                    policy=policy)
+    return JoinSession(inner, system, inner_keys=keys)
+
+
+# ---------------------------------------------------------------------------
+# Vectorized Algorithm 2 vs the legacy loop
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("seed,n_min,k_max,thrash", [
+    (0, 64, 512, False), (1, 1024, 8192, False), (2, 128, 4096, True),
+    (3, 17, 100, False), (4, 1, 10**9, False),
+])
+def test_partition_vectorized_matches_loop_golden(seed, n_min, k_max, thrash):
+    rng = np.random.default_rng(seed)
+    lo = np.sort(rng.integers(0, 50_000, size=20_000))
+    hi = lo + rng.integers(0, 4, size=20_000)
+    p = JoinCostParams()
+    vec = partition_probes(lo, hi, p, n_min=n_min, k_max=k_max, thrash=thrash)
+    ref = partition_probes_loop(lo, hi, p, n_min=n_min, k_max=k_max,
+                                thrash=thrash)
+    assert vec == ref
+
+
+def test_partition_vectorized_matches_loop_dense_sparse():
+    p = JoinCostParams()
+    dense = np.repeat(np.arange(200), 40)
+    assert (partition_probes(dense, dense, p, n_min=64, k_max=10**9)
+            == partition_probes_loop(dense, dense, p, n_min=64, k_max=10**9))
+    sparse = np.arange(0, 3_000_000, 5000)
+    assert (partition_probes(sparse, sparse, p, n_min=64, k_max=10**9)
+            == partition_probes_loop(sparse, sparse, p, n_min=64, k_max=10**9))
+
+
+def test_partition_vectorized_speedup_at_1m():
+    """Acceptance: >= 5x over the Python loop at 1M probes, same segments."""
+    rng = np.random.default_rng(7)
+    n = 1_000_000
+    lo = np.sort(rng.integers(0, 2_000_000, size=n))
+    hi = lo + rng.integers(0, 3, size=n)
+    p = JoinCostParams()
+    partition_probes(lo[:1000], hi[:1000], p)      # warm numpy
+    t0 = time.perf_counter()
+    vec = partition_probes(lo, hi, p, n_min=1024, k_max=8192)
+    t_vec = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    ref = partition_probes_loop(lo, hi, p, n_min=1024, k_max=8192)
+    t_loop = time.perf_counter() - t0
+    assert vec == ref
+    assert t_loop / t_vec >= 5.0, (t_loop, t_vec)
+
+
+# ---------------------------------------------------------------------------
+# Plan-vs-replay physical-I/O oracle (3 policies x 3 families)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("family", ("pgm", "rmi", "radixspline"))
+@pytest.mark.parametrize("policy", POLICIES)
+def test_plan_io_matches_replay(world, family, policy):
+    keys, outer = world
+    s = _session(keys, family, policy)
+    for strategy in STRATEGIES:
+        plan = s.plan(outer, strategy, n_min=128, k_max=4096)
+        st = s.execute(plan)
+        assert isinstance(plan.cost, PlanCost)
+        assert st.strategy == strategy
+        assert q_error(plan.cost.physical_ios, max(st.physical_ios, 1)) < 2.0, \
+            (strategy, plan.cost.physical_ios, st.physical_ios)
+
+
+def test_sorted_point_plan_io_is_sharp(world):
+    """For the sorted point stream the Theorem III.1 composition should be
+    nearly exact, not just within the oracle band."""
+    keys, outer = world
+    s = _session(keys)
+    plan = s.plan(outer, "point-only")
+    st = s.execute(plan)
+    assert abs(plan.cost.physical_ios - st.physical_ios) \
+        <= 0.05 * st.physical_ios
+
+
+# ---------------------------------------------------------------------------
+# CAM-predicted plan selection vs exhaustive replay
+# ---------------------------------------------------------------------------
+
+def _replay_all(s, outer, **kw):
+    return {st: s.execute(s.plan(outer, st, **kw)) for st in STRATEGIES}
+
+
+@pytest.mark.parametrize("wl", ("w1", "w2"))   # uniform and zipf-skewed
+def test_choose_within_10pct_of_replayed_best(world, wl):
+    keys, _ = world
+    outer = join_outer_keys(keys, 15_000, WorkloadSpec(wl, seed=9))
+    s = _session(keys)
+    s.calibrate()
+    res = s.choose(outer, n_min=128, k_max=4096)
+    stats = _replay_all(s, outer, n_min=128, k_max=4096)
+    best = min(stats, key=lambda k: stats[k].seconds)
+    assert stats[res.strategy].seconds <= 1.10 * stats[best].seconds, \
+        (res.strategy, best, {k: v.seconds for k, v in stats.items()})
+
+
+def test_choose_prefers_points_on_sparse_stream(world):
+    """A probe stream far sparser than the page grid must NOT pick the
+    full-span range scan; selection still tracks the replayed best."""
+    keys, _ = world
+    outer = keys[::4000].copy()                # 50 probes over ~780 pages
+    s = _session(keys)
+    s.calibrate()
+    res = s.choose(outer, n_min=128, k_max=4096)
+    stats = _replay_all(s, outer, n_min=128, k_max=4096)
+    best = min(stats, key=lambda k: stats[k].seconds)
+    assert res.strategy != "range-only"
+    assert stats[res.strategy].seconds <= 1.10 * stats[best].seconds
+
+
+def test_choose_handles_mixed_workload(world):
+    """Workload.mixed outer streams (sorted-run / point read blends) flow
+    through planning, selection and execution."""
+    keys, _ = world
+    qk = join_outer_keys(keys, 8_000, WorkloadSpec("w4", seed=9))
+    run = keys[50_000:58_000]
+    mixed = Workload.mixed(
+        Workload.point(locate(keys, qk), n=len(keys), query_keys=qk),
+        Workload.point(locate(keys, run), n=len(keys), query_keys=run))
+    s = _session(keys)
+    res = s.choose(mixed, n_min=128, k_max=4096)
+    assert set(res.plans) == set(STRATEGIES)   # candidates kept for reuse
+    st = s.execute(res.plan)
+    assert st.logical_refs > 0
+    oracle = int(np.isin(np.concatenate([qk, run]), keys).sum())
+    assert st.matches == oracle
+
+
+# ---------------------------------------------------------------------------
+# Degenerate plans subsume the executors; uniform probe_windows protocol
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("family", ("pgm", "rmi", "radixspline"))
+def test_all_strategies_match_oracle_per_family(world, family):
+    keys, outer = world
+    s = _session(keys, family)
+    oracle = int(np.isin(outer, keys).sum())
+    for strategy in STRATEGIES:
+        st = s.execute(s.plan(outer, strategy, n_min=128))
+        assert st.matches == oracle, (family, strategy)
+
+
+def test_wrap_index_accepts_raw_and_adapted(world):
+    keys, outer = world
+    raw = build_pgm(keys, eps=32)
+    w = wrap_index(raw)
+    assert w.family == "pgm"
+    assert wrap_index(w) is w
+    plo, phi = w.probe_windows(outer[:100], GEOM)
+    assert plo.shape == phi.shape == (100,)
+    assert (plo <= phi).all()
+    assert int(phi.max()) < GEOM.num_pages(len(keys))
+    with pytest.raises(TypeError):
+        wrap_index(object())
+
+
+def test_probe_windows_uniform_across_families(world):
+    """The 2-tuple/3-tuple window() special case is gone: every family
+    yields identically-shaped page intervals (RadixSpline as join inner
+    used to break silently here)."""
+    keys, outer = world
+    q = np.sort(outer[:500])
+    for family in ("pgm", "rmi", "radixspline"):
+        plo, phi = _adapter(family, keys).probe_windows(q, GEOM)
+        assert plo.dtype == np.int64 and phi.dtype == np.int64
+        assert plo.shape == phi.shape == (500,)
+        assert (plo <= phi).all() and (plo >= 0).all()
+
+
+def test_hybrid_plan_not_worse_than_pure(world):
+    keys, outer = world
+    s = _session(keys)
+    s.calibrate()
+    stats = _replay_all(s, outer, n_min=128, k_max=4096)
+    assert stats["hybrid"].seconds <= 1.15 * min(
+        stats["point-only"].seconds, stats["range-only"].seconds)
