@@ -12,7 +12,14 @@ Models implemented
 * ``hit_rate_fifo`` — Fricker's fixed point (Eq. 4/5/6); equals RANDOM under IRM.
 * ``hit_rate_lfu``  — converged top-C mass (Eq. 9).
 * ``hit_rate_compulsory`` — ``(R - N) / R`` for the large-capacity case and for
-  sorted workloads (Theorem III.1).
+  sorted workloads under recency eviction (Theorem III.1).
+* ``sorted_scan_misses`` / ``sorted_scan_hit_rate`` / the vmapped
+  ``sorted_scan_hit_rate_grid`` — the policy-aware sorted-scan family: the
+  compulsory closed form where Theorem III.1's premises hold (recency
+  eviction, capacity above one probe window), a frequency-aware closed form
+  from the window-coverage histogram for LFU-like policies, and the thrash
+  regime below the capacity premise.  This is the ONE sorted-stream miss
+  model shared by ``CostSession._finish`` and the join planner.
 """
 from __future__ import annotations
 
@@ -31,10 +38,23 @@ __all__ = [
     "hit_rate_compulsory",
     "hit_rate",
     "hit_rate_grid",
+    "sorted_scan_misses",
+    "sorted_scan_hit_rate",
+    "sorted_scan_hit_rate_grid",
     "POLICIES",
+    "RECENCY_POLICIES",
 ]
 
 POLICIES = ("lru", "fifo", "lfu")
+
+#: Policies whose eviction order tracks recency.  For these Theorem III.1's
+#: proof step — "no page of the current probe window is evicted before the
+#: probe finishes" — holds whenever the buffer fits one window, so the
+#: compulsory closed form is exact for sorted streams.  Frequency-based
+#: policies (LFU) violate it: stale high-frequency pages pin buffer slots and
+#: the advancing scan frontier is evicted (with its frequency reset), so they
+#: take the frequency-aware form below instead.
+RECENCY_POLICIES = ("lru", "fifo")
 
 _BISECT_ITERS = 64  # float32 bisection converges long before this
 
@@ -160,6 +180,172 @@ def hit_rate_compulsory(total_requests, distinct_pages) -> jnp.ndarray:
 
 
 # ---------------------------------------------------------------------------
+# Sorted-scan model family (Theorem III.1 + policy-aware extensions)
+# ---------------------------------------------------------------------------
+
+@jax.jit
+def _sorted_scan_misses_freq(coverage: jnp.ndarray, capacity,
+                             solo_repeats) -> jnp.ndarray:
+    """Frequency-aware sorted-scan miss count from the coverage histogram.
+
+    A frequency-based cache breaks the recency premise of Theorem III.1 in a
+    specific way: eviction resets a page's frequency, so the advancing scan
+    frontier keeps being evicted by stale pages whose counts were accumulated
+    earlier, and re-misses on re-entry.  Two hit sources survive this
+    pathology, and each yields a closed-form hit lower bound:
+
+    * steady-state retention — the converged cache keeps the ``C`` pages
+      with the highest coverage (Eq. 9 applied to the coverage histogram),
+      whose references hit once resident: ``miss <= R - topC_mass``;
+    * frontier survival — a reference that immediately re-touches the
+      previous probe's single page cannot be separated from it by an
+      insertion, so it hits under ANY eviction state:
+      ``miss <= R - solo_repeats``.
+
+    The model takes the tighter bound and clamps to ``[N, R]`` (compulsory
+    floor, thrash ceiling).  Replay-validated to q-error < 2 against
+    ``repro.core.replay.LFUBuffer`` across PGM / RMI / RadixSpline streams
+    at tuning-relevant capacities; in strongly recency-like streams (narrow
+    non-repeating windows) at small capacity it stays a conservative
+    over-estimate — LFU replay there beats both closed-form hit sources.
+    """
+    cov = jnp.asarray(coverage, jnp.float32)
+    prefix = jnp.cumsum(-jnp.sort(-cov))
+    return _freq_misses_from_prefix(
+        prefix, jnp.sum(cov), jnp.sum(cov > 0).astype(jnp.float32),
+        capacity, solo_repeats)
+
+
+def _freq_misses_from_prefix(prefix, r, n, capacity, solo_repeats):
+    """Frequency-aware miss count given the descending-coverage prefix sums
+    (``prefix[k-1]`` = mass of the k most-covered pages) — the O(P log P)
+    sort is hoisted here so a knob grid over one shared stream pays it
+    once, not once per candidate."""
+    cap = jnp.clip(jnp.asarray(capacity, jnp.int32), 0, prefix.shape[0])
+    topc = jnp.where(cap > 0, prefix[jnp.maximum(cap - 1, 0)], 0.0)
+    steady = r - topc
+    frontier = r - jnp.asarray(solo_repeats, jnp.float32)
+    return jnp.clip(jnp.minimum(steady, frontier), n, r)
+
+
+def sorted_scan_misses(
+    policy: str,
+    capacity,
+    *,
+    total_refs: float,
+    distinct_pages: float,
+    coverage: Optional[jnp.ndarray] = None,
+    solo_repeats: float = 0.0,
+    min_capacity: int = 1,
+) -> float:
+    """Expected physical misses of a sorted one-pass probe stream.
+
+    The policy-aware dispatch for sorted workloads (the single model behind
+    ``CostSession`` Algorithm 1's sorted branch and the join planner's
+    point-probe pricing):
+
+    * ``capacity < min_capacity`` — the buffer cannot hold one probe window
+      (Theorem III.1's capacity premise fails): every logical reference
+      misses, ``miss = R`` (thrash regime);
+    * recency policies, ``capacity >= N``, or no coverage histogram — the
+      compulsory closed form, ``miss = N`` (Theorem III.1: one compulsory
+      miss per distinct page);
+    * frequency-based policies below ``N`` — the frequency-aware closed form
+      of :func:`_sorted_scan_misses_freq` on the window-coverage histogram.
+    """
+    r = float(total_refs)
+    n = float(distinct_pages)
+    if r <= 0.0:
+        return 0.0
+    if capacity is not None and capacity < min_capacity:
+        return r
+    if (policy in RECENCY_POLICIES or coverage is None
+            or capacity is None or capacity >= n):
+        return n
+    return float(_sorted_scan_misses_freq(jnp.asarray(coverage), capacity,
+                                          solo_repeats))
+
+
+def sorted_scan_hit_rate(
+    policy: str,
+    capacity,
+    *,
+    total_refs: float,
+    distinct_pages: float,
+    coverage: Optional[jnp.ndarray] = None,
+    solo_repeats: float = 0.0,
+    min_capacity: int = 1,
+) -> float:
+    """Hit rate of a sorted probe stream: ``(R - miss) / R``.
+
+    Shares :func:`hit_rate_compulsory`'s zero-guards, so boundary estimates
+    (R ~ 0, capacity at the thrash edge) agree everywhere — for recency
+    policies above the capacity premise this IS ``hit_rate_compulsory``.
+    """
+    r = float(total_refs)
+    if r <= 0.0:
+        return 0.0
+    miss = sorted_scan_misses(
+        policy, capacity, total_refs=r, distinct_pages=distinct_pages,
+        coverage=coverage, solo_repeats=solo_repeats,
+        min_capacity=min_capacity)
+    return (r - miss) / max(r, 1.0)
+
+
+@functools.partial(jax.jit, static_argnames=("policy",))
+def sorted_scan_hit_rate_grid(
+    policy: str,
+    coverage: jnp.ndarray,
+    total_refs: jnp.ndarray,
+    distinct_pages: jnp.ndarray,
+    solo_repeats: jnp.ndarray,
+    capacities: jnp.ndarray,
+    min_capacities: jnp.ndarray,
+) -> jnp.ndarray:
+    """Vmapped :func:`sorted_scan_hit_rate` for K sorted-stream candidates.
+
+    The per-candidate dispatch (thrash / compulsory / frequency-aware)
+    becomes branchless ``where`` selects so a whole knob grid solves in one
+    pass — this is the sorted counterpart of the banded-matmul point/range
+    grid kernels.
+
+    Args:
+      coverage:       window-coverage histogram(s): (P,) when every
+                      candidate shares ONE stream (the common case — sorted
+                      windows are eps-independent, only capacities and
+                      ``min_capacities`` vary; the O(P log P) coverage sort
+                      then runs once for the whole grid), or (K, P) when
+                      index-backed candidates contribute distinct streams.
+      total_refs:     (K,) request volumes R.
+      distinct_pages: (K,) distinct page counts N.
+      solo_repeats:   (K,) immediate solo re-reference counts.
+      capacities:     (K,) buffer capacities in pages.
+      min_capacities: (K,) Theorem III.1 capacity premises.
+
+    Returns:
+      (K,) hit rates.
+    """
+    r = jnp.asarray(total_refs, jnp.float32)
+    n = jnp.asarray(distinct_pages, jnp.float32)
+    cap = jnp.asarray(capacities, jnp.float32)
+    if policy in RECENCY_POLICIES:
+        miss = n
+    else:
+        cov = jnp.asarray(coverage, jnp.float32)
+        solo = jnp.asarray(solo_repeats, jnp.float32)
+        if cov.ndim == 1:
+            prefix = jnp.cumsum(-jnp.sort(-cov))
+            freq = jax.vmap(
+                lambda rr, nn, cc, ss: _freq_misses_from_prefix(
+                    prefix, rr, nn, cc, ss))(r, n, cap, solo)
+        else:
+            freq = jax.vmap(_sorted_scan_misses_freq)(cov, cap, solo)
+        miss = jnp.where(cap >= n, n, freq)
+    miss = jnp.where(cap < jnp.asarray(min_capacities, jnp.float32), r, miss)
+    return jnp.where(r > 0, (r - miss) / jnp.maximum(r, 1.0), 0.0)
+
+
+# ---------------------------------------------------------------------------
 # Dispatcher
 # ---------------------------------------------------------------------------
 
@@ -185,7 +371,9 @@ def hit_rate(
 ) -> jnp.ndarray:
     """Paper §III-B/§III-C dispatcher.
 
-    * sorted workloads → Theorem III.1 closed form (policy independent),
+    * sorted workloads → Theorem III.1 closed form (NOTE: only exact for
+      recency policies; policy-aware callers should use the
+      ``sorted_scan_*`` family, which adds the frequency-aware form),
     * ``C >= N``       → compulsory-miss closed form,
     * otherwise        → the policy-specific IRM estimator.
     """
@@ -215,6 +403,12 @@ def hit_rate_grid(
     sample_refs: jnp.ndarray,
     full_refs: jnp.ndarray,
     capacities: jnp.ndarray,
+    sorted_coverage: Optional[jnp.ndarray] = None,
+    sorted_refs: Optional[jnp.ndarray] = None,
+    sorted_distinct: Optional[jnp.ndarray] = None,
+    sorted_solo: Optional[jnp.ndarray] = None,
+    sorted_min_caps: Optional[jnp.ndarray] = None,
+    sorted_full_refs: Optional[jnp.ndarray] = None,
 ):
     """Hit rates for K (histogram, capacity) candidates in one vmapped solve.
 
@@ -223,14 +417,26 @@ def hit_rate_grid(
     becomes branchless ``where`` selects so the whole knob grid solves under
     a single jit — K bisections run lockstep instead of K Python round trips.
 
+    When the ``sorted_*`` arguments are given (mixed workloads containing
+    sorted probe streams), each candidate's IRM estimate is composed with the
+    policy-aware sorted-scan model (:func:`sorted_scan_hit_rate_grid`) by
+    expected-miss addition over a shared buffer — the same composition
+    ``CostSession._finish`` applies per candidate.
+
     Args:
-      counts:      (K, P) expected page-reference histograms.
+      counts:      (K, P) expected page-reference histograms (IRM parts).
       sample_refs: (K,) sample request mass (normalizer of Pr_req).
       full_refs:   (K,) full-workload request volume R (compulsory branch).
       capacities:  (K,) buffer capacities in pages (may be <= 0).
+      sorted_coverage / sorted_refs / sorted_distinct / sorted_solo /
+      sorted_min_caps: per-candidate sorted-stream statistics, shapes as in
+        :func:`sorted_scan_hit_rate_grid`.
+      sorted_full_refs: (K,) full-workload sorted request volume (CAM-x
+        scaling of the sorted part's expected misses).
 
     Returns:
-      (hit_rates (K,), distinct_pages (K,)).
+      (hit_rates (K,), distinct_pages (K,)) — pages with nonzero mass in
+      either the IRM histogram or the sorted coverage.
     """
     if policy == "lru":
         fn = hit_rate_lru
@@ -246,4 +452,18 @@ def hit_rate_grid(
     h_policy = jax.vmap(lambda p, c: fn(p, jnp.maximum(c, 1.0)))(probs, cap)
     h_comp = hit_rate_compulsory(full_refs, n_distinct)
     h = jnp.where(cap >= n_distinct, h_comp, h_policy)
-    return jnp.where(cap < 1.0, 0.0, h), n_distinct
+    h = jnp.where(cap < 1.0, 0.0, h)
+    h = jnp.where(jnp.asarray(sample_refs, jnp.float32) > 0, h, 0.0)
+    if sorted_coverage is None:
+        return h, n_distinct
+    h_s = sorted_scan_hit_rate_grid(
+        policy, sorted_coverage, sorted_refs, sorted_distinct, sorted_solo,
+        capacities, sorted_min_caps)
+    s_full = jnp.asarray(sorted_full_refs, jnp.float32)
+    total_full = full_refs + s_full
+    miss = (1.0 - h) * full_refs + (1.0 - h_s) * s_full
+    h_mix = jnp.where(total_full > 0,
+                      1.0 - miss / jnp.maximum(total_full, 1.0), 0.0)
+    n_mix = jnp.sum((counts > 0) | (sorted_coverage > 0),
+                    axis=1).astype(jnp.float32)
+    return h_mix, n_mix

@@ -150,11 +150,13 @@ def estimate_sorted_io(
     memory_budget_bytes: float,
     index_bytes: float,
 ) -> CamEstimate:
-    """Sorted probe streams (joins): Theorem III.1, policy-independent.
+    """Sorted probe streams (joins): Theorem III.1 closed form under LRU.
 
-    ``window_lo/hi`` are per-query *position* windows in sorted order.  Needs
-    only (R, N); requires C >= 1 + ceil(2*eps/C_ipp) to be exact.
-    (Deprecated shim.)
+    ``window_lo/hi`` are per-query *position* windows in sorted order.
+    Requires C >= 1 + ceil(2*eps/C_ipp) to be exact.  (Deprecated shim —
+    pinned to LRU; for policy-aware sorted estimates (LFU's frequency
+    pathology, thrash regime) use ``CostSession`` with a sorted
+    ``Workload``, which dispatches through ``cache_models.sorted_scan_*``.)
     """
     _deprecated("estimate_sorted_io")
     from repro.core.session import UniformEpsModel

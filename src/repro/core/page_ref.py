@@ -33,6 +33,7 @@ __all__ = [
     "range_page_refs_grid",
     "page_intervals",
     "sorted_workload_rn",
+    "sorted_workload_stats",
     "point_access_prob_exact",
 ]
 
@@ -277,3 +278,40 @@ def sorted_workload_rn(
     new_lo = jnp.maximum(page_lo, prev_hi + 1)
     n_distinct = jnp.sum(jnp.maximum(0, page_hi - new_lo + 1).astype(jnp.float32))
     return r_total, n_distinct
+
+
+def sorted_workload_stats(
+    page_lo: jnp.ndarray, page_hi: jnp.ndarray, num_pages: int
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """(R, N, coverage, solo_repeats) for a sorted probe stream.
+
+    Deliberately NOT jitted: the join planner calls it with
+    outer-relation-sized arrays whose shapes vary call to call, and a
+    per-shape retrace would cost more than the handful of eager ops here
+    (one scatter, one scan, two reductions).
+
+    Extends :func:`sorted_workload_rn` with the two statistics the
+    frequency-aware sorted-scan model (``cache_models.sorted_scan_*``)
+    needs beyond Theorem III.1's (R, N):
+
+    * ``coverage`` — the window-coverage histogram ``coverage[p] = number of
+      probe windows covering page p`` (difference array + prefix sum, same
+      shape as the Eq. 13/14 histograms, so it can also join a mixed
+      workload's request distribution);
+    * ``solo_repeats`` — the number of references that immediately re-touch
+      the previous probe's single page (consecutive identical width-1
+      windows).  These hits survive *any* eviction state — including an
+      LFU buffer pinned by stale high-frequency pages — because no
+      insertion can occur between the two references.
+    """
+    lo = jnp.asarray(page_lo, jnp.int32)
+    hi = jnp.asarray(page_hi, jnp.int32)
+    ones = jnp.ones(lo.shape[0], jnp.float32)
+    diff = jax.ops.segment_sum(ones, lo, num_segments=num_pages + 1)
+    diff = diff - jax.ops.segment_sum(ones, hi + 1, num_segments=num_pages + 1)
+    coverage = jnp.cumsum(diff)[:num_pages]
+    r_total = jnp.sum((hi - lo + 1).astype(jnp.float32))
+    n_distinct = jnp.sum(coverage > 0).astype(jnp.float32)
+    w1 = lo == hi
+    solo = jnp.sum((w1[1:] & w1[:-1] & (lo[1:] == lo[:-1])).astype(jnp.float32))
+    return r_total, n_distinct, coverage, solo

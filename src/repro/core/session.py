@@ -22,7 +22,8 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Dict, Optional, Protocol, Sequence, runtime_checkable
+from typing import (Dict, NamedTuple, Optional, Protocol, Sequence, Tuple,
+                    runtime_checkable)
 
 import jax.numpy as jnp
 import numpy as np
@@ -33,15 +34,40 @@ from repro.core.workload import MIXED, POINT, RANGE, SORTED, Workload
 
 __all__ = [
     "System",
+    "SortedScanPart",
     "PageRefProfile",
     "IndexModel",
     "UniformEpsModel",
     "GridCandidate",
     "GridResult",
+    "SkippedCandidate",
     "PlanCost",
     "CostSession",
+    "UnsupportedWorkloadError",
     "uniform_eps_profile",
+    "sorted_stream_profile",
 ]
+
+
+class UnsupportedWorkloadError(ValueError):
+    """A workload (or one of its parts) an estimation path cannot price.
+
+    Carries the offending ``kind`` (and, for composite workloads, the
+    ``part`` kind that triggered it) so callers — notably
+    ``CostSession.estimate_grid``, which records per-candidate skip reasons —
+    can report *what* was unsupported instead of a bare message.
+    """
+
+    def __init__(self, kind: str, part: Optional[str] = None,
+                 detail: str = ""):
+        self.kind = kind
+        self.part = part
+        msg = f"unsupported workload kind {kind!r}"
+        if part is not None:
+            msg += f" (offending part: {part!r})"
+        if detail:
+            msg += f": {detail}"
+        super().__init__(msg)
 
 
 # ---------------------------------------------------------------------------
@@ -109,20 +135,38 @@ class PlanCost:
 # ---------------------------------------------------------------------------
 
 @dataclasses.dataclass
+class SortedScanPart:
+    """Sorted-stream statistics feeding the ``cache_models.sorted_scan``
+    family: Theorem III.1's (R, N) plus the window-coverage histogram and
+    solo-repeat count the frequency-aware closed form needs (see
+    ``page_ref.sorted_workload_stats``)."""
+
+    total_refs: float
+    distinct_pages: float
+    min_capacity: int = 1                 # Thm III.1 capacity premise
+    coverage: Optional[jnp.ndarray] = None
+    solo_repeats: float = 0.0
+
+
+@dataclasses.dataclass
 class PageRefProfile:
     """Structural page-reference summary an index reports for a workload.
 
-    ``counts`` is the Eq. 13/14 expected-reference histogram; sorted probe
-    streams need only (R, N) for the Theorem III.1 closed form and leave
-    ``counts`` as None.
+    ``counts`` is the Eq. 13/14 expected-reference histogram of the
+    random-access (IRM) part.  Sorted probe streams carry their statistics in
+    ``sorted_part`` instead (pure sorted streams set ``sorted_stream`` and
+    leave ``counts`` as None; mixed workloads may have both).  Profiles built
+    without a ``sorted_part`` but with the legacy ``sorted_stream`` fields
+    still price through the recency closed form.
     """
 
     counts: Optional[jnp.ndarray]
-    total_refs: float                     # sample request mass R
-    expected_dac: float                   # E[DAC] per query
+    total_refs: float                     # sample request mass R (IRM part)
+    expected_dac: float                   # E[DAC] per query (all parts)
     sorted_stream: bool = False
     distinct_pages: Optional[float] = None
     min_capacity: int = 1                 # Thm III.1 capacity premise
+    sorted_part: Optional[SortedScanPart] = None
 
 
 @runtime_checkable
@@ -140,11 +184,90 @@ class IndexModel(Protocol):
                          geom: CamGeometry) -> PageRefProfile: ...
 
 
+def sorted_part_for(workload: Workload, eps: int, geom: CamGeometry,
+                    num_pages: int) -> SortedScanPart:
+    """Sorted-stream statistics of one SORTED workload (shared helper).
+
+    The Theorem III.1 capacity premise comes from ``eps`` for uniformly
+    error-bounded designs; with ``eps=0`` (no uniform bound, e.g. RMI) it is
+    read off the widest observed probe window instead.
+    """
+    plo, phi = page_ref.page_intervals(
+        jnp.asarray(workload.positions, jnp.int32),
+        jnp.asarray(workload.hi_positions, jnp.int32),
+        geom.c_ipp, num_pages)
+    r_total, n_distinct, coverage, solo = page_ref.sorted_workload_stats(
+        plo, phi, num_pages)
+    if eps > 0:
+        min_cap = 1 + int(np.ceil(2 * eps / geom.c_ipp))
+    elif workload.n_queries:
+        min_cap = int(jnp.max(phi - plo + 1))
+    else:
+        min_cap = 1
+    return SortedScanPart(
+        total_refs=float(r_total), distinct_pages=float(n_distinct),
+        min_capacity=min_cap, coverage=coverage, solo_repeats=float(solo))
+
+
+def sorted_stream_profile(workload: Workload, geom: CamGeometry,
+                          num_pages: int, eps: int = 0) -> PageRefProfile:
+    """Pure sorted-stream profile (any index family — windows are explicit
+    positions, so no design-specific error bound enters beyond ``eps``'s
+    role in the capacity premise)."""
+    sp = sorted_part_for(workload, eps, geom, num_pages)
+    return PageRefProfile(
+        counts=None, total_refs=sp.total_refs,
+        expected_dac=sp.total_refs / max(workload.n_queries, 1),
+        sorted_stream=True, distinct_pages=sp.distinct_pages,
+        min_capacity=sp.min_capacity, sorted_part=sp)
+
+
+def _compulsory_coverage(sp: SortedScanPart, num_pages: int) -> jnp.ndarray:
+    """Coverage surrogate for a legacy sorted part without a histogram.
+
+    Piling the whole mass on one page makes the frequency-aware form's
+    steady bound collapse to 0, so its ``[N, R]`` clamp returns exactly N —
+    i.e. the compulsory closed form that coverage-less parts price through
+    on the single-candidate path (``sorted_scan_misses`` with
+    ``coverage=None``) — for every capacity above the premise.
+    """
+    return jnp.zeros((num_pages,), jnp.float32).at[0].set(
+        jnp.float32(sp.total_refs))
+
+
+def _stack_or_share(coverages: Sequence[jnp.ndarray]) -> jnp.ndarray:
+    """One (P,) row when every candidate references the SAME stream object
+    (uniform-eps grids: sorted windows are eps-independent), else a stacked
+    (K, P) matrix — lets the grid solve sort the shared histogram once."""
+    first = coverages[0]
+    if all(c is first for c in coverages):
+        return jnp.asarray(first, jnp.float32)
+    return jnp.stack([jnp.asarray(c, jnp.float32) for c in coverages])
+
+
+def _merge_sorted_parts(parts: Sequence[SortedScanPart]) -> SortedScanPart:
+    """Merge sorted sub-streams: coverage and R add, N is the union's size,
+    the capacity premise is the widest part's."""
+    if len(parts) == 1:
+        return parts[0]
+    coverage = parts[0].coverage
+    for p in parts[1:]:
+        coverage = coverage + p.coverage
+    return SortedScanPart(
+        total_refs=sum(p.total_refs for p in parts),
+        distinct_pages=float(jnp.sum(coverage > 0)),
+        min_capacity=max(p.min_capacity for p in parts),
+        coverage=coverage,
+        solo_repeats=sum(p.solo_repeats for p in parts))
+
+
 def uniform_eps_profile(workload: Workload, eps: int, geom: CamGeometry,
                         n: Optional[int] = None) -> PageRefProfile:
     """Shared profile for any uniformly error-bounded design (PGM, RadixSpline).
 
-    Dispatches on the workload shape; mixed workloads sum part histograms.
+    Dispatches on the workload shape; mixed workloads sum part histograms,
+    with sorted parts accumulated separately into ``sorted_part`` (they are
+    priced by the policy-aware sorted-scan model, not the IRM fixed point).
     """
     n = int(n if n is not None else workload.n)
     num_pages = geom.num_pages(n)
@@ -162,31 +285,31 @@ def uniform_eps_profile(workload: Workload, eps: int, geom: CamGeometry,
         e_dac = float(total) / max(workload.n_queries, 1)
         return PageRefProfile(counts, float(total), e_dac)
     if workload.kind == SORTED:
-        plo, phi = page_ref.page_intervals(
-            jnp.asarray(workload.positions, jnp.int32),
-            jnp.asarray(workload.hi_positions, jnp.int32),
-            geom.c_ipp, num_pages)
-        r_total, n_distinct = page_ref.sorted_workload_rn(plo, phi)
-        r_total, n_distinct = float(r_total), float(n_distinct)
-        return PageRefProfile(
-            counts=None, total_refs=r_total,
-            expected_dac=r_total / max(workload.n_queries, 1),
-            sorted_stream=True, distinct_pages=n_distinct,
-            min_capacity=1 + int(np.ceil(2 * eps / geom.c_ipp)))
+        return sorted_stream_profile(workload, geom, num_pages, eps=eps)
     if workload.kind == MIXED:
         counts = jnp.zeros((num_pages,), jnp.float32)
         total = 0.0
         dac_mass = 0.0
+        sorted_parts = []
         for part in workload.parts:
             prof = uniform_eps_profile(part, eps, geom, n)
-            if prof.sorted_stream:
-                raise ValueError("sorted parts cannot join a mixed histogram")
-            counts = counts + prof.counts
-            total += prof.total_refs
             dac_mass += prof.expected_dac * part.n_queries
-        return PageRefProfile(counts, total,
-                              dac_mass / max(workload.n_queries, 1))
-    raise ValueError(f"unsupported workload kind {workload.kind!r}")
+            if prof.sorted_part is not None:
+                sorted_parts.append(prof.sorted_part)
+            if not prof.sorted_stream:
+                counts = counts + prof.counts
+                total += prof.total_refs
+        e_dac = dac_mass / max(workload.n_queries, 1)
+        if not sorted_parts:
+            return PageRefProfile(counts, total, e_dac)
+        sp = _merge_sorted_parts(sorted_parts)
+        if total <= 0.0:   # every part is sorted: still a pure sorted stream
+            return PageRefProfile(
+                counts=None, total_refs=sp.total_refs, expected_dac=e_dac,
+                sorted_stream=True, distinct_pages=sp.distinct_pages,
+                min_capacity=sp.min_capacity, sorted_part=sp)
+        return PageRefProfile(counts, total, e_dac, sorted_part=sp)
+    raise UnsupportedWorkloadError(workload.kind)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -234,6 +357,14 @@ class GridCandidate:
             raise ValueError("GridCandidate needs eps or index")
 
 
+class SkippedCandidate(NamedTuple):
+    """A grid candidate dropped from a sweep, with the reason why —
+    budget-infeasible, or a profile the candidate's index cannot produce."""
+
+    knob: object
+    reason: str
+
+
 @dataclasses.dataclass
 class GridResult:
     """All candidate estimates + argmin, from one batched pass."""
@@ -241,7 +372,7 @@ class GridResult:
     estimates: Dict[object, CamEstimate]
     best_knob: object
     seconds: float
-    skipped: tuple = ()                   # knobs infeasible under the budget
+    skipped: Tuple[SkippedCandidate, ...] = ()
 
     @property
     def best(self) -> CamEstimate:
@@ -290,61 +421,136 @@ class CostSession:
         candidates; histograms for uniform-eps candidates come from the
         batched grid kernel, built indexes (RMI) contribute their mixture
         profiles; ALL hit-rate fixed points then solve in a single vmapped
-        bisection.
+        bisection.  Sorted workloads batch through the vmapped sorted-scan
+        solve (one shared coverage profile — see ``_sorted_grid``), and
+        mixed workloads may contain sorted parts, composed with the IRM
+        solve inside ``cache_models.hit_rate_grid``.  Candidates that are
+        budget-infeasible or cannot profile the workload are recorded in
+        ``GridResult.skipped`` with their reasons.
         """
         t0 = time.perf_counter()
         wl = self._sampled(workload, sample_rate, seed)
         geom = self.system.geom
         feasible, skipped = [], []
         for c in candidates:
-            (feasible if self.system.capacity_for(c.size_bytes) >= 1
-             else skipped).append(c)
+            if self.system.capacity_for(c.size_bytes) >= 1:
+                feasible.append(c)
+            else:
+                skipped.append(SkippedCandidate(
+                    c.knob,
+                    f"memory budget {self.system.memory_budget_bytes:.0f} B "
+                    f"leaves no buffer page after a {c.size_bytes:.0f} B "
+                    f"index"))
         if not feasible:
             raise ValueError("memory budget too small for any candidate index")
 
         if wl.kind == SORTED:
-            # Theorem III.1 is already closed-form per candidate — no solver
-            # to batch; evaluate directly (fresh clock per candidate so
-            # estimation_seconds stays per-call, like the non-sorted path).
-            estimates = {}
-            for c in feasible:
-                c_t0 = time.perf_counter()
-                prof = (c.index.page_ref_profile(wl, geom)
-                        if c.index is not None
-                        else uniform_eps_profile(wl, c.eps, geom))
-                estimates[c.knob] = self._finish(
-                    prof, wl, self.system.capacity_for(c.size_bytes), c_t0)
-            best = min(estimates, key=lambda k: estimates[k].io_per_query)
-            return GridResult(estimates, best, time.perf_counter() - t0,
-                              tuple(c.knob for c in skipped))
+            return self._sorted_grid(feasible, skipped, wl, t0)
 
         uniform = [c for c in feasible if c.index is None]
         backed = [c for c in feasible if c.index is not None]
 
-        rows, totals, dacs, caps, knobs = [], [], [], [], []
+        rows, totals, dacs, caps, knobs, sparts = [], [], [], [], [], []
         if uniform:
-            counts_u, totals_u, dacs_u = self._uniform_grid(uniform, wl)
+            counts_u, totals_u, dacs_u, spart_u = self._uniform_grid(
+                uniform, wl)
             rows.extend(counts_u)
             totals.extend(totals_u)
             dacs.extend(dacs_u)
             caps.extend(self.system.capacity_for(c.size_bytes) for c in uniform)
             knobs.extend(c.knob for c in uniform)
+            # Sorted windows are eps-independent; only the Thm III.1 capacity
+            # premise varies across uniform-eps candidates (eps <= 0 keeps
+            # the shared profile's widest-observed-window premise, matching
+            # sorted_part_for's single-candidate dispatch).
+            sparts.extend(
+                None if spart_u is None
+                else spart_u if c.eps <= 0
+                else dataclasses.replace(
+                    spart_u,
+                    min_capacity=1 + int(np.ceil(2 * c.eps / geom.c_ipp)))
+                for c in uniform)
         for c in backed:
-            prof = c.index.page_ref_profile(wl, geom)
-            rows.append(prof.counts)
-            totals.append(prof.total_refs)
+            try:
+                prof = c.index.page_ref_profile(wl, geom)
+            except UnsupportedWorkloadError as e:
+                skipped.append(SkippedCandidate(c.knob, str(e)))
+                continue
+            if prof.counts is None:
+                # A mixed workload whose parts are ALL sorted profiles as a
+                # pure sorted stream (counts=None, total_refs=R_sorted):
+                # the IRM part is empty, everything lives in sorted_part
+                # (synthesized from the legacy fields if a third-party
+                # profile carries only those).
+                sp = prof.sorted_part or SortedScanPart(
+                    prof.total_refs, float(prof.distinct_pages),
+                    prof.min_capacity)
+                if sp.coverage is not None:
+                    width = sp.coverage.shape[0]
+                elif wl.n is not None:
+                    width = geom.num_pages(int(wl.n))
+                else:
+                    raise ValueError("Workload.n (key-file size) required "
+                                     "for grid estimation")
+                rows.append(jnp.zeros((width,), jnp.float32))
+                totals.append(0.0)
+                sparts.append(sp)
+            else:
+                rows.append(prof.counts)
+                totals.append(prof.total_refs)
+                sparts.append(prof.sorted_part)
             dacs.append(prof.expected_dac)
             caps.append(self.system.capacity_for(c.size_bytes))
             knobs.append(c.knob)
+        if not knobs:
+            raise UnsupportedWorkloadError(
+                wl.kind,
+                detail="no grid candidate could profile this workload ("
+                       + "; ".join(s.reason for s in skipped) + ")")
 
         counts = jnp.stack([jnp.asarray(r, jnp.float32) for r in rows])
         sample_refs = jnp.asarray(totals, jnp.float32)
         full_refs = sample_refs * wl.scale
-        h, n_distinct = cache_models.hit_rate_grid(
-            self.system.policy, counts, sample_refs, full_refs,
-            jnp.asarray(caps, jnp.float32))
+        caps_arr = jnp.asarray(caps, jnp.float32)
+        num_pages = counts.shape[1]
+        surrogate = {}
+        if any(sp is not None for sp in sparts):
+            # Mixed workload with sorted sub-streams: compose the IRM solve
+            # with the policy-aware sorted-scan model inside hit_rate_grid.
+            zero = SortedScanPart(0.0, 0.0, 1,
+                                  jnp.zeros((num_pages,), jnp.float32), 0.0)
+            sps = [sp if sp is not None else zero for sp in sparts]
+            # coverage-less legacy parts: remember the true N per row, price
+            # through the compulsory-equivalent surrogate histogram
+            for i, sp in enumerate(sps):
+                if sp.coverage is None:
+                    surrogate[i] = sp.distinct_pages
+                    sps[i] = dataclasses.replace(
+                        sp, coverage=_compulsory_coverage(sp, num_pages))
+            s_refs = jnp.asarray([sp.total_refs for sp in sps], jnp.float32)
+            h, n_distinct = cache_models.hit_rate_grid(
+                self.system.policy, counts, sample_refs, full_refs, caps_arr,
+                sorted_coverage=_stack_or_share(
+                    [sp.coverage for sp in sps]),
+                sorted_refs=s_refs,
+                sorted_distinct=jnp.asarray(
+                    [sp.distinct_pages for sp in sps], jnp.float32),
+                sorted_solo=jnp.asarray(
+                    [sp.solo_repeats for sp in sps], jnp.float32),
+                sorted_min_caps=jnp.asarray(
+                    [sp.min_capacity for sp in sps], jnp.float32),
+                sorted_full_refs=s_refs * wl.scale)
+            sorted_refs = [sp.total_refs for sp in sps]
+        else:
+            h, n_distinct = cache_models.hit_rate_grid(
+                self.system.policy, counts, sample_refs, full_refs, caps_arr)
+            sorted_refs = [0.0] * len(knobs)
         h = np.asarray(h, np.float64)
         n_distinct = np.asarray(n_distinct, np.float64)
+        for i, true_n in surrogate.items():
+            # report the same footprint _finish's coverage-less fallback
+            # does (IRM distinct + the part's N), not the surrogate's page
+            n_distinct[i] = float(jnp.sum(counts[i] > 0)) + true_n
 
         elapsed = time.perf_counter() - t0
         per = elapsed / max(len(knobs), 1)
@@ -354,17 +560,118 @@ class CostSession:
             estimates[knob] = CamEstimate(
                 io_per_query=io, hit_rate=float(h[i]), dac=float(dacs[i]),
                 capacity_pages=int(caps[i]),
-                total_refs=float(totals[i]) * wl.scale,
+                total_refs=(float(totals[i]) + sorted_refs[i]) * wl.scale,
                 distinct_pages=float(n_distinct[i]),
                 estimation_seconds=per, policy=self.system.policy,
                 device_cost=self._device_cost(io))
         best = min(estimates, key=lambda k: estimates[k].io_per_query)
-        return GridResult(estimates, best, elapsed,
-                          tuple(c.knob for c in skipped))
+        return GridResult(estimates, best, elapsed, tuple(skipped))
+
+    def _sorted_grid(self, feasible, skipped, wl: Workload,
+                     t0: float) -> GridResult:
+        """Batched sorted-stream grid (the vmapped counterpart of the
+        point/range banded-matmul kernels).
+
+        The probe windows of a sorted stream do not depend on eps, so ONE
+        shared (R, N, coverage, solo) profile serves every uniform-eps
+        candidate — only the capacity and the Theorem III.1 premise vary —
+        and all candidates solve through one call of
+        ``cache_models.sorted_scan_hit_rate_grid``.
+        """
+        geom = self.system.geom
+        shared = None
+        entries = []          # (candidate, SortedScanPart, capacity)
+        for c in feasible:
+            if c.index is not None:
+                try:
+                    prof = c.index.page_ref_profile(wl, geom)
+                except UnsupportedWorkloadError as e:
+                    skipped.append(SkippedCandidate(c.knob, str(e)))
+                    continue
+                sp = prof.sorted_part
+                if sp is None:
+                    sp = SortedScanPart(prof.total_refs,
+                                        float(prof.distinct_pages),
+                                        prof.min_capacity)
+            else:
+                if shared is None:
+                    if wl.n is None:
+                        raise ValueError("Workload.n (key-file size) required "
+                                         "for grid estimation")
+                    shared = sorted_part_for(wl, 0, geom,
+                                             geom.num_pages(int(wl.n)))
+                # eps <= 0 keeps the shared profile's widest-observed-window
+                # premise, matching sorted_part_for's dispatch.
+                sp = (shared if c.eps <= 0 else dataclasses.replace(
+                    shared,
+                    min_capacity=1 + int(np.ceil(2 * c.eps / geom.c_ipp))))
+            entries.append((c, sp, self.system.capacity_for(c.size_bytes)))
+        if not entries:
+            raise UnsupportedWorkloadError(
+                wl.kind,
+                detail="no grid candidate could profile this workload ("
+                       + "; ".join(s.reason for s in skipped) + ")")
+
+        batched = [e for e in entries if e[1].coverage is not None]
+        if batched:
+            h_arr = np.asarray(cache_models.sorted_scan_hit_rate_grid(
+                self.system.policy,
+                _stack_or_share([sp.coverage for _, sp, _ in batched]),
+                jnp.asarray([sp.total_refs for _, sp, _ in batched],
+                            jnp.float32),
+                jnp.asarray([sp.distinct_pages for _, sp, _ in batched],
+                            jnp.float32),
+                jnp.asarray([sp.solo_repeats for _, sp, _ in batched],
+                            jnp.float32),
+                jnp.asarray([cap for _, _, cap in batched], jnp.float32),
+                jnp.asarray([sp.min_capacity for _, sp, _ in batched],
+                            jnp.float32)), np.float64)
+        hit_rates = {}
+        k = 0
+        for c, sp, cap in entries:
+            if sp.coverage is not None:
+                hit_rates[c.knob] = float(h_arr[k])
+                k += 1
+            else:   # profile without a coverage histogram: recency form
+                hit_rates[c.knob] = cache_models.sorted_scan_hit_rate(
+                    self.system.policy, cap, total_refs=sp.total_refs,
+                    distinct_pages=sp.distinct_pages,
+                    min_capacity=sp.min_capacity)
+
+        elapsed = time.perf_counter() - t0
+        per = elapsed / max(len(entries), 1)
+        estimates: Dict[object, CamEstimate] = {}
+        for c, sp, cap in entries:
+            h = hit_rates[c.knob]
+            e_dac = sp.total_refs / max(wl.n_queries, 1)
+            io = (1.0 - h) * e_dac
+            estimates[c.knob] = CamEstimate(
+                io_per_query=io, hit_rate=h, dac=e_dac, capacity_pages=cap,
+                total_refs=sp.total_refs, distinct_pages=sp.distinct_pages,
+                estimation_seconds=per,
+                policy=self._sorted_label(cap, sp),
+                device_cost=self._device_cost(io))
+        best = min(estimates, key=lambda kn: estimates[kn].io_per_query)
+        return GridResult(estimates, best, elapsed, tuple(skipped))
+
+    def _sorted_label(self, cap: int, sp: SortedScanPart) -> str:
+        """Which sorted-scan form priced this estimate (CamEstimate.policy)."""
+        freq_aware = (self.system.policy not in cache_models.RECENCY_POLICIES
+                      and sp.coverage is not None
+                      and sp.min_capacity <= cap < sp.distinct_pages)
+        return (f"sorted-{self.system.policy}" if freq_aware
+                else "sorted-closed-form")
 
     # -------------------------------------------------------------- internals
     def _uniform_grid(self, cands: Sequence[GridCandidate], wl: Workload):
-        """(counts rows, totals, dacs) for uniform-eps candidates, batched."""
+        """(counts rows, totals, dacs, sorted part) for uniform-eps
+        candidates, batched.
+
+        Point/range parts accumulate into the shared banded-matmul
+        histograms; sorted parts accumulate into ONE merged
+        :class:`SortedScanPart` (their windows are eps-independent) whose
+        capacity premise the caller re-derives per candidate.
+        """
         geom = self.system.geom
         if wl.n is None:
             raise ValueError("Workload.n (key-file size) required for "
@@ -374,6 +681,7 @@ class CostSession:
         eps_f = np.asarray([c.eps for c in cands], np.float64)
         dac_per_query = np.asarray(
             dac.expected_dac(eps_f, geom.c_ipp, geom.strategy), np.float64)
+        sorted_parts = []
 
         def grid_counts(w: Workload):
             if w.kind == POINT:
@@ -391,6 +699,12 @@ class CostSession:
                     eps_arr, geom.c_ipp, num_pages, int(wl.n))
                 totals = np.asarray(totals, np.float64)
                 return counts, totals, totals.copy()
+            if w.kind == SORTED:
+                sp = sorted_part_for(w, 0, geom, num_pages)
+                sorted_parts.append(sp)
+                return (jnp.zeros((len(cands), num_pages), jnp.float32),
+                        np.zeros(len(cands)),
+                        np.full(len(cands), sp.total_refs))
             if w.kind == MIXED:
                 counts = jnp.zeros((len(cands), num_pages), jnp.float32)
                 totals = np.zeros(len(cands))
@@ -399,33 +713,69 @@ class CostSession:
                     c, t, d = grid_counts(part)
                     counts, totals, dac_mass = counts + c, totals + t, dac_mass + d
                 return counts, totals, dac_mass
-            raise ValueError(f"grid estimation unsupported for {w.kind!r}")
+            raise UnsupportedWorkloadError(
+                wl.kind, part=w.kind if w is not wl else None)
 
         counts, totals, dac_mass = grid_counts(wl)
         dacs = dac_mass / max(wl.n_queries, 1)
-        return list(counts), list(totals), list(dacs)
+        spart = (_merge_sorted_parts(sorted_parts) if sorted_parts else None)
+        return list(counts), list(totals), list(dacs), spart
 
     def _finish(self, prof: PageRefProfile, wl: Workload, cap: int,
                 t0: float) -> CamEstimate:
-        """Compose a profile with the cache model — Eq. 3 (legacy-identical)."""
+        """Compose a profile with the cache model — Eq. 3 (legacy-identical).
+
+        Sorted streams (pure, or the sorted sub-part of a mixed workload)
+        dispatch by ``system.policy`` through the shared
+        ``cache_models.sorted_scan`` family: the Theorem III.1 compulsory
+        closed form under recency eviction, the frequency-aware form under
+        LFU-like policies, the thrash regime below the capacity premise.
+        """
         if prof.sorted_stream:
-            r, nd = prof.total_refs, float(prof.distinct_pages)
-            h = 0.0 if cap < prof.min_capacity else (r - nd) / max(r, 1e-30)
+            sp = prof.sorted_part or SortedScanPart(
+                prof.total_refs, float(prof.distinct_pages),
+                prof.min_capacity)
+            h = cache_models.sorted_scan_hit_rate(
+                self.system.policy, cap, total_refs=sp.total_refs,
+                distinct_pages=sp.distinct_pages, coverage=sp.coverage,
+                solo_repeats=sp.solo_repeats, min_capacity=sp.min_capacity)
             io = (1.0 - h) * prof.expected_dac
-            return CamEstimate(io, h, prof.expected_dac, cap, r, nd,
-                               time.perf_counter() - t0, "sorted-closed-form",
+            return CamEstimate(io, h, prof.expected_dac, cap,
+                               sp.total_refs, sp.distinct_pages,
+                               time.perf_counter() - t0,
+                               self._sorted_label(cap, sp),
                                device_cost=self._device_cost(io))
         full_refs = prof.total_refs * wl.scale
         n_distinct = (float(prof.distinct_pages)
                       if prof.distinct_pages is not None
                       else float(jnp.sum(prof.counts > 0)))
-        if cap <= 0:
+        if cap <= 0 or prof.total_refs <= 0:
             h = 0.0
         else:
             probs = prof.counts / jnp.maximum(float(prof.total_refs), 1e-30)
             h = float(cache_models.hit_rate(
                 self.system.policy, cap, probs, total_requests=full_refs,
                 distinct_pages=n_distinct))
+        sp = prof.sorted_part
+        if sp is not None:
+            # Mixed workload with sorted sub-streams: expected misses add
+            # over the shared buffer (each part priced by its own model).
+            h_s = cache_models.sorted_scan_hit_rate(
+                self.system.policy, cap, total_refs=sp.total_refs,
+                distinct_pages=sp.distinct_pages, coverage=sp.coverage,
+                solo_repeats=sp.solo_repeats, min_capacity=sp.min_capacity)
+            s_full = sp.total_refs * wl.scale
+            total_full = full_refs + s_full
+            miss = (1.0 - h) * full_refs + (1.0 - h_s) * s_full
+            h = (1.0 - miss / max(total_full, 1.0)
+                 if total_full > 0 else 0.0)
+            full_refs = total_full
+            n_distinct = (float(jnp.sum((prof.counts > 0)
+                                        | (sp.coverage > 0)))
+                          if sp.coverage is not None
+                          # coverage-less legacy part: no union available,
+                          # report the parts' sum
+                          else n_distinct + sp.distinct_pages)
         io = (1.0 - h) * float(prof.expected_dac)
         return CamEstimate(
             io_per_query=io, hit_rate=h, dac=float(prof.expected_dac),

@@ -28,8 +28,9 @@ import numpy as np
 from repro.core import dac as dac_mod
 from repro.core import page_ref
 from repro.core.cam import CamGeometry
-from repro.core.session import PageRefProfile, uniform_eps_profile
-from repro.core.workload import POINT, Workload
+from repro.core.session import (PageRefProfile, UnsupportedWorkloadError,
+                                sorted_stream_profile, uniform_eps_profile)
+from repro.core.workload import POINT, SORTED, Workload
 from repro.index import pgm as pgm_mod
 from repro.index import radixspline as rs_mod
 from repro.index import rmi as rmi_mod
@@ -162,10 +163,21 @@ class RMIAdapter:
 
     def page_ref_profile(self, workload: Workload,
                          geom: CamGeometry) -> PageRefProfile:
-        """§V-C mixture: per-query leaf error bounds, quantized to pow2."""
+        """§V-C mixture: per-query leaf error bounds, quantized to pow2.
+
+        Sorted probe streams carry explicit position windows, so they need
+        no routing — RMI prices them through the same shared sorted-stream
+        profile as the uniformly error-bounded families (the capacity
+        premise read off the widest observed window).
+        """
+        if workload.kind == SORTED:
+            return sorted_stream_profile(workload, geom,
+                                         geom.num_pages(self.index.n))
         if workload.kind != POINT or workload.query_keys is None:
-            raise ValueError("RMI profiling needs a point workload with "
-                             "query_keys (the root must route them)")
+            raise UnsupportedWorkloadError(
+                workload.kind,
+                detail="RMI profiling needs a point workload with "
+                       "query_keys (the root must route them)")
         index = self.index
         leaf = index.route(workload.query_keys)
         eps_q = quantize_eps(index.leaf_eps[leaf])

@@ -11,9 +11,13 @@ miss_S is CAM's cache-aware physical-miss estimate for point-probing the
 segment: with enough buffer capacity for one probe window (the Theorem III.1
 premise) it is d_S, the distinct-page union — one compulsory miss per
 distinct page; below that capacity every logical reference misses, so
-miss_S = R_S, the segment's total window mass.  The greedy pass closes a
-segment when its range span hits K_max or range probing wins by margin gamma
-once N_min probes have accumulated.
+miss_S = R_S, the segment's total window mass.  Under frequency-based
+eviction (LFU) the session scales lambda_point by the shared sorted-scan
+model's miss/compulsory ratio (``cache_models.sorted_scan_misses`` — see
+``JoinSession._policy_miss_scale``) before partitioning, so the point/range
+decisions price the same policy pathology the estimator predicts.  The
+greedy pass closes a segment when its range span hits K_max or range probing
+wins by margin gamma once N_min probes have accumulated.
 
 ``partition_probes`` is the vectorized two-pass kernel (prefix-scan
 distinct-page union + segment-boundary selection over numpy arrays, scanned

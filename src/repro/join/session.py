@@ -21,9 +21,12 @@ into the classic planner/executor pair:
 Cost predictions compose Eq. 17's fitted coefficients with CAM's cache-aware
 miss estimates rather than charging the fitted constants blindly:
 
-* sorted streams price point probing at one compulsory miss per distinct
-  page (Theorem III.1) — unless the buffer cannot hold a probe window, in
-  which case every logical reference misses (the thrash regime);
+* sorted streams price point probing through the shared policy-aware
+  sorted-scan model (``cache_models.sorted_scan_misses`` — the same model
+  behind ``CostSession``'s sorted branch): one compulsory miss per distinct
+  page under recency eviction (Theorem III.1), the frequency-aware closed
+  form under LFU-like policies, and the thrash regime when the buffer
+  cannot hold a probe window (every logical reference misses);
 * the unsorted INLJ stream is priced through the full CostSession IRM
   hit-rate machinery (Algorithm 1) on the outer point workload.
 """
@@ -36,7 +39,7 @@ from typing import Dict, Optional, Tuple, Union
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import cache_models
+from repro.core import cache_models, page_ref
 from repro.core.session import CostSession, PlanCost, System
 from repro.core.workload import Workload, locate
 from repro.index.adapters import wrap_index
@@ -192,7 +195,7 @@ class JoinSession:
         n = probe.shape[0]
         refs = int(widths.sum())
         miss_scale = (1.0 if thrash or not sorted_stream
-                      else self._sorted_miss_scale(plo, phi))
+                      else self._policy_miss_scale(plo, phi))
 
         if strategy == "hybrid":
             # Bias Algorithm 2's point/range decisions by the same policy
@@ -312,32 +315,31 @@ class JoinSession:
                 seconds += p.delta + p.alpha * s.n_keys + p.lambda_point * miss
         return PlanCost(strategy, seconds, io, refs)
 
-    def _sorted_miss_scale(self, plo: np.ndarray, phi: np.ndarray) -> float:
+    def _policy_miss_scale(self, plo: np.ndarray, phi: np.ndarray) -> float:
         """Policy correction for sorted streams (point probing).
 
         Theorem III.1's one-compulsory-miss-per-distinct-page closed form
         relies on recency-based eviction keeping the sliding probe window
-        resident; LRU and FIFO replay confirm it, but frequency-based LFU
-        evicts the advancing frontier and misses more.  For such policies
-        the segment miss terms are scaled by the ratio of the IRM hit-rate
-        model's miss count (Algorithm 1 on the window-coverage histogram)
-        to the compulsory count.
+        resident; frequency-based LFU evicts the advancing frontier (and
+        resets its count) so it misses more.  The segment miss terms are
+        scaled by the ratio of the shared sorted-scan model's policy-aware
+        miss count (``cache_models.sorted_scan_misses`` on the
+        window-coverage histogram) to the compulsory count — the SAME model
+        ``CostSession._finish`` applies to sorted workloads, so planner and
+        estimator can no longer disagree on one stream.
         """
-        if self.system.policy in ("lru", "fifo") or plo.shape[0] == 0:
+        if self.system.policy in cache_models.RECENCY_POLICIES \
+                or plo.shape[0] == 0:
             return 1.0
-        np_pages = self.num_pages
-        diff = (np.bincount(plo, minlength=np_pages + 1)[:np_pages]
-                - np.bincount(phi + 1, minlength=np_pages + 2)[:np_pages])
-        counts = np.cumsum(diff).astype(np.float64)
-        r = counts.sum()
-        distinct = float((counts > 0).sum())
-        if distinct == 0 or r <= 0:
+        r, nd, coverage, solo = page_ref.sorted_workload_stats(
+            jnp.asarray(plo), jnp.asarray(phi), self.num_pages)
+        r, nd = float(r), float(nd)
+        if nd == 0 or r <= 0:
             return 1.0
-        h = float(cache_models.hit_rate(
-            self.system.policy, self.capacity,
-            jnp.asarray(counts / r, jnp.float32),
-            total_requests=float(r), distinct_pages=distinct))
-        return max(1.0, (1.0 - h) * r / distinct)
+        miss = cache_models.sorted_scan_misses(
+            self.system.policy, self.capacity, total_refs=r,
+            distinct_pages=nd, coverage=coverage, solo_repeats=float(solo))
+        return max(1.0, miss / nd)
 
     def _inlj_misses(self, probe: np.ndarray,
                      sample_rate: float = 1.0) -> float:

@@ -1,0 +1,14 @@
+"""Pallas API compatibility shims shared by the kernel modules.
+
+jax >= 0.5 renamed ``pltpu.TPUCompilerParams`` to ``CompilerParams``;
+resolve whichever this toolchain provides once, here, so every kernel
+lowers on either version.
+"""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+CompilerParams = getattr(pltpu, "CompilerParams", None) \
+    or pltpu.TPUCompilerParams
+
+__all__ = ["CompilerParams"]

@@ -151,6 +151,91 @@ def test_sorted_workload_theorem_lfu_caveat(eps, c_ipp, n_queries, seed):
     assert misses_big == N                 # exact once capacity has slack
 
 
+def _coverage(lo, hi, num_pages):
+    diff = (np.bincount(lo, minlength=num_pages + 1)[:num_pages]
+            - np.bincount(hi + 1, minlength=num_pages + 2)[:num_pages])
+    return np.cumsum(diff).astype(np.float64)
+
+
+# ---------------------------------------------------------------------------
+# sorted_scan family — the policy-aware sorted-stream model
+# ---------------------------------------------------------------------------
+
+def test_sorted_scan_dispatch_regimes():
+    lo, hi, R, N = _sorted_windows(16, 8, 400, seed=11)
+    num_pages = int(hi.max()) + 1
+    cov = _coverage(lo, hi, num_pages)
+    kw = dict(total_refs=float(R), distinct_pages=float(N), coverage=cov)
+    # thrash: below the Theorem III.1 capacity premise, every ref misses
+    assert cm.sorted_scan_misses("lru", 2, min_capacity=5, **kw) == R
+    assert cm.sorted_scan_hit_rate("lfu", 2, min_capacity=5, **kw) == 0.0
+    # recency policies: compulsory closed form at ANY capacity above premise
+    for pol in cm.RECENCY_POLICIES:
+        assert cm.sorted_scan_misses(pol, 10, **kw) == N
+    # LFU with capacity slack: compulsory too (buffer never evicts a window)
+    assert cm.sorted_scan_misses("lfu", N + 5, **kw) == N
+    # LFU below N: frequency-aware, bracketed by [N, R], monotone in capacity
+    small = cm.sorted_scan_misses("lfu", max(2, N // 10), **kw)
+    mid = cm.sorted_scan_misses("lfu", max(3, N // 2), **kw)
+    assert N <= mid <= small <= R
+    # without a coverage histogram the model degrades to the recency form
+    assert cm.sorted_scan_misses(
+        "lfu", 10, total_refs=float(R), distinct_pages=float(N)) == N
+
+
+def test_sorted_scan_zero_guards_match_compulsory():
+    """Satellite fix: _finish's old inline form used max(r, 1e-30); the
+    shared model must use hit_rate_compulsory's guards everywhere."""
+    assert cm.sorted_scan_hit_rate("lru", 8, total_refs=0.0,
+                                   distinct_pages=0.0) == 0.0
+    assert float(cm.hit_rate_compulsory(0.0, 0.0)) == 0.0
+    for r, n in [(0.5, 0.25), (1.0, 1.0), (100.0, 7.0)]:
+        assert abs(cm.sorted_scan_hit_rate("fifo", 1_000_000, total_refs=r,
+                                           distinct_pages=n)
+                   - float(cm.hit_rate_compulsory(r, n))) < 1e-7
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    st.integers(min_value=1, max_value=64),
+    st.integers(min_value=4, max_value=64),
+    st.integers(min_value=50, max_value=300),
+    st.integers(min_value=0, max_value=10_000),
+)
+def test_sorted_scan_lfu_model_bracketed_vs_replay(eps, c_ipp, n_queries, seed):
+    """The frequency-aware form stays within the physical bracket [N, R]
+    and never under-cuts the compulsory bound that LFU replay obeys."""
+    lo, hi, R, N = _sorted_windows(eps, c_ipp, n_queries, seed)
+    num_pages = int(hi.max()) + 1
+    cov = _coverage(lo, hi, num_pages)
+    cap = max(2, N // 3)
+    miss = cm.sorted_scan_misses("lfu", cap, total_refs=float(R),
+                                 distinct_pages=float(N), coverage=cov)
+    assert N - 1e-3 <= miss <= R + 1e-3
+    actual = replay.replay_windows(lo, hi, cap, "lfu").sum()
+    assert actual >= N                      # replay obeys the same floor
+
+
+def test_sorted_scan_grid_matches_scalar():
+    lo, hi, R, N = _sorted_windows(32, 16, 500, seed=4)
+    num_pages = int(hi.max()) + 1
+    cov = jnp.asarray(_coverage(lo, hi, num_pages), jnp.float32)
+    caps = np.array([1, 3, 10, N // 2, N + 10], np.float64)
+    min_caps = np.full_like(caps, 3.0)
+    solo = 7.0
+    for policy in ("lru", "fifo", "lfu"):
+        h_grid = np.asarray(cm.sorted_scan_hit_rate_grid(
+            policy, jnp.broadcast_to(cov, (len(caps),) + cov.shape),
+            jnp.full((len(caps),), float(R)), jnp.full((len(caps),), float(N)),
+            jnp.full((len(caps),), solo), jnp.asarray(caps, jnp.float32),
+            jnp.asarray(min_caps, jnp.float32)))
+        for i, cap in enumerate(caps):
+            h_ref = cm.sorted_scan_hit_rate(
+                policy, cap, total_refs=float(R), distinct_pages=float(N),
+                coverage=cov, solo_repeats=solo, min_capacity=3)
+            assert abs(float(h_grid[i]) - h_ref) < 1e-5, (policy, cap)
+
+
 def test_lemma_iv1_sorted_order_minimizes_misses():
     """Sorted probe order attains the compulsory-miss lower bound; random
     permutations can only do worse (Lemma IV.1)."""

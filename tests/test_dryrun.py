@@ -19,6 +19,7 @@ def _run(args, tmp_path, name):
     return rows
 
 
+@pytest.mark.env_limited("production-mesh AOT compile needs >1 device")
 @pytest.mark.parametrize("arch,shape", [
     ("starcoder2-3b", "decode_32k"),     # serve cell
     ("qwen2-moe-a2.7b", "train_4k"),     # MoE train cell (EP + mb + remat)

@@ -132,6 +132,25 @@ def test_sorted_point_plan_io_is_sharp(world):
         <= 0.05 * st.physical_ios
 
 
+@pytest.mark.parametrize("policy", POLICIES)
+def test_join_and_cost_session_share_sorted_model(world, policy):
+    """The planner's point-probe miss pricing and CostSession's sorted
+    estimate must be the SAME number on the same stream — the two layers no
+    longer carry divergent sorted-scan models."""
+    from repro.core.session import CostSession
+    keys, outer = world
+    s = _session(keys, "pgm", policy)
+    plan = s.plan(outer, "point-only", n_min=128, k_max=4096)
+    probe = np.sort(outer)
+    plo, phi = s.inner.probe_windows(probe, GEOM)
+    wl = Workload.sorted_stream(plo * GEOM.c_ipp, phi * GEOM.c_ipp,
+                                n=len(keys))
+    est = CostSession(s.system).estimate(s.inner, wl)
+    pred = est.io_per_query * wl.n_queries
+    assert abs(plan.cost.physical_ios - pred) < 1e-5 * max(pred, 1.0), \
+        (policy, plan.cost.physical_ios, pred)
+
+
 # ---------------------------------------------------------------------------
 # CAM-predicted plan selection vs exhaustive replay
 # ---------------------------------------------------------------------------

@@ -33,6 +33,8 @@ def _xla_flops(cfg, shape):
     return float(ca.get("flops", 0.0))
 
 
+@pytest.mark.env_limited("XLA cost-analysis FLOP accounting differs across "
+                         "backends; tolerances hold on the TPU toolchain")
 @pytest.mark.parametrize("arch", ["yi-34b", "qwen2-moe-a2.7b", "rwkv6-3b"])
 def test_analytic_matches_xla_at_l1(arch):
     base = reduced(ARCHS[arch])
@@ -48,6 +50,8 @@ def test_analytic_matches_xla_at_l1(arch):
     assert 0.6 < ratio < 1.5, (arch, cost.flops, xla)
 
 
+@pytest.mark.env_limited("XLA cost-analysis FLOP accounting differs across "
+                         "backends; tolerances hold on the TPU toolchain")
 def test_scan_body_counted_once_by_xla():
     """The methodology premise: cost_analysis does NOT multiply scan bodies
     by trip count, so at depth L the reported flops are ~flops(L=1)."""

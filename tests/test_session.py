@@ -19,7 +19,7 @@ from repro.core import cache_models, cam, dac, page_ref
 from repro.core.qerror import q_error
 from repro.core.replay import replay_windows
 from repro.core.session import (CostSession, GridCandidate, System,
-                                UniformEpsModel)
+                                UniformEpsModel, UnsupportedWorkloadError)
 from repro.core.workload import Workload, locate
 from repro.data.datasets import make_dataset
 from repro.data.workloads import WorkloadSpec, point_workload, range_workload
@@ -153,7 +153,7 @@ def test_estimate_grid_matches_single_loop(world, policy):
     res = session.estimate_grid(cands, wl)
     kept = [e for e in grid if sizes[e] < BUDGET - GEOM.page_bytes]
     assert set(res.estimates) == set(kept)
-    assert set(res.skipped) == set(grid) - set(kept)
+    assert {s.knob for s in res.skipped} == set(grid) - set(kept)
     for e in kept:
         single = session.estimate(UniformEpsModel(e, n, sizes[e]), wl)
         g = res.estimates[e]
@@ -218,6 +218,252 @@ def test_estimator_matches_replay_all_families(world, family, policy):
     lo, hi = adapter.window(qk)
     misses = replay_windows(lo // GEOM.c_ipp, hi // GEOM.c_ipp, cap, policy)
     assert float(q_error(est.io_per_query, misses.mean())) < 1.4, family
+
+
+# ---------------------------------------------------------------------------
+# Sorted streams: policy-aware model vs replay, grid equivalence, typed skips
+# ---------------------------------------------------------------------------
+
+def _sorted_stream_workload(adapter, qk, n):
+    """Sorted probe stream through an adapter's own windows (position space)."""
+    plo, phi = adapter.probe_windows(np.sort(qk), GEOM)
+    return (Workload.sorted_stream(plo * GEOM.c_ipp, phi * GEOM.c_ipp, n=n),
+            plo, phi)
+
+
+@pytest.mark.parametrize("family", sorted(_BUILDERS))
+@pytest.mark.parametrize("policy", ["lru", "fifo", "lfu"])
+@pytest.mark.parametrize("cap", [384, 512])
+def test_sorted_estimator_matches_replay(world, family, policy, cap):
+    """Sorted-stream oracle across 3 policies x 3 families x 2 capacities:
+    Theorem III.1 is exact under recency eviction; the frequency-aware
+    closed form must track LFU replay within q-error < 2 (the regime the
+    recency form gets systematically wrong)."""
+    keys, qk, qpos = world
+    adapter = _BUILDERS[family](keys)
+    wl, plo, phi = _sorted_stream_workload(adapter, qk, len(keys))
+    system = System(GEOM, cap * GEOM.page_bytes + adapter.size_bytes, policy)
+    assert system.capacity_for(adapter.size_bytes) == cap
+    est = CostSession(system).estimate(adapter, wl)
+    actual = replay_windows(plo, phi, cap, policy).sum()
+    pred = est.io_per_query * wl.n_queries
+    if policy == "lfu":
+        assert float(q_error(pred, max(actual, 1))) < 2.0, (family, pred, actual)
+        assert est.policy == "sorted-lfu"
+        assert pred >= est.distinct_pages - 1e-3   # compulsory floor
+    else:
+        # exact: one compulsory miss per distinct page
+        assert abs(pred - actual) < 1e-3 * max(actual, 1), (family, pred, actual)
+        assert est.policy == "sorted-closed-form"
+
+
+def test_sorted_lfu_estimate_corrects_recency_form(world):
+    """The bug this PR fixes: under LFU the recency closed form is
+    systematically optimistic; the policy-aware estimate must sit strictly
+    above it and strictly closer to replay."""
+    keys, qk, qpos = world
+    adapter = _BUILDERS["pgm"](keys)
+    wl, plo, phi = _sorted_stream_workload(adapter, qk, len(keys))
+    cap = 384
+    system = System(GEOM, cap * GEOM.page_bytes + adapter.size_bytes, "lfu")
+    est = CostSession(system).estimate(adapter, wl)
+    pred = est.io_per_query * wl.n_queries
+    compulsory = est.distinct_pages
+    actual = replay_windows(plo, phi, cap, "lfu").sum()
+    assert actual > 1.5 * compulsory          # LFU really does miss more
+    assert pred > compulsory                  # model no longer optimistic
+    assert abs(pred - actual) < abs(compulsory - actual)
+
+
+@pytest.mark.parametrize("policy", ["lru", "lfu"])
+def test_estimate_grid_sorted_matches_single(world, policy):
+    """Batched sorted grid (one vmapped solve) == per-candidate estimates."""
+    keys, qk, qpos = world
+    n = len(keys)
+    session = CostSession(System(GEOM, BUDGET, policy))
+    wlo = np.sort(qpos)
+    wl = Workload.sorted_stream(wlo - 64, wlo + 64, n=n)
+    grid = (8, 64, 256, 1024)
+    sizes = {e: 2e9 / e for e in grid}
+    cands = [GridCandidate(knob=e, eps=e, size_bytes=sizes[e]) for e in grid]
+    res = session.estimate_grid(cands, wl)
+    kept = [e for e in grid if sizes[e] < BUDGET - GEOM.page_bytes]
+    assert set(res.estimates) == set(kept)
+    assert {s.knob for s in res.skipped} == set(grid) - set(kept)
+    for e in kept:
+        single = session.estimate(UniformEpsModel(e, n, sizes[e]), wl)
+        g = res.estimates[e]
+        assert abs(g.io_per_query - single.io_per_query) \
+            < 1e-4 * max(single.io_per_query, 1e-3), (e, policy)
+        assert abs(g.hit_rate - single.hit_rate) < 1e-4
+        assert g.capacity_pages == single.capacity_pages
+        assert g.policy == single.policy
+
+
+@pytest.mark.parametrize("policy", ["lru", "lfu"])
+def test_estimate_grid_sorted_rmi_backed(world, policy):
+    """Index-backed (RMI) candidates join a sorted grid — no uniform eps."""
+    keys, qk, qpos = world
+    n = len(keys)
+    session = CostSession(System(GEOM, BUDGET, policy))
+    rmi = RMIAdapter.build(keys, 1024)
+    wl, _, _ = _sorted_stream_workload(rmi, qk, n)
+    cands = [GridCandidate(knob="rmi", size_bytes=rmi.size_bytes, index=rmi),
+             GridCandidate(knob=64, eps=64, size_bytes=65_536.0)]
+    res = session.estimate_grid(cands, wl)
+    single = session.estimate(rmi, wl)
+    g = res.estimates["rmi"]
+    assert abs(g.io_per_query - single.io_per_query) \
+        < 1e-4 * max(single.io_per_query, 1e-3)
+    assert g.policy == single.policy
+
+
+@pytest.mark.parametrize("policy", ["lru", "lfu"])
+def test_estimate_grid_mixed_with_sorted(world, policy):
+    """Mixed workloads containing sorted parts grid-estimate (they used to
+    hard-raise) and match the per-candidate composition."""
+    keys, qk, qpos = world
+    n = len(keys)
+    session = CostSession(System(GEOM, BUDGET, policy))
+    wlo = np.sort(qpos[:5000])
+    wl = Workload.mixed(Workload.point(qpos, n=n),
+                        Workload.sorted_stream(wlo - 64, wlo + 64, n=n))
+    cands = [GridCandidate(knob=e, eps=e, size_bytes=65_536.0)
+             for e in (32, 128)]
+    res = session.estimate_grid(cands, wl)
+    for e in (32, 128):
+        single = session.estimate(UniformEpsModel(e, n, 65_536.0), wl)
+        g = res.estimates[e]
+        assert abs(g.io_per_query - single.io_per_query) \
+            < 1e-4 * max(single.io_per_query, 1e-3), (e, policy)
+        assert abs(g.hit_rate - single.hit_rate) < 1e-4
+        assert abs(g.total_refs - single.total_refs) \
+            < 1e-3 * max(single.total_refs, 1.0)
+    # the sorted part contributes request mass beyond the point part
+    point_only = session.estimate(UniformEpsModel(32, n, 65_536.0),
+                                  Workload.point(qpos, n=n))
+    assert res.estimates[32].total_refs > point_only.total_refs
+
+
+@pytest.mark.parametrize("policy", ["lru", "lfu"])
+def test_estimate_grid_all_sorted_mixed_with_backed(world, policy):
+    """Regression: a MIXED workload whose parts are ALL sorted (an empty IRM
+    part) must grid-estimate with index-backed candidates present, matching
+    the per-candidate composition."""
+    keys, qk, qpos = world
+    n = len(keys)
+    session = CostSession(System(GEOM, BUDGET, policy))
+    wlo = np.sort(qpos)
+    wl = Workload.mixed(
+        Workload.sorted_stream(wlo[:8000] - 64, wlo[:8000] + 64, n=n),
+        Workload.sorted_stream(wlo[8000:] - 16, wlo[8000:] + 16, n=n))
+    pgm = PGMAdapter.build(keys, 64)
+    cands = [GridCandidate(knob="pgm", size_bytes=pgm.size_bytes, index=pgm),
+             GridCandidate(knob=32, eps=32, size_bytes=65_536.0)]
+    res = session.estimate_grid(cands, wl)
+    for knob, model in (("pgm", pgm), (32, UniformEpsModel(32, n, 65_536.0))):
+        single = session.estimate(model, wl)
+        g = res.estimates[knob]
+        assert abs(g.io_per_query - single.io_per_query) \
+            < 1e-4 * max(single.io_per_query, 1e-3), (knob, policy)
+        assert abs(g.hit_rate - single.hit_rate) < 1e-4
+
+
+def test_grid_accepts_legacy_coverageless_sorted_profile(world):
+    """Back-compat: a third-party IndexModel that prices a workload as a
+    legacy pure-sorted profile (counts=None, (R, N) fields only, no
+    sorted_part/coverage) must grid-estimate through the recency closed
+    form, matching the single-candidate path."""
+    from repro.core.session import PageRefProfile
+
+    keys, qk, qpos = world
+    n = len(keys)
+
+    class LegacySortedModel:
+        family = "custom-sorted"
+        size_bytes = 1024.0
+
+        def knobs(self):
+            return {}
+
+        def page_ref_profile(self, workload, geom):
+            return PageRefProfile(counts=None, total_refs=5000.0,
+                                  expected_dac=1.0, sorted_stream=True,
+                                  distinct_pages=700.0, min_capacity=2)
+
+    model = LegacySortedModel()
+    wlo = np.sort(qpos[:4000])
+    mixed = Workload.mixed(Workload.sorted_stream(wlo - 64, wlo + 64, n=n))
+    for policy in ("lru", "lfu"):
+        session = CostSession(System(GEOM, BUDGET, policy))
+        single = session.estimate(model, mixed)
+        res = session.estimate_grid(
+            [GridCandidate(knob="legacy", size_bytes=model.size_bytes,
+                           index=model)], mixed)
+        g = res.estimates["legacy"]
+        assert abs(g.hit_rate - (5000.0 - 700.0) / 5000.0) < 1e-5, policy
+        assert abs(g.io_per_query - single.io_per_query) < 1e-5, policy
+        assert abs(g.distinct_pages - single.distinct_pages) < 1e-6, policy
+
+
+def test_grid_eps0_candidate_keeps_widest_window_premise(world):
+    """An eps=0 candidate (no uniform bound) must use the widest-observed-
+    window Thm III.1 premise in the grid, same as the single path — not a
+    premise of 1."""
+    keys, qk, qpos = world
+    n = len(keys)
+    wlo = np.sort(qpos)
+    wl = Workload.sorted_stream(wlo - 512, wlo + 512, n=n)   # 3-5 page windows
+    # capacity of 2 pages sits below the widest window: thrash regime
+    size = BUDGET - 2 * GEOM.page_bytes
+    session = CostSession(System(GEOM, BUDGET, "lru"))
+    res = session.estimate_grid(
+        [GridCandidate(knob=0, eps=0, size_bytes=float(size))], wl)
+    single = session.estimate(UniformEpsModel(0, n, float(size)), wl)
+    assert single.hit_rate == 0.0                    # thrash on single path
+    assert res.estimates[0].hit_rate == single.hit_rate
+
+
+def test_grid_skipped_records_reasons(world):
+    """Regression: GridResult.skipped carries (knob, reason), both for
+    budget-infeasible candidates and for profiles a candidate cannot build."""
+    keys, qk, qpos = world
+    n = len(keys)
+    session = CostSession(System(GEOM, BUDGET, "lru"))
+    res = session.estimate_grid(
+        [GridCandidate(knob="fat", eps=64, size_bytes=1e12),
+         GridCandidate(knob=64, eps=64, size_bytes=65_536.0)],
+        Workload.point(qpos, n=n))
+    assert [s.knob for s in res.skipped] == ["fat"]
+    assert "memory budget" in res.skipped[0].reason
+    # RMI cannot profile a range workload: skipped with the typed reason,
+    # the uniform-eps candidate still estimates.
+    _, _, lo_pos, hi_pos = range_workload(keys, 2_000, WorkloadSpec("w4", seed=3))
+    rmi = RMIAdapter.build(keys, 1024)
+    res = session.estimate_grid(
+        [GridCandidate(knob="rmi", size_bytes=rmi.size_bytes, index=rmi),
+         GridCandidate(knob=64, eps=64, size_bytes=65_536.0)],
+        Workload.range_scan(lo_pos, hi_pos, n=n))
+    assert 64 in res.estimates and "rmi" not in res.estimates
+    reasons = {s.knob: s.reason for s in res.skipped}
+    assert "range" in reasons["rmi"]
+
+
+def test_unsupported_workload_errors_are_typed(world):
+    keys, qk, qpos = world
+    n = len(keys)
+    rmi = RMIAdapter.build(keys, 1024)
+    wl = Workload.range_scan(np.array([0]), np.array([100]), n=n)
+    with pytest.raises(UnsupportedWorkloadError) as ei:
+        rmi.page_ref_profile(wl, GEOM)
+    assert ei.value.kind == "range"
+    assert isinstance(ei.value, ValueError)      # back-compat
+    # a grid where NO candidate can profile the workload raises typed too
+    session = CostSession(System(GEOM, BUDGET, "lru"))
+    with pytest.raises(UnsupportedWorkloadError, match="no grid candidate"):
+        session.estimate_grid(
+            [GridCandidate(knob="rmi", size_bytes=rmi.size_bytes, index=rmi)],
+            wl)
 
 
 @pytest.mark.parametrize("family,tune", [
