@@ -30,8 +30,10 @@ Bind the first two in a session, then let the model pick the plan::
 "point-only", "range-only", or "hybrid" (Algorithm 2 segments) — as a typed
 plan with predicted costs; ``execute`` replays it exactly.
 
-    PYTHONPATH=src python examples/hybrid_join.py
+    PYTHONPATH=src python examples/hybrid_join.py [--smoke]
 """
+import argparse
+
 from repro.core.cam import CamGeometry
 from repro.core.session import System
 from repro.data.datasets import make_dataset
@@ -39,7 +41,13 @@ from repro.data.workloads import WorkloadSpec, join_outer_keys
 from repro.index.adapters import PGMAdapter
 from repro.join.session import STRATEGIES, JoinSession
 
-inner_keys = make_dataset("books", 1_000_000, seed=1)
+ap = argparse.ArgumentParser()
+ap.add_argument("--smoke", action="store_true",
+                help="CI-sized inputs (~5x below the demo default)")
+args = ap.parse_args()
+N, N_OUTER = (200_000, 20_000) if args.smoke else (1_000_000, 100_000)
+
+inner_keys = make_dataset("books", N, seed=1)
 inner = PGMAdapter.build(inner_keys, eps=64)
 system = System(CamGeometry(), memory_budget_bytes=(1 << 20)
                 + inner.size_bytes, policy="lru")
@@ -51,8 +59,8 @@ print(f"calibrated cost model: alpha={params.alpha:.2e} beta={params.beta:.2e}"
       f" lambda_range={params.lambda_range:.2e}\n")
 
 for wl in ("w1", "w3", "w4"):
-    outer = join_outer_keys(inner_keys, 100_000, WorkloadSpec(wl, seed=9))
-    print(f"workload {wl} (100k outer x 1M inner, "
+    outer = join_outer_keys(inner_keys, N_OUTER, WorkloadSpec(wl, seed=9))
+    print(f"workload {wl} ({N_OUTER // 1000}k outer x {N // 1000}k inner, "
           f"{session.capacity} buffer pages):")
     chosen = session.choose(outer, n_min=256, k_max=4096)
     for strategy in STRATEGIES:

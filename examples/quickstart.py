@@ -2,8 +2,10 @@
 physical I/O for THREE disk-resident learned indexes (PGM, RMI, RadixSpline)
 WITHOUT replaying the workload, and check each against ground truth.
 
-    PYTHONPATH=src python examples/quickstart.py
+    PYTHONPATH=src python examples/quickstart.py [--smoke]
 """
+import argparse
+
 import numpy as np
 
 from repro.core.cam import CamGeometry
@@ -15,11 +17,17 @@ from repro.data.datasets import make_dataset
 from repro.data.workloads import WorkloadSpec, point_workload
 from repro.index.adapters import PGMAdapter, RMIAdapter, RadixSplineAdapter
 
+ap = argparse.ArgumentParser()
+ap.add_argument("--smoke", action="store_true",
+                help="CI-sized inputs (~5x below the demo default)")
+args = ap.parse_args()
+N, Q = (200_000, 20_000) if args.smoke else (1_000_000, 100_000)
+
 # 1. a sorted key set ("on disk") and a skewed point-lookup workload;
 #    the Workload locates true positions ONCE and caches them for every
 #    estimate that follows
-keys = make_dataset("books", 1_000_000, seed=1)
-query_keys, _ = point_workload(keys, 100_000, WorkloadSpec("w4", seed=3))
+keys = make_dataset("books", N, seed=1)
+query_keys, _ = point_workload(keys, Q, WorkloadSpec("w4", seed=3))
 workload = Workload.from_keys(keys, query_keys)
 
 # 2. the System: page geometry + a 2 MiB memory budget shared by index and

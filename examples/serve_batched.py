@@ -18,7 +18,11 @@ ap.add_argument("--arch", choices=sorted(ARCHS), default="yi-34b")
 ap.add_argument("--batch", type=int, default=4)
 ap.add_argument("--prompt-len", type=int, default=24)
 ap.add_argument("--new-tokens", type=int, default=12)
+ap.add_argument("--smoke", action="store_true",
+                help="CI-sized run (tiny batch / prompt / decode)")
 args = ap.parse_args()
+if args.smoke:
+    args.batch, args.prompt_len, args.new_tokens = 2, 8, 4
 
 full_cfg = get_config(args.arch)
 cfg = reduced(full_cfg)                      # CPU-sized, same wiring

@@ -25,12 +25,26 @@ ap.add_argument("--steps", type=int, default=60)
 ap.add_argument("--batch", type=int, default=8)
 ap.add_argument("--seq", type=int, default=128)
 ap.add_argument("--ckpt-dir", default="/tmp/train_lm_ckpt")
+ap.add_argument("--smoke", action="store_true",
+                help="CI-sized run (tiny model, a few steps)")
 args = ap.parse_args()
+if args.smoke:
+    import tempfile
+    args.steps, args.batch, args.seq = 8, 2, 32
+    # fresh checkpoint dir: a resumed supervisor would train 0 new steps
+    args.ckpt_dir = tempfile.mkdtemp(prefix="train_lm_smoke_")
 
 # ~60M params: the starcoder2 wiring at 8 layers x 512 wide, 32k vocab
-cfg = dataclasses.replace(
-    get_config("starcoder2-3b"), num_layers=8, d_model=512, num_heads=8,
-    num_kv_heads=2, d_ff=2048, vocab_size=32768, head_dim=64)
+# (--smoke shrinks to a ~2M-param 2x128 stack so CI exercises the same
+# pipeline/supervisor wiring in seconds)
+if args.smoke:
+    cfg = dataclasses.replace(
+        get_config("starcoder2-3b"), num_layers=2, d_model=128, num_heads=4,
+        num_kv_heads=2, d_ff=512, vocab_size=4096, head_dim=32)
+else:
+    cfg = dataclasses.replace(
+        get_config("starcoder2-3b"), num_layers=8, d_model=512, num_heads=8,
+        num_kv_heads=2, d_ff=2048, vocab_size=32768, head_dim=64)
 params = init_params(cfg, jax.random.PRNGKey(0))
 n = sum(x.size for x in jax.tree.leaves(params))
 print(f"model: {cfg.name}-style, {n/1e6:.1f}M params, "

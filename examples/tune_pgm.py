@@ -6,8 +6,10 @@ call (shared page-ref state, vmapped hit-rate solves) — the same machinery
 also grid-tunes RadixSpline, which had no tuning path before the CostSession
 redesign.
 
-    PYTHONPATH=src python examples/tune_pgm.py
+    PYTHONPATH=src python examples/tune_pgm.py [--smoke]
 """
+import argparse
+
 from repro.core.cam import CamGeometry
 from repro.core.workload import Workload
 from repro.data.datasets import make_dataset
@@ -17,11 +19,17 @@ from repro.sim.machine import simulate_point_queries
 from repro.tuning.pgm_tuner import cam_tune_pgm, multicriteria_pgm_tune
 from repro.tuning.rs_tuner import cam_tune_radixspline
 
+ap = argparse.ArgumentParser()
+ap.add_argument("--smoke", action="store_true",
+                help="CI-sized inputs (~5x below the demo default)")
+args = ap.parse_args()
+N, Q = (200_000, 20_000) if args.smoke else (1_000_000, 100_000)
+
 GEOM = CamGeometry()
-keys = make_dataset("books", 1_000_000, seed=1)
-qk, qpos = point_workload(keys, 100_000, WorkloadSpec("w4", seed=3))
+keys = make_dataset("books", N, seed=1)
+qk, qpos = point_workload(keys, Q, WorkloadSpec("w4", seed=3))
 workload = Workload.point(qpos, n=len(keys), query_keys=qk)
-BUDGET = int(1.0 * 2**20)   # 1 MiB total for index + buffer — tight!
+BUDGET = int((0.25 if args.smoke else 1.0) * 2**20)  # index + buffer — tight!
 
 print(f"memory budget: {BUDGET / 2**20:.1f} MiB (shared by index AND buffer)")
 res = cam_tune_pgm(keys, qpos, BUDGET, GEOM, "lru", sample_rate=0.3)
@@ -47,8 +55,9 @@ for name, eps in [("CAM", res.best_eps), ("baseline", base_eps)]:
           f"({misses} physical IOs)")
 
 # Same session machinery, third index family: tune RadixSpline's corridor eps
-rs = cam_tune_radixspline(keys, qpos, 2 << 20, GEOM, "lru",
+rs_budget = BUDGET * 2
+rs = cam_tune_radixspline(keys, qpos, rs_budget, GEOM, "lru",
                           eps_grid=(16, 32, 64, 128, 256, 512, 1024),
                           radix_bits=12, sample_rate=0.3)
-print(f"\nRadixSpline under 2 MiB: eps*={rs.best_eps} "
+print(f"\nRadixSpline under {rs_budget / 2**20:.1f} MiB: eps*={rs.best_eps} "
       f"(est {rs.est_io:.4f} IO/q, {rs.tuning_seconds:.1f}s)")

@@ -7,7 +7,9 @@
 # >1-device production-mesh dry-run) so the suite is green-on-regression on a
 # single-device CPU runner, then smokes the benchmarks covering the batched
 # estimation paths (point/range grid kernels AND the policy-aware sorted
-# grid), the tuning curve, and the join planner.
+# grid), the tuning curve, and the join planner (incl. the join-tree
+# budget-split section), and finally runs EVERY example script in --smoke
+# mode so the README quickstarts stay executable.
 set -e
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
@@ -15,3 +17,9 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 python -m pytest -x -q -m "not env_limited"
 python -m benchmarks.run --smoke --only estimate_grid pgm_tuning_curve
 python -m benchmarks.bench_join --smoke
+
+# every example must exit 0 at CI size (each accepts --smoke)
+for ex in examples/*.py; do
+    echo "== $ex --smoke"
+    python "$ex" --smoke
+done

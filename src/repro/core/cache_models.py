@@ -41,6 +41,8 @@ __all__ = [
     "sorted_scan_misses",
     "sorted_scan_hit_rate",
     "sorted_scan_hit_rate_grid",
+    "sorted_scan_miss_curve",
+    "hit_rate_curve",
     "POLICIES",
     "RECENCY_POLICIES",
 ]
@@ -343,6 +345,73 @@ def sorted_scan_hit_rate_grid(
         miss = jnp.where(cap >= n, n, freq)
     miss = jnp.where(cap < jnp.asarray(min_capacities, jnp.float32), r, miss)
     return jnp.where(r > 0, (r - miss) / jnp.maximum(r, 1.0), 0.0)
+
+
+def sorted_scan_miss_curve(
+    policy: str,
+    capacities,
+    *,
+    total_refs: float,
+    distinct_pages: float,
+    coverage: Optional[jnp.ndarray] = None,
+    solo_repeats: float = 0.0,
+    min_capacity: int = 1,
+) -> jnp.ndarray:
+    """Misses of ONE sorted stream as a function of buffer capacity.
+
+    The miss-curve evaluation behind budget splitting: a join tree sharing
+    one buffer pool needs every level's miss count at every candidate
+    capacity, so this evaluates :func:`sorted_scan_misses` over a whole
+    capacity vector in one vmapped solve (the stream statistics are shared,
+    the O(P log P) coverage sort runs once — see
+    :func:`sorted_scan_hit_rate_grid`, which this wraps with broadcast
+    stats).  The curve is non-increasing in capacity: thrash (``miss = R``)
+    below the Theorem III.1 premise, then the policy-aware regime, floored
+    at the compulsory count N.
+
+    Returns a (K,) miss vector aligned with ``capacities``.
+    """
+    caps = jnp.asarray(capacities, jnp.float32)
+    r = float(total_refs)
+    if r <= 0.0:
+        return jnp.zeros_like(caps)
+    if policy not in RECENCY_POLICIES and coverage is not None:
+        ones = jnp.ones_like(caps)
+        h = sorted_scan_hit_rate_grid(
+            policy, jnp.asarray(coverage, jnp.float32), r * ones,
+            float(distinct_pages) * ones, float(solo_repeats) * ones,
+            caps, float(min_capacity) * ones)
+        return (1.0 - h) * r
+    # Recency policies (and coverage-less profiles) price through the
+    # compulsory closed form; only the thrash edge depends on capacity.
+    miss = jnp.full_like(caps, float(distinct_pages))
+    return jnp.where(caps < float(min_capacity), r, miss)
+
+
+def hit_rate_curve(
+    policy: str,
+    counts: jnp.ndarray,
+    sample_refs: float,
+    full_refs: float,
+    capacities,
+) -> jnp.ndarray:
+    """Hit rate of ONE request histogram across a capacity vector.
+
+    The IRM counterpart of :func:`sorted_scan_miss_curve`: K capacities of
+    the SAME page-reference histogram solve as one vmapped lockstep
+    bisection through :func:`hit_rate_grid` (compulsory closed form where
+    ``C >= N``, zero below one page), so a budget-split solve never loops
+    Python-side over candidate capacities.
+
+    Returns a (K,) hit-rate vector aligned with ``capacities``.
+    """
+    caps = jnp.asarray(capacities, jnp.float32)
+    counts = jnp.asarray(counts, jnp.float32)
+    ones = jnp.ones_like(caps)
+    h, _ = hit_rate_grid(
+        policy, jnp.broadcast_to(counts, caps.shape + counts.shape),
+        float(sample_refs) * ones, float(full_refs) * ones, caps)
+    return h
 
 
 # ---------------------------------------------------------------------------

@@ -95,6 +95,27 @@ class System:
         return capacity_pages(self.memory_budget_bytes, index_bytes,
                               self.geom.page_bytes)
 
+    def with_budget_fraction(self, fraction: float, *,
+                             pool_bytes: Optional[float] = None,
+                             resident_bytes: float = 0.0) -> "System":
+        """A view of this System owning ``fraction`` of a shared buffer pool.
+
+        ``pool_bytes`` is the pool being split (defaults to the full memory
+        budget); ``resident_bytes`` is memory this view's consumer keeps
+        resident on top of its slice (its index), added back so that
+        ``view.capacity_for(resident_bytes)`` returns exactly the slice:
+        ``floor(fraction * pool / page_bytes)`` pages.  Join trees use this
+        to hand each level a System whose budget is its share of the ONE
+        pool left after all inner indexes are resident — geometry, policy
+        and device model stay shared.
+        """
+        if not 0.0 <= fraction <= 1.0:
+            raise ValueError(f"budget fraction must be in [0, 1], "
+                             f"got {fraction}")
+        pool = self.memory_budget_bytes if pool_bytes is None else pool_bytes
+        return dataclasses.replace(
+            self, memory_budget_bytes=resident_bytes + fraction * pool)
+
     def layout(self):
         """The :class:`repro.index.disk_layout.PageLayout` this geometry
         implies — the bridge every execution-side consumer (joins, the
@@ -128,6 +149,17 @@ class PlanCost:
 
     def __lt__(self, other: "PlanCost") -> bool:
         return self.seconds < other.seconds
+
+    @classmethod
+    def compose(cls, strategy: str,
+                parts: Sequence["PlanCost"]) -> "PlanCost":
+        """Sum component costs into one plan cost (join trees: levels run
+        in sequence against disjoint buffer slices, so seconds, physical
+        I/Os and request mass all add)."""
+        return cls(strategy,
+                   sum(p.seconds for p in parts),
+                   sum(p.physical_ios for p in parts),
+                   sum(p.logical_refs for p in parts))
 
 
 # ---------------------------------------------------------------------------

@@ -1,7 +1,10 @@
-"""CAM-guided hybrid join (paper §VI) behind the JoinSession plan API."""
-from repro.join import calibrate, executors, hybrid, session
-from repro.join.session import (ChooseResult, JoinPlan, JoinSession,
-                                JoinStats)
+"""CAM-guided joins (paper §VI): two-way JoinSession plans + multi-way
+JoinTreeSession trees sharing one buffer budget."""
+from repro.join import calibrate, executors, hybrid, session, tree
+from repro.join.session import (ChooseResult, JoinCostCurve, JoinPlan,
+                                JoinSession, JoinStats)
+from repro.join.tree import JoinTreeSession, TreePlan, TreeStats
 
-__all__ = ["calibrate", "executors", "hybrid", "session", "JoinSession",
-           "JoinPlan", "JoinStats", "ChooseResult"]
+__all__ = ["calibrate", "executors", "hybrid", "session", "tree",
+           "JoinSession", "JoinPlan", "JoinStats", "ChooseResult",
+           "JoinCostCurve", "JoinTreeSession", "TreePlan", "TreeStats"]

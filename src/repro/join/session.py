@@ -48,8 +48,8 @@ from repro.join.hybrid import (JoinCostParams, Segment, partition_probes,
                                segment_costs)
 from repro.sim.machine import BufferedDisk, MachineParams
 
-__all__ = ["JoinPlan", "JoinStats", "ChooseResult", "JoinSession",
-           "STRATEGIES"]
+__all__ = ["JoinPlan", "JoinStats", "ChooseResult", "JoinCostCurve",
+           "JoinSession", "STRATEGIES"]
 
 STRATEGIES = ("inlj", "point-only", "range-only", "hybrid")
 
@@ -92,6 +92,36 @@ class JoinPlan:
     @property
     def n_range_segments(self) -> int:
         return sum(1 for s in self.segments if s.use_range)
+
+
+@dataclasses.dataclass(frozen=True)
+class JoinCostCurve:
+    """Per-strategy predicted cost as a FUNCTION of buffer capacity.
+
+    ``plan`` collapses the model to one scalar at one capacity;
+    budget-split solvers (:class:`repro.join.tree.JoinTreeSession`) need the
+    whole curve so they can trade capacity between competing levels.  All
+    K capacities of one outer stream are priced by exactly two batched
+    model solves — ``cache_models.sorted_scan_miss_curve`` for the sorted
+    point-probe stream and ``cache_models.hit_rate_curve`` for the unsorted
+    INLJ stream — never a per-capacity Python loop or replay.
+
+    ``seconds[s][k]`` / ``physical_ios[s][k]`` is strategy ``s`` priced at
+    ``capacities[k]`` buffer pages.  Curves are non-increasing in capacity
+    (more buffer never costs more under the model — the budget-split
+    monotonicity tests pin this).
+    """
+
+    capacities: np.ndarray                    # (K,) buffer pages
+    seconds: Dict[str, np.ndarray]            # strategy -> (K,)
+    physical_ios: Dict[str, np.ndarray]       # strategy -> (K,)
+    n_probes: int
+
+    def best_at(self, k: int, objective: str = "seconds") -> Tuple[str, float]:
+        """(strategy, cost) minimizing ``objective`` at capacity index k."""
+        table = self.seconds if objective == "seconds" else self.physical_ios
+        s = min(table, key=lambda name: table[name][k])
+        return s, float(table[s][k])
 
 
 @dataclasses.dataclass(frozen=True)
@@ -152,6 +182,7 @@ class JoinSession:
         self.num_pages = self.layout.num_pages(self.inner.n)
         self._params = params
         self._cost_session = CostSession(system)
+        self._capped_sessions: Dict[int, CostSession] = {}
 
     # ------------------------------------------------------------ calibration
     @property
@@ -175,11 +206,20 @@ class JoinSession:
     def plan(self, outer: Union[np.ndarray, Workload], strategy: str = "hybrid",
              n_min: int = 1024, k_max: int = 8192, gamma: float = 0.05,
              params: Optional[JoinCostParams] = None,
-             sample_rate: float = 1.0) -> JoinPlan:
-        """Build a typed plan with model-predicted per-segment costs."""
+             sample_rate: float = 1.0,
+             capacity: Optional[int] = None) -> JoinPlan:
+        """Build a typed plan with model-predicted per-segment costs.
+
+        ``capacity`` caps the buffer externally (in pages): a join tree
+        sharing one pool across levels plans each level at its allotted
+        slice instead of the session default (the System's full leftover
+        budget).  The capacity is baked into the plan and honoured by
+        ``execute``.
+        """
         if strategy not in STRATEGIES:
             raise ValueError(f"unknown strategy {strategy!r}; expected one "
                              f"of {STRATEGIES}")
+        cap = self.capacity if capacity is None else max(1, int(capacity))
         outer_keys = self._outer_keys(outer)
         p = params or self.params
         sorted_stream = strategy != "inlj"
@@ -191,11 +231,11 @@ class JoinSession:
         # worst-case pricing).
         widths = phi - plo + 1
         typical_w = int(np.quantile(widths, 0.99)) if widths.size else 0
-        thrash = self.capacity < typical_w + 1
+        thrash = cap < typical_w + 1
         n = probe.shape[0]
         refs = int(widths.sum())
         miss_scale = (1.0 if thrash or not sorted_stream
-                      else self._policy_miss_scale(plo, phi))
+                      else self._policy_miss_scale(plo, phi, cap))
 
         if strategy == "hybrid":
             # Bias Algorithm 2's point/range decisions by the same policy
@@ -216,35 +256,160 @@ class JoinSession:
                                 refs),)
 
         cost = self._predict(strategy, segments, probe, p, thrash, sample_rate,
-                             miss_scale)
+                             miss_scale, cap)
         return JoinPlan(strategy, probe, plo, phi, segments, sorted_stream,
-                        cost, p, self.capacity, thrash)
+                        cost, p, cap, thrash)
 
     def choose(self, outer: Union[np.ndarray, Workload],
                n_min: int = 1024, k_max: int = 8192, gamma: float = 0.05,
                params: Optional[JoinCostParams] = None,
-               sample_rate: float = 1.0) -> ChooseResult:
+               sample_rate: float = 1.0,
+               capacity: Optional[int] = None) -> ChooseResult:
         """CAM-predicted plan selection: price all strategies, pick cheapest.
 
         This replaces "run all four and compare" — the model selects the
         strategy up front; tests validate the pick against exhaustive
         replay (§VII-D).  ``sample_rate`` prices the INLJ hit-rate estimate
-        from a CAM-x workload sample.
+        from a CAM-x workload sample; ``capacity`` externally caps the
+        buffer as in :meth:`plan`.
         """
         plans = {s: self.plan(outer, s, n_min=n_min, k_max=k_max, gamma=gamma,
-                              params=params, sample_rate=sample_rate)
+                              params=params, sample_rate=sample_rate,
+                              capacity=capacity)
                  for s in STRATEGIES}
         costs = {s: pl.cost for s, pl in plans.items()}
         best = min(costs, key=lambda s: costs[s].seconds)
         return ChooseResult(plans[best], costs, plans)
 
+    def cost_curve(self, outer: Union[np.ndarray, Workload],
+                   capacities, n_min: int = 1024, k_max: int = 8192,
+                   gamma: float = 0.05,
+                   params: Optional[JoinCostParams] = None,
+                   sample_rate: float = 1.0) -> JoinCostCurve:
+        """Predicted cost of every strategy across a capacity vector.
+
+        The curve form of :meth:`plan`'s scalar prediction, for budget-split
+        solvers: all K capacities price through exactly TWO batched model
+        solves — the policy-aware ``cache_models.sorted_scan_miss_curve``
+        for the sorted point-probe stream (shared by point-only and the
+        hybrid's point segments) and ``cache_models.hit_rate_curve`` for the
+        unsorted INLJ stream — with no per-capacity Python loop or replay.
+
+        Capacity enters the hybrid's *partitioning* only through the thrash
+        flag and the LFU miss scale, so the curve partitions once at the
+        largest grid capacity and re-prices the fixed segments along the
+        miss curve; the final plan built at the chosen capacity
+        re-partitions exactly (``plan(..., capacity=...)``), so the
+        approximation only affects which split the solver prefers, not the
+        cost of the plan it returns.
+        """
+        caps = np.atleast_1d(np.asarray(capacities, np.int64))
+        if caps.size == 0 or (caps < 1).any():
+            raise ValueError("capacities must be >= 1 buffer page")
+        outer_keys = self._outer_keys(outer)
+        p = params or self.params
+        probe = np.sort(outer_keys)
+        plo, phi = self.inner.probe_windows(probe, self.system.geom)
+        widths = phi - plo + 1
+        n = probe.shape[0]
+        refs = float(widths.sum())
+        typical_w = int(np.quantile(widths, 0.99)) if widths.size else 0
+        min_cap = typical_w + 1
+        r, nd, coverage, solo = page_ref.sorted_workload_stats(
+            jnp.asarray(plo), jnp.asarray(phi), self.num_pages)
+        nd = float(nd)
+        # ONE vmapped solve: policy-aware sorted-stream misses at every
+        # candidate capacity (thrash below the Thm III.1 premise, compulsory
+        # N under recency eviction, frequency-aware closed form under LFU).
+        miss_curve = np.asarray(cache_models.sorted_scan_miss_curve(
+            self.system.policy, caps, total_refs=float(r),
+            distinct_pages=nd, coverage=coverage,
+            solo_repeats=float(solo), min_capacity=min_cap), np.float64)
+
+        seconds: Dict[str, np.ndarray] = {}
+        ios: Dict[str, np.ndarray] = {}
+        sort_s = n * p.sort_per_key
+
+        # point-only: one segment over the whole sorted stream.
+        seconds["point-only"] = (sort_s + p.delta + p.alpha * n
+                                 + p.lambda_point * miss_curve)
+        ios["point-only"] = miss_curve.copy()
+
+        # range-only: one coalesced scan — capacity-independent.
+        span = (int(phi.max()) - int(plo.min()) + 1) if n else 0
+        sec_r = (sort_s + p.eta + (p.beta + p.lambda_range) * span
+                 + 0.25 * p.alpha * n)
+        seconds["range-only"] = np.full(caps.shape, sec_r)
+        ios["range-only"] = np.full(caps.shape, float(span))
+
+        # inlj: IRM hit-rate curve of the unsorted stream (ONE vmapped
+        # lockstep bisection across the capacity grid).
+        if self.inner_keys is None:
+            io_inlj = np.full(caps.shape, refs)
+        else:
+            wl = Workload.point(locate(self.inner_keys, outer_keys),
+                                n=self.inner.n, query_keys=outer_keys)
+            if sample_rate < 1.0:
+                wl = wl.sample(sample_rate)
+            prof = self.inner.page_ref_profile(wl, self.system.geom)
+            h = np.asarray(cache_models.hit_rate_curve(
+                self.system.policy, prof.counts, prof.total_refs,
+                prof.total_refs * wl.scale, caps), np.float64)
+            io_inlj = (1.0 - h) * prof.expected_dac * n
+        seconds["inlj"] = p.delta + p.alpha * n + p.lambda_point * io_inlj
+        ios["inlj"] = io_inlj
+
+        # hybrid: fixed segments from the largest-capacity partitioning,
+        # point segments re-priced along the sorted miss curve.  The
+        # reference policy scale is read off the miss curve already in
+        # hand (miss/N at the largest capacity — the same ratio
+        # _policy_miss_scale would solve for), not re-solved.
+        k_ref = int(np.argmax(caps))
+        ref_cap = int(caps[k_ref])
+        scale_ref = (1.0 if ref_cap < min_cap
+                     else max(1.0, float(miss_curve[k_ref]) / max(nd, 1.0)))
+        p_eff = (p if scale_ref == 1.0 else dataclasses.replace(
+            p, lambda_point=p.lambda_point * scale_ref))
+        segments = partition_probes(plo, phi, p_eff, n_min=n_min,
+                                    k_max=k_max, gamma=gamma,
+                                    thrash=ref_cap < min_cap)
+        pt = [s for s in segments if not s.use_range]
+        rg = [s for s in segments if s.use_range]
+        d_pt = float(sum(s.distinct_pages for s in pt))
+        r_pt = float(sum(s.total_refs for s in pt))
+        n_pt = float(sum(s.n_keys for s in pt))
+        # per-capacity miss of the point segments: the whole-stream policy
+        # scale applied to their distinct mass, clamped by their refs, with
+        # the thrash regime charged in full below the premise.
+        scale_curve = np.where(miss_curve >= float(r),
+                               np.inf,  # thrash: every reference misses
+                               miss_curve / max(nd, 1.0))
+        miss_pt = np.minimum(np.maximum(d_pt * scale_curve, d_pt), r_pt) \
+            if pt else np.zeros(caps.shape)
+        sec_hy = np.full(caps.shape, sort_s)
+        for s in rg:
+            sp = s.page_hi - s.page_lo + 1
+            sec_hy += (p.eta + (p.beta + p.lambda_range) * sp
+                       + 0.25 * p.alpha * s.n_keys)
+        sec_hy += len(pt) * p.delta + p.alpha * n_pt \
+            + p.lambda_point * miss_pt
+        io_hy = miss_pt + float(sum(s.page_hi - s.page_lo + 1 for s in rg))
+        seconds["hybrid"] = sec_hy
+        ios["hybrid"] = io_hy
+
+        return JoinCostCurve(caps, seconds, ios, n)
+
     # -------------------------------------------------------------- execution
     def execute(self, plan: JoinPlan) -> JoinStats:
         """Replay ANY plan through the buffered disk — the single execution
-        path that subsumes the four legacy executors."""
+        path that subsumes the four legacy executors.
+
+        The buffer is sized from ``plan.capacity`` (the capacity the plan
+        was priced at — the session default unless the plan came from an
+        externally-capped budget, e.g. a join-tree slice)."""
         t0 = time.perf_counter()
         m = self.machine
-        disk = BufferedDisk(self.num_pages, self.capacity, self.system.policy)
+        disk = BufferedDisk(self.num_pages, plan.capacity, self.system.policy)
         plo, phi = plan.page_lo, plan.page_hi
         seconds = plan.outer_keys.shape[0] * m.sort_per_key \
             if plan.sorted_stream else 0.0
@@ -291,13 +456,13 @@ class JoinSession:
 
     def _predict(self, strategy: str, segments: Tuple[Segment, ...],
                  probe: np.ndarray, p: JoinCostParams, thrash: bool,
-                 sample_rate: float = 1.0,
-                 miss_scale: float = 1.0) -> PlanCost:
+                 sample_rate: float = 1.0, miss_scale: float = 1.0,
+                 capacity: Optional[int] = None) -> PlanCost:
         """Eq. 17 composed with CAM miss estimates, per strategy."""
         n = probe.shape[0]
         refs = float(sum(s.total_refs for s in segments))
         if strategy == "inlj":
-            io = self._inlj_misses(probe, sample_rate)
+            io = self._inlj_misses(probe, sample_rate, capacity)
             seconds = p.delta + p.alpha * n + p.lambda_point * io
             return PlanCost(strategy, seconds, io, refs)
         seconds = n * p.sort_per_key
@@ -315,7 +480,8 @@ class JoinSession:
                 seconds += p.delta + p.alpha * s.n_keys + p.lambda_point * miss
         return PlanCost(strategy, seconds, io, refs)
 
-    def _policy_miss_scale(self, plo: np.ndarray, phi: np.ndarray) -> float:
+    def _policy_miss_scale(self, plo: np.ndarray, phi: np.ndarray,
+                           capacity: Optional[int] = None) -> float:
         """Policy correction for sorted streams (point probing).
 
         Theorem III.1's one-compulsory-miss-per-distinct-page closed form
@@ -328,6 +494,7 @@ class JoinSession:
         ``CostSession._finish`` applies to sorted workloads, so planner and
         estimator can no longer disagree on one stream.
         """
+        cap = self.capacity if capacity is None else capacity
         if self.system.policy in cache_models.RECENCY_POLICIES \
                 or plo.shape[0] == 0:
             return 1.0
@@ -337,12 +504,28 @@ class JoinSession:
         if nd == 0 or r <= 0:
             return 1.0
         miss = cache_models.sorted_scan_misses(
-            self.system.policy, self.capacity, total_refs=r,
+            self.system.policy, cap, total_refs=r,
             distinct_pages=nd, coverage=coverage, solo_repeats=float(solo))
         return max(1.0, miss / nd)
 
-    def _inlj_misses(self, probe: np.ndarray,
-                     sample_rate: float = 1.0) -> float:
+    def _session_at(self, capacity: Optional[int]) -> CostSession:
+        """CostSession whose System view yields exactly ``capacity`` buffer
+        pages for this inner index (the session default when None)."""
+        if capacity is None or capacity == self.capacity:
+            return self._cost_session
+        cached = self._capped_sessions.get(capacity)
+        if cached is None:
+            view = self.system.with_budget_fraction(
+                1.0, pool_bytes=capacity * self.system.geom.page_bytes,
+                resident_bytes=self.inner.size_bytes)
+            cached = CostSession(view)
+            if len(self._capped_sessions) >= 16:
+                self._capped_sessions.pop(next(iter(self._capped_sessions)))
+            self._capped_sessions[capacity] = cached
+        return cached
+
+    def _inlj_misses(self, probe: np.ndarray, sample_rate: float = 1.0,
+                     capacity: Optional[int] = None) -> float:
         """Expected INLJ physical I/O via the full Algorithm 1 pipeline
         (structural page refs -> IRM hit rate) on the unsorted stream."""
         if self.inner_keys is None:
@@ -353,6 +536,6 @@ class JoinSession:
             return float((phi - plo + 1).sum())
         wl = Workload.point(locate(self.inner_keys, probe),
                             n=self.inner.n, query_keys=probe)
-        est = self._cost_session.estimate(self.inner, wl,
-                                          sample_rate=sample_rate)
+        est = self._session_at(capacity).estimate(self.inner, wl,
+                                                  sample_rate=sample_rate)
         return est.io_per_query * probe.shape[0]

@@ -1,0 +1,297 @@
+"""JoinTreeSession tests.
+
+* Budget-split monotonicity: giving a level more buffer never increases its
+  predicted misses — per strategy, per policy (the curve the split solver
+  trades on must be non-increasing in capacity).
+* Curve-vs-plan consistency: the batched ``cost_curve`` and the scalar
+  ``plan(..., capacity=...)`` prediction agree at every grid capacity.
+* 3-level tree oracle: the CAM-chosen (split, strategies) plan's replayed
+  total I/O is within 15% of the exhaustive-replay best over every
+  (simplex split x per-level strategy) combination — 3 policies x 2 outer
+  skews (uniform w1, zipf w2).
+* Batched solve: planning a tree performs NO replay and exactly one
+  batched sorted-miss-curve solve per level (no per-split model calls).
+* System.with_budget_fraction / PlanCost.compose / capacity-capped
+  execution semantics.
+"""
+from itertools import combinations
+
+import numpy as np
+import pytest
+
+from repro.core import cache_models
+from repro.core.cam import CamGeometry
+from repro.core.session import PlanCost, System
+from repro.data.datasets import make_dataset
+from repro.data.workloads import WorkloadSpec, join_outer_keys
+from repro.index.adapters import PGMAdapter
+from repro.join.session import STRATEGIES, JoinSession
+from repro.join.tree import JoinTreeSession, TreePlan
+
+GEOM = CamGeometry()
+POLICIES = ("lru", "fifo", "lfu")
+N_BASE = 80_000
+N_OUTER = 6_000
+GRID = 8
+
+
+@pytest.fixture(scope="module")
+def world():
+    base = make_dataset("books", N_BASE, seed=5)
+    inner_keys = [base, base[::2].copy(), base[::3].copy()]
+    adapters = [PGMAdapter.build(k, eps=32) for k in inner_keys]
+    outers = {wl: join_outer_keys(base, N_OUTER, WorkloadSpec(wl, seed=9))
+              for wl in ("w1", "w2")}
+    return base, inner_keys, adapters, outers
+
+
+def _tree(adapters, inner_keys, policy, pool_bytes=1 << 20):
+    idx = sum(a.size_bytes for a in adapters)
+    system = System(GEOM, memory_budget_bytes=pool_bytes + idx, policy=policy)
+    return JoinTreeSession(adapters, system, inner_keys)
+
+
+# ---------------------------------------------------------------------------
+# Budget-split monotonicity + curve-vs-plan consistency
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("policy", POLICIES)
+def test_miss_curves_monotone_in_capacity(world, policy):
+    """More buffer never increases a level's predicted misses."""
+    base, _, adapters, outers = world
+    system = System(GEOM, memory_budget_bytes=(1 << 20)
+                    + adapters[0].size_bytes, policy=policy)
+    s = JoinSession(adapters[0], system, inner_keys=base)
+    caps = np.array([2, 4, 8, 16, 32, 64, 128, 256])
+    curve = s.cost_curve(outers["w2"], caps, n_min=128, k_max=4096)
+    for strategy in STRATEGIES:
+        ios = curve.physical_ios[strategy]
+        assert (np.diff(ios) <= 1e-6).all(), (policy, strategy, ios)
+        secs = curve.seconds[strategy]
+        assert (np.diff(secs) <= 1e-9).all(), (policy, strategy, secs)
+
+
+@pytest.mark.parametrize("policy", POLICIES)
+def test_cost_curve_matches_plan_at_each_capacity(world, policy):
+    """The batched curve IS plan()'s scalar prediction, capacity by
+    capacity (hybrid within 10% — its curve re-prices fixed segments)."""
+    base, _, adapters, outers = world
+    system = System(GEOM, memory_budget_bytes=(1 << 20)
+                    + adapters[0].size_bytes, policy=policy)
+    s = JoinSession(adapters[0], system, inner_keys=base)
+    caps = np.array([4, 32, 128, 256])
+    curve = s.cost_curve(outers["w2"], caps, n_min=128, k_max=4096)
+    for strategy in STRATEGIES:
+        for k, cap in enumerate(caps):
+            pl = s.plan(outers["w2"], strategy, n_min=128, k_max=4096,
+                        capacity=int(cap))
+            assert pl.capacity == int(cap)
+            got = curve.physical_ios[strategy][k]
+            want = pl.cost.physical_ios
+            assert abs(got - want) <= 0.10 * max(want, 1.0), \
+                (policy, strategy, int(cap), got, want)
+
+
+def test_sorted_scan_miss_curve_matches_scalar_model():
+    """The curve evaluator equals the scalar sorted_scan_misses pointwise."""
+    rng = np.random.default_rng(3)
+    lo = np.sort(rng.integers(0, 400, size=3_000))
+    hi = lo + rng.integers(0, 2, size=3_000)
+    from repro.core import page_ref
+    import jax.numpy as jnp
+    r, nd, cov, solo = page_ref.sorted_workload_stats(
+        jnp.asarray(lo), jnp.asarray(hi), 500)
+    caps = np.array([1, 3, 10, 50, 200, 600])
+    for policy in POLICIES:
+        curve = np.asarray(cache_models.sorted_scan_miss_curve(
+            policy, caps, total_refs=float(r), distinct_pages=float(nd),
+            coverage=cov, solo_repeats=float(solo), min_capacity=3))
+        for k, c in enumerate(caps):
+            scalar = cache_models.sorted_scan_misses(
+                policy, int(c), total_refs=float(r),
+                distinct_pages=float(nd), coverage=cov,
+                solo_repeats=float(solo), min_capacity=3)
+            assert abs(curve[k] - scalar) <= 1e-3 * max(scalar, 1.0), \
+                (policy, int(c), curve[k], scalar)
+
+
+# ---------------------------------------------------------------------------
+# 3-level tree oracle vs exhaustive replay (3 policies x 2 skews)
+# ---------------------------------------------------------------------------
+
+def _exhaustive_best_io(tree, streams, caps, n_levels, grid):
+    """Ground truth: replay EVERY (split, strategy) combination.
+
+    Levels are independent given the split (each probes its own pages
+    against its own slice), so replay each (level, capacity, strategy)
+    once and minimize the sum over the split simplex.
+    """
+    io = np.empty((n_levels, len(caps)))
+    for lvl, sess in enumerate(tree.sessions):
+        for j, cap in enumerate(caps):
+            per_strategy = []
+            for st in STRATEGIES:
+                pl = sess.plan(streams[lvl], st, n_min=128, k_max=4096,
+                               capacity=int(cap))
+                per_strategy.append(sess.execute(pl).physical_ios)
+            io[lvl, j] = min(per_strategy)
+    bars = np.array(list(combinations(range(1, grid), n_levels - 1)))
+    edges = np.concatenate(
+        [np.zeros((bars.shape[0], 1), np.int64), bars,
+         np.full((bars.shape[0], 1), grid)], axis=1)
+    comps = np.diff(edges, axis=1)
+    totals = io[np.arange(n_levels)[None, :], comps - 1].sum(axis=1)
+    return float(totals.min())
+
+
+@pytest.mark.parametrize("policy", POLICIES)
+@pytest.mark.parametrize("wl", ("w1", "w2"))
+def test_tree_plan_within_15pct_of_exhaustive_replay(world, policy, wl):
+    base, inner_keys, adapters, outers = world
+    tree = _tree(adapters, inner_keys, policy)
+    outer = outers[wl]
+    plan = tree.plan(outer, grid=GRID, objective="io",
+                     n_min=128, k_max=4096)
+    replayed = tree.execute(plan)
+
+    streams = tree.probe_streams(outer)
+    shares = np.arange(1, GRID - tree.n_levels + 2)
+    caps = np.maximum(1, (shares * tree.pool_pages) // GRID)
+    best = _exhaustive_best_io(tree, streams, caps, tree.n_levels, GRID)
+    assert replayed.physical_ios <= 1.15 * best, \
+        (policy, wl, replayed.physical_ios, best,
+         plan.fractions, plan.strategies)
+
+
+def test_tree_match_count_equals_numpy_oracle(world):
+    base, inner_keys, adapters, outers = world
+    tree = _tree(adapters, inner_keys, "lru")
+    stats = tree.run(outers["w2"], grid=GRID, n_min=128, k_max=4096)
+    probe = outers["w2"]
+    for keys in inner_keys:
+        probe = probe[np.isin(probe, keys)]
+    assert stats.matches == probe.shape[0]
+    assert stats.physical_ios == sum(st.physical_ios
+                                     for st in stats.per_level)
+    assert stats.logical_refs == sum(st.logical_refs
+                                     for st in stats.per_level)
+
+
+# ---------------------------------------------------------------------------
+# The split solve is one batched grid — no replay, no per-split model calls
+# ---------------------------------------------------------------------------
+
+def test_tree_plan_is_replay_free_and_batched(world, monkeypatch):
+    base, inner_keys, adapters, outers = world
+    tree = _tree(adapters, inner_keys, "lfu")
+
+    from repro.sim.machine import BufferedDisk
+    def _no_replay(self, *a, **kw):
+        raise AssertionError("tree planning must not touch the disk")
+    monkeypatch.setattr(BufferedDisk, "fetch_window", _no_replay)
+
+    calls = {"curve": 0}
+    orig = cache_models.sorted_scan_miss_curve
+    def _counting(*a, **kw):
+        calls["curve"] += 1
+        return orig(*a, **kw)
+    monkeypatch.setattr(cache_models, "sorted_scan_miss_curve", _counting)
+    import repro.join.session as session_mod
+    monkeypatch.setattr(session_mod.cache_models, "sorted_scan_miss_curve",
+                        _counting)
+
+    from repro.join.hybrid import JoinCostParams
+    plan = tree.plan(outers["w1"], grid=GRID, n_min=128, k_max=4096,
+                     params=JoinCostParams())   # pre-fit: no calibration run
+    assert isinstance(plan, TreePlan)
+    # one batched sorted-curve solve per level, NOT one per split
+    assert calls["curve"] == tree.n_levels
+    n_splits = len(list(combinations(range(1, GRID), tree.n_levels - 1)))
+    assert n_splits > tree.n_levels  # the simplex is genuinely larger
+
+
+# ---------------------------------------------------------------------------
+# Budget views, composition, capped execution
+# ---------------------------------------------------------------------------
+
+def test_with_budget_fraction_view():
+    system = System(GEOM, memory_budget_bytes=8 << 20, policy="lfu")
+    view = system.with_budget_fraction(0.25, pool_bytes=4 << 20,
+                                       resident_bytes=1 << 20)
+    assert view.policy == "lfu" and view.geom == system.geom
+    assert view.capacity_for(1 << 20) == (1 << 20) // GEOM.page_bytes
+    # default pool = the full budget
+    half = system.with_budget_fraction(0.5)
+    assert half.memory_budget_bytes == 4 << 20
+    with pytest.raises(ValueError):
+        system.with_budget_fraction(1.5)
+
+
+def test_plan_cost_compose():
+    parts = [PlanCost("a", 1.0, 10.0, 100.0), PlanCost("b", 2.0, 5.0, 50.0)]
+    total = PlanCost.compose("tree", parts)
+    assert total.strategy == "tree"
+    assert total.seconds == 3.0
+    assert total.physical_ios == 15.0
+    assert total.logical_refs == 150.0
+
+
+def test_execute_honours_plan_capacity(world):
+    """A plan built at an externally-capped budget replays against THAT
+    buffer, not the session default — a thrash-capacity plan must read
+    more pages than a roomy one on the same stream."""
+    base, _, adapters, outers = world
+    system = System(GEOM, memory_budget_bytes=(1 << 20)
+                    + adapters[0].size_bytes, policy="lru")
+    s = JoinSession(adapters[0], system, inner_keys=base)
+    outer = outers["w2"]
+    roomy = s.execute(s.plan(outer, "point-only", capacity=256))
+    tight = s.execute(s.plan(outer, "point-only", capacity=1))
+    assert tight.physical_ios > roomy.physical_ios
+
+
+def test_tree_sessions_share_one_pool(world):
+    base, inner_keys, adapters, _ = world
+    tree = _tree(adapters, inner_keys, "lru", pool_bytes=1 << 20)
+    assert tree.pool_pages == (1 << 20) // GEOM.page_bytes
+    # default (pre-plan) even split: each level's session capacity is its
+    # 1/L view of the ONE pool
+    for sess in tree.sessions:
+        assert sess.capacity == tree.pool_pages // tree.n_levels
+
+
+def test_tiny_pool_never_overcommitted(world):
+    """A grid finer than the pool must clamp: the chosen capacities always
+    sum to at most the ONE shared pool (no 1-page floor overcommit)."""
+    base, inner_keys, adapters, outers = world
+    idx = sum(a.size_bytes for a in adapters)
+    system = System(GEOM, memory_budget_bytes=4 * GEOM.page_bytes + idx,
+                    policy="lru")
+    tree = JoinTreeSession(adapters, system, inner_keys)
+    assert tree.pool_pages == 4
+    plan = tree.plan(outers["w1"][:500], grid=8, n_min=64)
+    assert sum(plan.capacities) <= tree.pool_pages
+    assert all(c >= 1 for c in plan.capacities)
+
+
+def test_tree_rejects_bad_shapes(world):
+    base, inner_keys, adapters, _ = world
+    system = System(GEOM, memory_budget_bytes=(1 << 20)
+                    + sum(a.size_bytes for a in adapters), policy="lru")
+    with pytest.raises(ValueError):
+        JoinTreeSession(adapters, system, inner_keys[:2])
+    with pytest.raises(ValueError):
+        JoinTreeSession(adapters, system, [base, None, base])
+    with pytest.raises(ValueError):
+        JoinTreeSession(adapters, system, inner_keys,
+                        probe_maps=[lambda x: x])  # needs L-1 = 2
+    tiny = System(GEOM, memory_budget_bytes=sum(a.size_bytes
+                                                for a in adapters),
+                  policy="lru")
+    with pytest.raises(ValueError):
+        JoinTreeSession(adapters, tiny, inner_keys)
+    tree = _tree(adapters, inner_keys, "lru")
+    with pytest.raises(ValueError):
+        tree.plan(np.array([1, 2, 3]), grid=2)     # grid < n_levels
+    with pytest.raises(ValueError):
+        tree.plan(np.array([1, 2, 3]), objective="latency")
