@@ -22,9 +22,8 @@ from repro.core import cam
 from repro.core.session import CostSession, GridCandidate, System
 from repro.core.workload import Workload
 from repro.data.workloads import WorkloadSpec, point_workload
-from repro.tuning.pgm_tuner import cam_tune_pgm, profile_pgm_size_model
-from repro.tuning.rmi_tuner import cam_tune_rmi
-from repro.tuning.rs_tuner import cam_tune_radixspline
+from repro.tuning.session import (PGMBuilder, RadixSplineBuilder, RMIBuilder,
+                                  TuningSession)
 
 OUT_PATH = os.path.join(os.path.dirname(__file__), "results",
                         "estimate_grid.json")
@@ -40,8 +39,8 @@ def run(n=DEFAULT_N, n_queries=100_000, budget_mb=4, out_path=OUT_PATH):
     qk, qpos = point_workload(keys, n_queries, WorkloadSpec("w4", seed=3))
     budget = int(budget_mb * 2**20)
     grid = _eps_grid()
-    size_model, _ = profile_pgm_size_model(keys)
-    sizes = {e: float(size_model(e)) for e in grid}
+    size_model = PGMBuilder(keys).size_model()
+    sizes = {e: float(size_model(eps=e)) for e in grid}
     feasible = [e for e in grid if sizes[e] < budget - GEOM.page_bytes]
 
     def legacy_loop():
@@ -96,18 +95,21 @@ def run(n=DEFAULT_N, n_queries=100_000, budget_mb=4, out_path=OUT_PATH):
     skeys = keys[:small]
     sqk, sqpos = point_workload(skeys, min(n_queries, 30_000),
                                 WorkloadSpec("w4", seed=3))
+    tuning = TuningSession(System(GEOM, 2 << 20, "lru"))
+    swl = Workload.point(sqpos, n=small, query_keys=sqk)
     t0 = time.perf_counter()
-    pgm_res = cam_tune_pgm(skeys, sqpos, 2 << 20, GEOM, "lru",
-                           eps_grid=(8, 16, 32, 64, 128, 256, 512, 1024))
+    pgm_res = tuning.tune(PGMBuilder(skeys), swl,
+                          overrides={"eps": (8, 16, 32, 64, 128, 256, 512,
+                                             1024)})
     t_pgm = time.perf_counter() - t0
     t0 = time.perf_counter()
-    rmi_res = cam_tune_rmi(skeys, sqpos, sqk, 2 << 20, GEOM, "lru",
-                           branch_grid=(2**8, 2**10, 2**12, 2**14))
+    rmi_res = tuning.tune(RMIBuilder(skeys), swl,
+                          overrides={"branch": (2**8, 2**10, 2**12, 2**14)})
     t_rmi = time.perf_counter() - t0
     t0 = time.perf_counter()
-    rs_res = cam_tune_radixspline(skeys, sqpos, 2 << 20, GEOM, "lru",
-                                  eps_grid=(16, 32, 64, 128, 256, 512, 1024),
-                                  radix_bits=12)
+    rs_res = tuning.tune(RadixSplineBuilder(skeys, ref_radix_bits=12), swl,
+                         overrides={"eps": (16, 32, 64, 128, 256, 512, 1024),
+                                    "radix_bits": 12})
     t_rs = time.perf_counter() - t0
 
     record = {
@@ -130,11 +132,11 @@ def run(n=DEFAULT_N, n_queries=100_000, budget_mb=4, out_path=OUT_PATH):
         "sorted_grid_n_estimates": len(sres.estimates),
         "sorted_grid_best_eps": int(sres.best_knob),
         "families": {
-            "pgm": {"knob": "eps", "best": int(pgm_res.best_eps),
+            "pgm": {"knob": "eps", "best": int(pgm_res.best_knob),
                     "est_io": pgm_res.est_io, "tuning_seconds": t_pgm},
-            "rmi": {"knob": "branch", "best": int(rmi_res.best_branch),
+            "rmi": {"knob": "branch", "best": int(rmi_res.best_knob),
                     "est_io": rmi_res.est_io, "tuning_seconds": t_rmi},
-            "radixspline": {"knob": "eps", "best": int(rs_res.best_eps),
+            "radixspline": {"knob": "eps", "best": int(rs_res.best["eps"]),
                             "est_io": rs_res.est_io, "tuning_seconds": t_rs},
         },
     }
@@ -154,8 +156,8 @@ def run(n=DEFAULT_N, n_queries=100_000, budget_mb=4, out_path=OUT_PATH):
          f"policy=lfu;candidates={len(sres.estimates)}"
          f";best_eps={int(sres.best_knob)}")
     emit("estimate_grid/families", 0.0,
-         f"pgm_eps={pgm_res.best_eps};rmi_branch={rmi_res.best_branch}"
-         f";rs_eps={rs_res.best_eps};json={os.path.relpath(out_path)}")
+         f"pgm_eps={pgm_res.best_knob};rmi_branch={rmi_res.best_knob}"
+         f";rs_eps={rs_res.best['eps']};json={os.path.relpath(out_path)}")
     return record
 
 

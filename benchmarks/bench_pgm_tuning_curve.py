@@ -1,8 +1,11 @@
 """Fig. 7: CAM-estimated vs actual I/O across eps and eviction policies under
 memory budgets — the U-shaped index-footprint/buffer trade-off.
 
-Each (policy, budget) curve now prices through ONE ``CostSession.estimate_grid``
-call instead of a per-eps loop; replay ground truth is unchanged."""
+Each (policy, budget) curve prices through ONE ``TuningSession.tune`` call
+(the joint knob x split search over batched profiles); the per-knob
+estimates at full capacity ARE the curve.  Replay ground truth is unchanged;
+``TableSizeModel`` pins the session to the built indexes' exact footprints
+so estimated and replayed capacities agree bit-for-bit."""
 from __future__ import annotations
 
 import numpy as np
@@ -10,9 +13,10 @@ import numpy as np
 from benchmarks.common import DEFAULT_N, GEOM, dataset, emit, pgm_for
 from repro.core.qerror import q_error
 from repro.core.replay import replay_windows
-from repro.core.session import CostSession, GridCandidate, System
+from repro.core.session import System
 from repro.core.workload import Workload
 from repro.data.workloads import WorkloadSpec, point_workload
+from repro.tuning.session import PGMBuilder, TableSizeModel, TuningSession
 
 EPS_GRID = (8, 16, 32, 64, 128, 256, 512, 1024)
 
@@ -22,17 +26,17 @@ def run(n=DEFAULT_N, n_queries=100_000, budgets_mb=(2, 4, 6)):
     qk, qpos = point_workload(keys, n_queries, WorkloadSpec("w4", seed=3))
     wl = Workload.point(qpos, n=n)
     indexes = {eps: pgm_for("books", eps, n) for eps in EPS_GRID}
+    sizes = TableSizeModel({e: float(i.size_bytes)
+                            for e, i in indexes.items()})
+    builder = PGMBuilder(keys)
     for policy in ("fifo", "lru", "lfu"):
         for mem_mb in budgets_mb:
             m_budget = mem_mb << 20
-            session = CostSession(System(GEOM, m_budget, policy))
-            cands = [GridCandidate(knob=eps, eps=eps,
-                                   size_bytes=float(idx.size_bytes))
-                     for eps, idx in indexes.items()
-                     if idx.size_bytes < m_budget - GEOM.page_bytes]
-            res = session.estimate_grid(cands, wl)
-            curve_est = {eps: e.io_per_query
-                         for eps, e in res.estimates.items()}
+            session = TuningSession(System(GEOM, m_budget, policy))
+            res = session.tune(builder, wl, overrides={"eps": EPS_GRID},
+                               size_model=sizes)
+            curve_est = {eps: est.io_per_query
+                         for eps, est in res.estimates.items()}
             curve_act = {}
             for eps in curve_est:
                 idx = indexes[eps]
@@ -41,10 +45,11 @@ def run(n=DEFAULT_N, n_queries=100_000, budgets_mb=(2, 4, 6)):
                 misses = replay_windows(wlo // GEOM.c_ipp, whi // GEOM.c_ipp,
                                         cap, policy)
                 curve_act[eps] = float(misses.mean())
-            best_est = min(curve_est, key=curve_est.get)
+            best_est = res.best_knob
             best_act = min(curve_act, key=curve_act.get)
             qerrs = [float(q_error(curve_est[e], curve_act[e])) for e in curve_est]
-            emit(f"fig7/{policy}/{mem_mb}MB", res.seconds * 1e6 / len(cands),
+            emit(f"fig7/{policy}/{mem_mb}MB",
+                 res.tuning_seconds * 1e6 / max(len(curve_est), 1),
                  f"eps_star_cam={best_est};eps_star_actual={best_act}"
                  f";curve_qerr={np.mean(qerrs):.3f}"
                  f";ushaped={int(_is_ushaped(curve_act))}")

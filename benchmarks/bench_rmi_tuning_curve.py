@@ -1,9 +1,10 @@
 """Fig. 8: CAM-estimated vs actual I/O for RMI across branch factors —
 the sharp right-edge rise when the index squeezes out the buffer.
 
-Built candidates price through one ``CostSession.estimate_grid`` call per
-(policy, budget): mixture histograms per branch, hit rates solved in one
-vmapped pass."""
+The branch grid prices through ONE ``TuningSession.tune`` call per
+(policy, budget): the prebuilt candidates profile through the batched
+mixed-eps kernel (one grouped pass for the whole grid) and all hit rates
+solve in one vmapped pass."""
 from __future__ import annotations
 
 import numpy as np
@@ -11,11 +12,12 @@ import numpy as np
 from benchmarks.common import DEFAULT_N, GEOM, dataset, emit
 from repro.core.qerror import q_error
 from repro.core.replay import replay_windows
-from repro.core.session import CostSession, GridCandidate, System
+from repro.core.session import System
 from repro.core.workload import Workload
 from repro.data.workloads import WorkloadSpec, point_workload
 from repro.index.adapters import RMIAdapter
 from repro.index.rmi import build_rmi
+from repro.tuning.session import RMIBuilder, TuningSession
 
 BRANCH_GRID = (2**8, 2**10, 2**12, 2**14, 2**16)
 
@@ -24,32 +26,33 @@ def run(n=DEFAULT_N, n_queries=100_000, budgets_mb=(2, 4)):
     keys = dataset("books", n)
     qk, qpos = point_workload(keys, n_queries, WorkloadSpec("w4", seed=3))
     wl = Workload.point(qpos, n=n, query_keys=qk)
-    indexes = {b: build_rmi(keys, b) for b in BRANCH_GRID}
+    builder = RMIBuilder(keys)
+    builder.built = {b: RMIAdapter(build_rmi(keys, b)) for b in BRANCH_GRID}
     for policy in ("lru", "fifo"):
         for mem_mb in budgets_mb:
             m_budget = mem_mb << 20
-            session = CostSession(System(GEOM, m_budget, policy))
-            cands = [GridCandidate(knob=b, size_bytes=float(idx.size_bytes),
-                                   index=RMIAdapter(idx))
-                     for b, idx in indexes.items()
-                     if idx.size_bytes < m_budget - GEOM.page_bytes]
-            if not cands:
-                continue
-            res = session.estimate_grid(cands, wl)
-            curve_est = {b: e.io_per_query for b, e in res.estimates.items()}
+            session = TuningSession(System(GEOM, m_budget, policy))
+            try:
+                res = session.tune(builder, wl,
+                                   overrides={"branch": BRANCH_GRID})
+            except ValueError:
+                continue  # budget below every candidate's footprint
+            curve_est = {b: est.io_per_query
+                         for b, est in res.estimates.items()}
             curve_act = {}
             for b in curve_est:
-                idx = indexes[b]
+                idx = builder.built[b].index
                 cap = max(1, (m_budget - idx.size_bytes) // GEOM.page_bytes)
                 wlo, whi, _ = idx.window(qk)
                 misses = replay_windows(wlo // GEOM.c_ipp, whi // GEOM.c_ipp,
                                         cap, policy)
                 curve_act[b] = float(misses.mean())
-            best_est = min(curve_est, key=curve_est.get)
+            best_est = res.best_knob
             best_act = min(curve_act, key=curve_act.get)
             qerrs = [float(q_error(curve_est[b], curve_act[b]))
                      for b in curve_est]
-            emit(f"fig8/{policy}/{mem_mb}MB", res.seconds * 1e6 / len(cands),
+            emit(f"fig8/{policy}/{mem_mb}MB",
+                 res.tuning_seconds * 1e6 / max(len(curve_est), 1),
                  f"branch_star_cam={best_est};branch_star_actual={best_act}"
                  f";curve_qerr={np.mean(qerrs):.3f}")
 

@@ -1,94 +1,185 @@
 """Figs. 9/10: end-to-end tuner comparison — throughput of the configuration
 each tuner picks under a shared memory budget, plus tuning time.
 
-Baselines reserve a fixed fraction of M as buffer and tune the index within
-the remainder (cache-oblivious); CAM tunes the split itself.
+Everything tunes through ONE surface (``repro.tuning.session.TuningSession``):
+CAM is the joint (knob x buffer-split) search; the cache-oblivious baselines
+(multicriteria-PGM, CDFShop) are pluggable ``Tuner`` strategies that reserve
+a fixed buffer fraction and profile candidates in the remainder.  Three
+records land in ``benchmarks/results/tuning_e2e.json``:
+
+* ``pgm``/``rmi`` — CAM-vs-multicriteria and CAM-vs-CDFShop replayed-QPS
+  ratios per budget;
+* ``radixspline_joint`` — jointly tuned (eps, radix_bits) vs eps-only tuning
+  at the legacy fixed radix_bits=16 (the table competes with buffer pages);
+* ``mixed_eps_kernel`` — the batched grouped kernel pricing a full RMI
+  branch grid vs the per-branch mixture-histogram path (warm, same grid,
+  same solve; gate: >= 3x).
+
+    python -m benchmarks.bench_tuning_e2e [--smoke]
 """
 from __future__ import annotations
 
-from benchmarks.common import DEFAULT_N, GEOM, Timer, dataset, emit
-from repro.core import cam
-from repro.core.replay import replay_windows
+import json
+import os
+import time
+
+from benchmarks.common import DEFAULT_N, GEOM, dataset, emit
+from repro.core.session import CostSession, GridCandidate, System
+from repro.core.workload import Workload
 from repro.data.workloads import WorkloadSpec, point_workload
-from repro.index.pgm import build_pgm
-from repro.index.rmi import build_rmi
+from repro.index.adapters import DEFAULT_BRANCH_GRID
 from repro.sim.machine import simulate_point_queries
-from repro.index.radixspline import build_radixspline
-from repro.tuning.pgm_tuner import cam_tune_pgm, multicriteria_pgm_tune
-from repro.tuning.rmi_tuner import cam_tune_rmi, cdfshop_tune_rmi
-from repro.tuning.rs_tuner import cam_tune_radixspline
+from repro.tuning.session import (CDFShopTuner, MulticriteriaTuner,
+                                  PGMBuilder, RMIBuilder, RadixSplineBuilder,
+                                  TuningSession)
 
-BASELINE_BUFFER_FRAC = 0.5
+OUT_PATH = os.path.join(os.path.dirname(__file__), "results",
+                        "tuning_e2e.json")
+
+RMI_GRID = (2**8, 2**10, 2**12, 2**14, 2**16)
+RS_EPS_GRID = (16, 32, 64, 128, 256, 512, 1024)
+RS_BITS_GRID = (8, 10, 12, 14, 16)
 
 
-def _qps_pgm(keys, qk, eps, m_budget, policy="lru"):
-    idx = build_pgm(keys, eps)
-    cap = max(1, (m_budget - idx.size_bytes) // GEOM.page_bytes)
-    wlo, whi = idx.window(qk)
-    _, qps, misses = simulate_point_queries(
-        wlo // GEOM.c_ipp, whi // GEOM.c_ipp, cap, policy)
+def _qps(builder, point, qk, m_budget, policy="lru"):
+    """Replayed throughput of one tuned configuration (ground truth)."""
+    adapter = builder.build(point)
+    cap = max(1, (m_budget - adapter.size_bytes) // GEOM.page_bytes)
+    plo, phi = adapter.probe_windows(qk, GEOM)
+    _, qps, misses = simulate_point_queries(plo, phi, cap, policy)
     return qps, misses
 
 
-def run(n=DEFAULT_N, n_queries=100_000, budgets_mb=(0.5, 0.8, 1.0, 1.5, 2, 3.5)):
+def _mixed_eps_ab(keys, wl, budget, reps=5):
+    """Warm A/B: batched grouped kernel vs per-branch mixture histograms."""
+    builder = RMIBuilder(keys)
+    session = CostSession(System(GEOM, budget, "lru"))
+    cands = []
+    for b in DEFAULT_BRANCH_GRID:
+        adapter = builder.build({"branch": b})
+        cands.append(GridCandidate(knob=b, size_bytes=adapter.size_bytes,
+                                   index=adapter))
+    out = {}
+    for label, flag in (("batched", True), ("per_branch", False)):
+        session.estimate_grid(cands, wl, sample_rate=0.3,
+                              batch_mixed_eps=flag)      # warm-up
+        times = []
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            res = session.estimate_grid(cands, wl, sample_rate=0.3,
+                                        batch_mixed_eps=flag)
+            times.append(time.perf_counter() - t0)
+        out[label] = min(times)
+        out[f"{label}_best_branch"] = int(res.best_knob)
+    out["speedup_warm"] = out["per_branch"] / max(out["batched"], 1e-9)
+    out["n_candidates"] = len(cands)
+    return out
+
+
+def run(n=DEFAULT_N, n_queries=100_000,
+        budgets_mb=(0.5, 0.8, 1.0, 1.5, 2, 3.5), out_path=OUT_PATH):
     keys = dataset("books", n)
     qk, qpos = point_workload(keys, n_queries, WorkloadSpec("w4", seed=3))
+    wl = Workload.point(qpos, n=len(keys), query_keys=qk)
+
+    # Builders are shared across budgets: size models fit once, candidate
+    # indexes build once (the session re-prices them per budget).
+    pgm_b, rmi_b, rs_b = PGMBuilder(keys), RMIBuilder(keys), \
+        RadixSplineBuilder(keys)
+    record = {"n": int(n), "n_queries": int(n_queries), "budgets": {}}
 
     for mem_mb in budgets_mb:
-        m_budget = int(mem_mb * 2**20)
-        # --- PGM
-        res = cam_tune_pgm(keys, qpos, m_budget, GEOM, "lru", sample_rate=0.3)
-        qps_cam, _ = _qps_pgm(keys, qk, res.best_eps, m_budget)
-        base_eps, base_t = multicriteria_pgm_tune(
-            keys, index_space_budget=(1 - BASELINE_BUFFER_FRAC) * m_budget)
-        qps_base, _ = _qps_pgm(keys, qk, base_eps, m_budget)
+        m = int(mem_mb * 2**20)
+        ts = TuningSession(System(GEOM, m, "lru"))
+        entry = {}
+
+        # --- PGM: CAM joint search vs multicriteria baseline
+        res = ts.tune(pgm_b, wl, sample_rate=0.3)
+        qps_cam, _ = _qps(pgm_b, res.best, qk, m)
+        base = ts.tune(pgm_b, wl, tuner=MulticriteriaTuner())
+        qps_base, _ = _qps(pgm_b, base.best, qk, m)
+        entry["pgm"] = {
+            "cam_eps": int(res.best_knob), "cam_qps": qps_cam,
+            "multicriteria_eps": int(base.best_knob),
+            "multicriteria_qps": qps_base,
+            "qps_gain": qps_cam / max(qps_base, 1),
+            "cam_split": res.split,
+            "tuning_time_ratio": res.tuning_seconds
+            / max(base.tuning_seconds, 1e-9),
+        }
         emit(f"fig9/pgm/{mem_mb}MB", res.tuning_seconds * 1e6,
-             f"cam_eps={res.best_eps};cam_qps={qps_cam:.0f}"
-             f";base_eps={base_eps};base_qps={qps_base:.0f}"
-             f";qps_gain={qps_cam / max(qps_base, 1):.2f}x"
-             f";tuning_time_ratio={res.tuning_seconds / max(base_t, 1e-9):.2f}")
+             f"cam_eps={res.best_knob};cam_qps={qps_cam:.0f}"
+             f";base_eps={base.best_knob};base_qps={qps_base:.0f}"
+             f";qps_gain={qps_cam / max(qps_base, 1):.2f}x")
 
-        # --- RMI
-        grid = (2**8, 2**10, 2**12, 2**14, 2**16)
-        rres = cam_tune_rmi(keys, qpos, qk, m_budget, GEOM, "lru",
-                            branch_grid=grid, sample_rate=0.3)
-        idx = rres.indexes[rres.best_branch]
-        cap = max(1, (m_budget - idx.size_bytes) // GEOM.page_bytes)
-        wlo, whi, _ = idx.window(qk)
-        _, qps_cam_rmi, _ = simulate_point_queries(
-            wlo // GEOM.c_ipp, whi // GEOM.c_ipp, cap, "lru")
-        cb, ct, built = cdfshop_tune_rmi(
-            keys, index_space_budget=(1 - BASELINE_BUFFER_FRAC) * m_budget,
-            branch_grid=grid)
-        idx_b = built[cb]
-        cap_b = max(1, (m_budget - idx_b.size_bytes) // GEOM.page_bytes)
-        wlo, whi, _ = idx_b.window(qk)
-        _, qps_cdf, _ = simulate_point_queries(
-            wlo // GEOM.c_ipp, whi // GEOM.c_ipp, cap_b, "lru")
+        # --- RMI: CAM (batched mixed-eps grid) vs CDFShop baseline
+        rres = ts.tune(rmi_b, wl, overrides={"branch": RMI_GRID},
+                       sample_rate=0.3)
+        qps_rmi, _ = _qps(rmi_b, rres.best, qk, m)
+        cdf = ts.tune(rmi_b, wl, tuner=CDFShopTuner(),
+                      overrides={"branch": RMI_GRID})
+        qps_cdf, _ = _qps(rmi_b, cdf.best, qk, m)
+        entry["rmi"] = {
+            "cam_branch": int(rres.best_knob), "cam_qps": qps_rmi,
+            "cdfshop_branch": int(cdf.best_knob), "cdfshop_qps": qps_cdf,
+            "qps_gain": qps_rmi / max(qps_cdf, 1),
+            "skipped_unbuilt": [int(s.knob) for s in rres.skipped],
+        }
         emit(f"fig10/rmi/{mem_mb}MB", rres.tuning_seconds * 1e6,
-             f"cam_branch={rres.best_branch};cam_qps={qps_cam_rmi:.0f}"
-             f";cdfshop_branch={cb};cdfshop_qps={qps_cdf:.0f}"
-             f";qps_gain={qps_cam_rmi / max(qps_cdf, 1):.2f}x"
-             f";tuning_time_ratio={rres.tuning_seconds / max(ct, 1e-9):.2f}")
+             f"cam_branch={rres.best_knob};cam_qps={qps_rmi:.0f}"
+             f";cdfshop_branch={cdf.best_knob};cdfshop_qps={qps_cdf:.0f}"
+             f";qps_gain={qps_rmi / max(qps_cdf, 1):.2f}x")
 
-        # --- RadixSpline (third family, tunable via CostSession for the
-        # first time — corridor eps is the knob, same grid machinery as PGM)
+        # --- RadixSpline: joint (eps, radix_bits) vs eps-only at bits=16
         try:
-            rs = cam_tune_radixspline(
-                keys, qpos, m_budget, GEOM, "lru",
-                eps_grid=(16, 32, 64, 128, 256, 512, 1024), radix_bits=12,
-                sample_rate=0.3)
+            joint = ts.tune(rs_b, wl, sample_rate=0.3,
+                            overrides={"eps": RS_EPS_GRID,
+                                       "radix_bits": RS_BITS_GRID})
+            eps_only = ts.tune(rs_b, wl, sample_rate=0.3,
+                               overrides={"eps": RS_EPS_GRID,
+                                          "radix_bits": 16})
         except ValueError:
-            continue  # budget below the radix-table floor
-        rs_idx = build_radixspline(keys, rs.best_eps, radix_bits=12)
-        cap = max(1, (m_budget - rs_idx.size_bytes) // GEOM.page_bytes)
-        wlo, whi = rs_idx.window(qk)
-        _, qps_rs, _ = simulate_point_queries(
-            wlo // GEOM.c_ipp, whi // GEOM.c_ipp, cap, "lru")
-        emit(f"fig10b/radixspline/{mem_mb}MB", rs.tuning_seconds * 1e6,
-             f"cam_eps={rs.best_eps};cam_qps={qps_rs:.0f}"
-             f";index_kib={rs_idx.size_bytes / 1024:.0f}")
+            record["budgets"][str(mem_mb)] = entry
+            continue  # budget below the eps-only radix-table floor
+        qps_joint, _ = _qps(rs_b, joint.best, qk, m)
+        qps_eps_only, _ = _qps(rs_b, eps_only.best, qk, m)
+        entry["radixspline_joint"] = {
+            "joint_eps": int(joint.best["eps"]),
+            "joint_radix_bits": int(joint.best["radix_bits"]),
+            "joint_qps": qps_joint,
+            "eps_only_eps": int(eps_only.best["eps"]),
+            "eps_only_qps": qps_eps_only,
+            "qps_gain": qps_joint / max(qps_eps_only, 1),
+        }
+        emit(f"fig10b/radixspline/{mem_mb}MB", joint.tuning_seconds * 1e6,
+             f"joint=({joint.best['eps']},{joint.best['radix_bits']})"
+             f";joint_qps={qps_joint:.0f};eps_only_qps={qps_eps_only:.0f}"
+             f";qps_gain={qps_joint / max(qps_eps_only, 1):.2f}x")
+        record["budgets"][str(mem_mb)] = entry
+
+    # --- the batched mixed-eps kernel vs the per-branch path (warm)
+    ab_budget = int(max(budgets_mb) * 2**20) + (2 << 20)
+    record["mixed_eps_kernel"] = _mixed_eps_ab(keys, wl, ab_budget)
+    emit("tuning_e2e/mixed_eps_kernel",
+         record["mixed_eps_kernel"]["batched"] * 1e6,
+         f"speedup_warm={record['mixed_eps_kernel']['speedup_warm']:.2f}x"
+         f";candidates={record['mixed_eps_kernel']['n_candidates']}")
+
+    os.makedirs(os.path.dirname(out_path), exist_ok=True)
+    with open(out_path, "w") as f:
+        json.dump(record, f, indent=2)
+    emit("tuning_e2e/json", 0.0, f"path={os.path.relpath(out_path)}")
+    return record
 
 
 if __name__ == "__main__":
-    run()
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized inputs (~10x below the CPU default)")
+    args = ap.parse_args()
+    if args.smoke:
+        run(n=200_000, n_queries=20_000, budgets_mb=(0.5, 1.0))
+    else:
+        run()

@@ -1,23 +1,23 @@
-"""Memory-budgeted index tuning (paper §V): CAM picks eps* by trading index
-footprint against buffer capacity; the cache-oblivious baseline can't.
-
-The whole eps grid prices through ONE batched ``CostSession.estimate_grid``
-call (shared page-ref state, vmapped hit-rate solves) — the same machinery
-also grid-tunes RadixSpline, which had no tuning path before the CostSession
-redesign.
+"""Memory-budgeted index tuning (paper §V) through the ONE tuning surface:
+``TuningSession`` runs a joint (knob x buffer-split) search over a
+declarative knob space — one batched profiling pass, one batched cache-model
+solve, zero per-split model calls — while the cache-oblivious baselines plug
+in as ``Tuner`` strategies.  RadixSpline shows the 2-D case: the radix table
+is footprint that competes with buffer pages, so ``radix_bits`` is a real
+knob under a shared budget.
 
     PYTHONPATH=src python examples/tune_pgm.py [--smoke]
 """
 import argparse
 
 from repro.core.cam import CamGeometry
+from repro.core.session import System
 from repro.core.workload import Workload
 from repro.data.datasets import make_dataset
 from repro.data.workloads import WorkloadSpec, point_workload
-from repro.index.pgm import build_pgm
 from repro.sim.machine import simulate_point_queries
-from repro.tuning.pgm_tuner import cam_tune_pgm, multicriteria_pgm_tune
-from repro.tuning.rs_tuner import cam_tune_radixspline
+from repro.tuning.session import (MulticriteriaTuner, PGMBuilder,
+                                  RadixSplineBuilder, TuningSession)
 
 ap = argparse.ArgumentParser()
 ap.add_argument("--smoke", action="store_true",
@@ -32,32 +32,40 @@ workload = Workload.point(qpos, n=len(keys), query_keys=qk)
 BUDGET = int((0.25 if args.smoke else 1.0) * 2**20)  # index + buffer — tight!
 
 print(f"memory budget: {BUDGET / 2**20:.1f} MiB (shared by index AND buffer)")
-res = cam_tune_pgm(keys, qpos, BUDGET, GEOM, "lru", sample_rate=0.3)
-print(f"\nCAM batched grid ({len(res.estimates)} candidates, "
-      f"{res.tuning_seconds:.1f}s incl. size-model fit):")
+session = TuningSession(System(GEOM, BUDGET, "lru"))
+builder = PGMBuilder(keys)
+res = session.tune(builder, workload, sample_rate=0.3)
+print(f"\nCAM joint (eps x split) search ({len(res.estimates)} candidates, "
+      f"{len(res.skipped)} skipped unbuilt, {res.batched_solves} batched "
+      f"solve, {res.tuning_seconds:.1f}s incl. lazy size-model fit):")
 for eps in sorted(res.estimates):
     e = res.estimates[eps]
-    star = " <-- eps*" if eps == res.best_eps else ""
+    star = " <-- eps*" if eps == res.best_knob else ""
     print(f"  eps={eps:5d}: est {e.io_per_query:.4f} IO/q "
-          f"(index {float(res.size_model(eps))/1024:7.0f} KiB, "
+          f"(index {float(res.size_model(eps=eps))/1024:7.0f} KiB, "
           f"h={e.hit_rate:.3f}){star}")
+print(f"chosen buffer split: {res.split:.2f} of the budget "
+      f"({res.capacity_pages} pages)")
 
-base_eps, _ = multicriteria_pgm_tune(keys, index_space_budget=BUDGET // 2)
-print(f"\nbaseline (fixed 50/50 split) picks eps={base_eps}")
+base = session.tune(builder, workload, tuner=MulticriteriaTuner())
+print(f"\nmulticriteria baseline (fixed 50/50 split) picks "
+      f"eps={base.best_knob}")
 
-for name, eps in [("CAM", res.best_eps), ("baseline", base_eps)]:
-    idx = build_pgm(keys, eps)
-    cap = max(1, (BUDGET - idx.size_bytes) // GEOM.page_bytes)
-    lo, hi = idx.window(qk)
-    _, qps, misses = simulate_point_queries(lo // GEOM.c_ipp, hi // GEOM.c_ipp,
-                                            cap, "lru")
-    print(f"{name:9s} eps={eps:5d}: {qps:12,.0f} QPS "
+for name, point in [("CAM", res.best), ("baseline", base.best)]:
+    adapter = builder.build(point)
+    cap = max(1, (BUDGET - adapter.size_bytes) // GEOM.page_bytes)
+    plo, phi = adapter.probe_windows(qk, GEOM)
+    _, qps, misses = simulate_point_queries(plo, phi, cap, "lru")
+    print(f"{name:9s} eps={point['eps']:5d}: {qps:12,.0f} QPS "
           f"({misses} physical IOs)")
 
-# Same session machinery, third index family: tune RadixSpline's corridor eps
+# Same session, 2-D knob space: RadixSpline's (corridor eps x radix_bits).
 rs_budget = BUDGET * 2
-rs = cam_tune_radixspline(keys, qpos, rs_budget, GEOM, "lru",
-                          eps_grid=(16, 32, 64, 128, 256, 512, 1024),
-                          radix_bits=12, sample_rate=0.3)
-print(f"\nRadixSpline under {rs_budget / 2**20:.1f} MiB: eps*={rs.best_eps} "
-      f"(est {rs.est_io:.4f} IO/q, {rs.tuning_seconds:.1f}s)")
+rs = TuningSession(System(GEOM, rs_budget, "lru")).tune(
+    RadixSplineBuilder(keys), workload, sample_rate=0.3,
+    overrides={"eps": (16, 32, 64, 128, 256, 512, 1024),
+               "radix_bits": (8, 10, 12, 14, 16)})
+print(f"\nRadixSpline under {rs_budget / 2**20:.1f} MiB: "
+      f"(eps*, radix_bits*)=({rs.best['eps']}, {rs.best['radix_bits']}) "
+      f"(est {rs.est_io:.4f} IO/q, {rs.tuning_seconds:.1f}s) — a narrow "
+      "radix table frees buffer pages under a tight shared budget")

@@ -7,15 +7,25 @@
 # >1-device production-mesh dry-run) so the suite is green-on-regression on a
 # single-device CPU runner, then smokes the benchmarks covering the batched
 # estimation paths (point/range grid kernels AND the policy-aware sorted
-# grid), the tuning curve, and the join planner (incl. the join-tree
-# budget-split section), and finally runs EVERY example script in --smoke
-# mode so the README quickstarts stay executable.
+# grid), the tuning curve, the end-to-end tuner comparison (which records
+# the mixed-eps-kernel speedup to benchmarks/results/tuning_e2e.json), and
+# the join planner (incl. the join-tree budget-split section), and finally
+# runs EVERY example script in --smoke mode so the README quickstarts stay
+# executable.
+#
+# DeprecationWarning raised FROM repro.* code is an error: internal code
+# must not call the deprecated tuner/estimator shims.  The gate lives in
+# pyproject.toml's filterwarnings (module-regex entry, which a -W flag
+# could not express — -W escapes and end-anchors the module field), so
+# EVERY pytest invocation enforces it; tests exercising the shims directly
+# attribute the warning to the test module and stay exempt.
 set -e
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
 python -m pytest -x -q -m "not env_limited"
 python -m benchmarks.run --smoke --only estimate_grid pgm_tuning_curve
+python -m benchmarks.bench_tuning_e2e --smoke
 python -m benchmarks.bench_join --smoke
 
 # every example must exit 0 at CI size (each accepts --smoke)

@@ -29,6 +29,7 @@ __all__ = [
     "point_page_refs",
     "point_page_refs_grid",
     "point_page_refs_mixed_eps",
+    "point_page_refs_mixed_eps_grid",
     "range_page_refs",
     "range_page_refs_grid",
     "page_intervals",
@@ -222,6 +223,135 @@ def point_page_refs_mixed_eps(
         counts = counts + c
         total = total + t
     return counts, total
+
+
+#: Reusable host buffers for the mixed-eps grid kernel, keyed by
+#: (dtype, tag) and grown geometrically.  The kernel is bandwidth-bound and
+#: called in a warm tuning loop; fresh mmap-backed temporaries would pay
+#: page-fault zeroing on every call.  Bounded by the largest grid profiled
+#: (a few tens of MB); single-threaded use, like the session-level caches.
+_SCRATCH: dict = {}
+
+#: Max banded entries materialized at once (bounds each scratch buffer).
+_SCRATCH_ENTRIES = 2_000_000
+
+
+def _scratch(dtype, n: int, tag: str = "") -> np.ndarray:
+    key = (np.dtype(dtype), tag)
+    buf = _SCRATCH.get(key)
+    if buf is None or buf.size < n:
+        buf = np.empty(int(n * 1.25) + 16, dtype)
+        _SCRATCH[key] = buf
+    return buf[:n]
+
+
+@functools.lru_cache(maxsize=256)
+def _point_lut_np(eps: int, c_ipp: int) -> np.ndarray:
+    """Eq. 12 LUT transposed to (C_ipp, 2D+1), float64, host-side.
+
+    The mixed-eps grid kernel gathers whole LUT rows per reference, so the
+    slot axis leads; float64 is deliberate — ``np.bincount`` casts weights
+    to float64 internally, so a narrower gather would just add a copy.
+    """
+    d_radius = lut_radius(eps, c_ipp)
+    s = np.arange(c_ipp)[:, None]
+    d = np.arange(-d_radius, d_radius + 1)[None, :] * c_ipp
+    lo = np.maximum(-eps, d - s - eps)
+    hi = np.minimum(eps, d - s + c_ipp - 1 + eps)
+    return np.maximum(0, hi - lo + 1) / float(2 * eps + 1)
+
+
+def point_page_refs_mixed_eps_grid(
+    positions: np.ndarray,
+    eps_rows: np.ndarray,
+    c_ipp: int,
+    num_pages: int,
+) -> Tuple[np.ndarray, np.ndarray]:
+    """Mixed-eps histograms for a WHOLE candidate grid in one grouped pass.
+
+    The batched counterpart of :func:`point_page_refs_mixed_eps` for RMI
+    branch grids (§V-C): ``eps_rows[k, i]`` is candidate k's error bound for
+    the i-th query (its routed leaf's quantized bound), over the SHARED
+    ``positions``.  References are grouped by quantized eps ACROSS the whole
+    grid with ONE stable argsort — leaf bounds are pow2-quantized, so the
+    union has ~log2(max_eps) classes — and each class does one banded
+    LUT-row gather plus one ``np.bincount`` into a padded (K, P + 2D)
+    histogram (out-of-range window mass lands in the pad and is sliced off,
+    reproducing :func:`point_page_refs`'s boundary clipping without a mask).
+
+    This kernel is deliberately host-side: its cost is one weighted scatter
+    of ~R_total banded contributions, and on the CPU backends that run the
+    tuning loops XLA lowers ``segment_sum`` to a serial scatter (~10x slower
+    per entry than ``np.bincount``), which is exactly the bottleneck of the
+    per-branch path this replaces — K x #distinct-eps jitted scatters plus
+    as many dispatch round trips.  The downstream hit-rate solve stays one
+    vmapped jit; the histograms it consumes are device-uploaded once.
+
+    Returns (counts (K, num_pages) float32, totals (K,) float64).
+    """
+    positions = np.asarray(positions, np.int64)
+    eps_rows = np.maximum(np.asarray(eps_rows, np.int64), 1)
+    k, q_n = eps_rows.shape
+    if positions.shape[0] != q_n:
+        raise ValueError(f"eps_rows has {q_n} columns for "
+                         f"{positions.shape[0]} positions")
+    page = positions // c_ipp
+    slot = positions - page * c_ipp
+    max_radius = lut_radius(int(eps_rows.max()), c_ipp)
+    pad = num_pages + 2 * max_radius
+    counts = np.zeros(k * pad, np.float64)
+
+    # Class codes without a sort over K*Q elements: pow2-quantized bounds
+    # (the adapters' contract) map to their exponent — popcount(e - 1) —
+    # while arbitrary bounds (third-party callers) fall back to unique-rank
+    # codes.
+    flat_eps = eps_rows.ravel()
+    if np.bitwise_and(flat_eps, flat_eps - 1).any():
+        classes, codes = np.unique(flat_eps, return_inverse=True)
+        if len(classes) <= 256:             # byte compares in the class loop
+            codes = codes.astype(np.uint8)
+    elif hasattr(np, "bitwise_count"):
+        codes = np.bitwise_count(flat_eps - 1)
+        classes = None
+    else:
+        codes = np.rint(np.log2(flat_eps.astype(np.float64))).astype(np.uint8)
+        classes = None
+    # Shared flat arrays: row*pad + page in one precomputed vector, so each
+    # class needs exactly two gathers before its banded bincount.  All big
+    # temporaries live in the module scratch pool — the kernel is memory-
+    # bound, and re-faulting ~25 MB of fresh mmap pages per warm call would
+    # cost as much as the arithmetic it feeds.
+    prebase = _scratch(np.int64, k * q_n).reshape(k, q_n)
+    np.add(np.arange(k, dtype=np.int64)[:, None] * pad, page[None, :],
+           out=prebase)
+    prebase = prebase.reshape(-1)
+    slot_tiled = _scratch(np.int32, k * q_n).reshape(k, q_n)
+    np.copyto(slot_tiled, slot.astype(np.int32)[None, :])
+    slot_tiled = slot_tiled.reshape(-1)
+    for code in np.flatnonzero(np.bincount(codes)):
+        eps = int(classes[code]) if classes is not None else 1 << int(code)
+        class_idx = np.flatnonzero(codes == code)
+        radius = lut_radius(eps, c_ipp)
+        width = 2 * radius + 1
+        lut = _point_lut_np(eps, c_ipp)
+        offs = np.arange(width)[None, :]
+        # Wide-window classes (tiny branch factors) chunk so the scratch
+        # pool stays bounded (~30 MB) whatever the grid.
+        chunk = max(1, _SCRATCH_ENTRIES // width)
+        for a in range(0, class_idx.shape[0], chunk):
+            idx = class_idx[a:a + chunk]
+            t = idx.shape[0]
+            w = _scratch(np.float64, t * width, "w").reshape(t, width)
+            np.take(lut, slot_tiled[idx], axis=0, out=w)   # (T, 2D+1) rows
+            base = _scratch(np.int64, t, "base")
+            np.take(prebase, idx, out=base)
+            base += max_radius - radius
+            flat = _scratch(np.int64, t * width, "flat").reshape(t, width)
+            np.add(base[:, None], offs, out=flat)
+            counts += np.bincount(flat.reshape(-1), weights=w.reshape(-1),
+                                  minlength=k * pad)
+    valid = counts.reshape(k, pad)[:, max_radius:max_radius + num_pages]
+    return valid.astype(np.float32), valid.sum(axis=1)
 
 
 @functools.partial(jax.jit, static_argnames=("eps", "c_ipp", "num_pages", "n"))

@@ -40,6 +40,7 @@ __all__ = [
     "UniformEpsModel",
     "GridCandidate",
     "GridResult",
+    "GridProfiles",
     "SkippedCandidate",
     "PlanCost",
     "CostSession",
@@ -398,6 +399,37 @@ class SkippedCandidate(NamedTuple):
 
 
 @dataclasses.dataclass
+class GridProfiles:
+    """Per-candidate structural profiles from ONE batched profiling pass.
+
+    This is the workload-dependent half of ``estimate_grid``, split out so
+    capacity-dependent consumers (the tuner's joint knob x buffer-split
+    search) can price the SAME profiles at many capacities without
+    re-profiling: everything here is independent of the buffer capacity, and
+    :meth:`CostSession.solve_profiles` turns (row, capacity) pairs into hit
+    rates with a single batched cache-model solve.
+
+    ``caps`` are the full-budget capacities (``System.capacity_for`` of each
+    candidate's footprint) — the maximal buffer split each knob can take.
+    """
+
+    knobs: Tuple[object, ...]
+    counts: jnp.ndarray                     # (K, P) IRM histograms
+    totals: np.ndarray                      # (K,) sample IRM request mass
+    dacs: np.ndarray                        # (K,) E[DAC] per query
+    sizes: np.ndarray                       # (K,) index footprints (bytes)
+    caps: np.ndarray                        # (K,) full-budget capacities
+    sparts: Tuple[Optional[SortedScanPart], ...]
+    skipped: Tuple[SkippedCandidate, ...]
+    scale: float                            # full/sample request-volume ratio
+    n_queries: int
+
+    def sorted_refs(self, i: int) -> float:
+        sp = self.sparts[i]
+        return sp.total_refs if sp is not None else 0.0
+
+
+@dataclasses.dataclass
 class GridResult:
     """All candidate estimates + argmin, from one batched pass."""
 
@@ -446,23 +478,129 @@ class CostSession:
     # ------------------------------------------------------------------- grid
     def estimate_grid(self, candidates: Sequence[GridCandidate],
                       workload: Workload, sample_rate: float = 1.0,
-                      seed: int = 0) -> GridResult:
+                      seed: int = 0, batch_mixed_eps: bool = True
+                      ) -> GridResult:
         """Estimate a whole knob grid in one jitted/vmapped pass.
 
         Page-ref state (positions, scatter targets) is shared across
         candidates; histograms for uniform-eps candidates come from the
-        batched grid kernel, built indexes (RMI) contribute their mixture
-        profiles; ALL hit-rate fixed points then solve in a single vmapped
-        bisection.  Sorted workloads batch through the vmapped sorted-scan
-        solve (one shared coverage profile — see ``_sorted_grid``), and
-        mixed workloads may contain sorted parts, composed with the IRM
-        solve inside ``cache_models.hit_rate_grid``.  Candidates that are
-        budget-infeasible or cannot profile the workload are recorded in
-        ``GridResult.skipped`` with their reasons.
+        batched grid kernel, index-backed candidates exposing
+        ``point_ref_eps`` (RMI) batch through the grouped mixed-eps kernel
+        (``batch_mixed_eps=False`` falls back to per-candidate mixture
+        histograms — the legacy per-branch path kept for golden equivalence
+        and benchmarking); ALL hit-rate fixed points then solve in a single
+        vmapped bisection.  Sorted workloads batch through the vmapped
+        sorted-scan solve (one shared coverage profile — see
+        ``_sorted_grid``), and mixed workloads may contain sorted parts,
+        composed with the IRM solve inside ``cache_models.hit_rate_grid``.
+        Candidates that are budget-infeasible or cannot profile the
+        workload are recorded in ``GridResult.skipped`` with their reasons.
         """
         t0 = time.perf_counter()
         wl = self._sampled(workload, sample_rate, seed)
-        geom = self.system.geom
+        feasible, skipped = self._feasible(candidates)
+        if wl.kind == SORTED:
+            return self._sorted_grid(feasible, skipped, wl, t0)
+        prof = self._profile_batch(feasible, wl, skipped, batch_mixed_eps)
+        h, n_distinct = self.solve_profiles(prof, prof.caps)
+
+        elapsed = time.perf_counter() - t0
+        per = elapsed / max(len(prof.knobs), 1)
+        estimates: Dict[object, CamEstimate] = {}
+        for i, knob in enumerate(prof.knobs):
+            io = (1.0 - float(h[i])) * float(prof.dacs[i])
+            estimates[knob] = CamEstimate(
+                io_per_query=io, hit_rate=float(h[i]),
+                dac=float(prof.dacs[i]), capacity_pages=int(prof.caps[i]),
+                total_refs=(float(prof.totals[i])
+                            + prof.sorted_refs(i)) * prof.scale,
+                distinct_pages=float(n_distinct[i]),
+                estimation_seconds=per, policy=self.system.policy,
+                device_cost=self._device_cost(io))
+        best = min(estimates, key=lambda k: estimates[k].io_per_query)
+        return GridResult(estimates, best, elapsed, tuple(prof.skipped))
+
+    def grid_profiles(self, candidates: Sequence[GridCandidate],
+                      workload: Workload, sample_rate: float = 1.0,
+                      seed: int = 0, batch_mixed_eps: bool = True
+                      ) -> GridProfiles:
+        """Capacity-independent profiles of a knob grid (one batched pass).
+
+        The profiling half of :meth:`estimate_grid`: feasibility filtering,
+        the uniform-eps banded-matmul kernels, the grouped mixed-eps kernel
+        for batchable index-backed candidates, per-candidate profiles for
+        the rest.  Pair with :meth:`solve_profiles` to price the SAME
+        profiles at arbitrary (row, capacity) combinations — the engine
+        behind the tuner's joint (knob x buffer-split) search.
+        """
+        wl = self._sampled(workload, sample_rate, seed)
+        feasible, skipped = self._feasible(candidates)
+        return self._profile_batch(feasible, wl, skipped, batch_mixed_eps)
+
+    def solve_profiles(self, profiles: GridProfiles, capacities,
+                       rows: Optional[np.ndarray] = None):
+        """Hit rates of profile rows at given capacities — ONE batched solve.
+
+        ``rows[i]`` names the profile row that ``capacities[i]`` applies to
+        (default: row i), so a (knob x split) table — every knob priced at
+        every candidate buffer split — solves in a single
+        ``cache_models.hit_rate_grid`` call, the many-histogram
+        generalization of the ``hit_rate_curve`` capacity-curve evaluator.
+        Mixed workloads' sorted parts compose inside the same call through
+        ``sorted_scan_hit_rate_grid`` (which ``sorted_scan_miss_curve``
+        wraps), preserving the per-candidate composition semantics of
+        ``_finish``.  Returns ``(hit_rates, distinct_pages)`` float64
+        arrays aligned with ``capacities``.
+        """
+        idx = (np.arange(len(profiles.knobs), dtype=np.int64)
+               if rows is None else np.asarray(rows, np.int64))
+        counts = (profiles.counts if rows is None
+                  else profiles.counts[jnp.asarray(idx)])
+        sample_refs = jnp.asarray(profiles.totals[idx], jnp.float32)
+        full_refs = sample_refs * profiles.scale
+        caps_arr = jnp.asarray(np.asarray(capacities, np.float64), jnp.float32)
+        num_pages = int(profiles.counts.shape[1])
+        sparts = [profiles.sparts[i] for i in idx]
+        surrogate = {}
+        if any(sp is not None for sp in sparts):
+            # Mixed workload with sorted sub-streams: compose the IRM solve
+            # with the policy-aware sorted-scan model inside hit_rate_grid.
+            zero = SortedScanPart(0.0, 0.0, 1,
+                                  jnp.zeros((num_pages,), jnp.float32), 0.0)
+            sps = [sp if sp is not None else zero for sp in sparts]
+            # coverage-less legacy parts: remember the true N per row, price
+            # through the compulsory-equivalent surrogate histogram
+            for i, sp in enumerate(sps):
+                if sp.coverage is None:
+                    surrogate[i] = sp.distinct_pages
+                    sps[i] = dataclasses.replace(
+                        sp, coverage=_compulsory_coverage(sp, num_pages))
+            s_refs = jnp.asarray([sp.total_refs for sp in sps], jnp.float32)
+            h, n_distinct = cache_models.hit_rate_grid(
+                self.system.policy, counts, sample_refs, full_refs, caps_arr,
+                sorted_coverage=_stack_or_share(
+                    [sp.coverage for sp in sps]),
+                sorted_refs=s_refs,
+                sorted_distinct=jnp.asarray(
+                    [sp.distinct_pages for sp in sps], jnp.float32),
+                sorted_solo=jnp.asarray(
+                    [sp.solo_repeats for sp in sps], jnp.float32),
+                sorted_min_caps=jnp.asarray(
+                    [sp.min_capacity for sp in sps], jnp.float32),
+                sorted_full_refs=s_refs * profiles.scale)
+        else:
+            h, n_distinct = cache_models.hit_rate_grid(
+                self.system.policy, counts, sample_refs, full_refs, caps_arr)
+        h = np.asarray(h, np.float64)
+        n_distinct = np.asarray(n_distinct, np.float64)
+        for i, true_n in surrogate.items():
+            # report the same footprint _finish's coverage-less fallback
+            # does (IRM distinct + the part's N), not the surrogate's page
+            n_distinct[i] = float(jnp.sum(counts[i] > 0)) + true_n
+        return h, n_distinct
+
+    def _feasible(self, candidates: Sequence[GridCandidate]):
+        """Budget-feasibility filter (Alg. 1 l. 15) with typed skip reasons."""
         feasible, skipped = [], []
         for c in candidates:
             if self.system.capacity_for(c.size_bytes) >= 1:
@@ -475,22 +613,24 @@ class CostSession:
                     f"index"))
         if not feasible:
             raise ValueError("memory budget too small for any candidate index")
+        return feasible, skipped
 
-        if wl.kind == SORTED:
-            return self._sorted_grid(feasible, skipped, wl, t0)
-
+    def _profile_batch(self, feasible, wl: Workload, skipped,
+                       batch_mixed_eps: bool) -> GridProfiles:
+        """Assemble per-candidate (histogram, R, E[DAC], sorted part) rows."""
+        geom = self.system.geom
         uniform = [c for c in feasible if c.index is None]
         backed = [c for c in feasible if c.index is not None]
 
-        rows, totals, dacs, caps, knobs, sparts = [], [], [], [], [], []
+        rows, totals, dacs, knobs, sparts, sizes = [], [], [], [], [], []
         if uniform:
             counts_u, totals_u, dacs_u, spart_u = self._uniform_grid(
                 uniform, wl)
             rows.extend(counts_u)
             totals.extend(totals_u)
             dacs.extend(dacs_u)
-            caps.extend(self.system.capacity_for(c.size_bytes) for c in uniform)
             knobs.extend(c.knob for c in uniform)
+            sizes.extend(c.size_bytes for c in uniform)
             # Sorted windows are eps-independent; only the Thm III.1 capacity
             # premise varies across uniform-eps candidates (eps <= 0 keeps
             # the shared profile's widest-observed-window premise, matching
@@ -502,7 +642,21 @@ class CostSession:
                     spart_u,
                     min_capacity=1 + int(np.ceil(2 * c.eps / geom.c_ipp)))
                 for c in uniform)
+        mixed_rows = self._mixed_eps_rows(backed, wl, skipped,
+                                          batch_mixed_eps)
         for c in backed:
+            if id(c) in mixed_rows:
+                entry = mixed_rows[id(c)]
+                if entry is None:       # point_ref_eps raised: skip recorded
+                    continue
+                counts_c, total_c, dac_c = entry
+                rows.append(counts_c)
+                totals.append(total_c)
+                dacs.append(dac_c)
+                sparts.append(None)
+                knobs.append(c.knob)
+                sizes.append(c.size_bytes)
+                continue
             try:
                 prof = c.index.page_ref_profile(wl, geom)
             except UnsupportedWorkloadError as e:
@@ -532,72 +686,67 @@ class CostSession:
                 totals.append(prof.total_refs)
                 sparts.append(prof.sorted_part)
             dacs.append(prof.expected_dac)
-            caps.append(self.system.capacity_for(c.size_bytes))
             knobs.append(c.knob)
+            sizes.append(c.size_bytes)
         if not knobs:
             raise UnsupportedWorkloadError(
                 wl.kind,
                 detail="no grid candidate could profile this workload ("
                        + "; ".join(s.reason for s in skipped) + ")")
 
-        counts = jnp.stack([jnp.asarray(r, jnp.float32) for r in rows])
-        sample_refs = jnp.asarray(totals, jnp.float32)
-        full_refs = sample_refs * wl.scale
-        caps_arr = jnp.asarray(caps, jnp.float32)
-        num_pages = counts.shape[1]
-        surrogate = {}
-        if any(sp is not None for sp in sparts):
-            # Mixed workload with sorted sub-streams: compose the IRM solve
-            # with the policy-aware sorted-scan model inside hit_rate_grid.
-            zero = SortedScanPart(0.0, 0.0, 1,
-                                  jnp.zeros((num_pages,), jnp.float32), 0.0)
-            sps = [sp if sp is not None else zero for sp in sparts]
-            # coverage-less legacy parts: remember the true N per row, price
-            # through the compulsory-equivalent surrogate histogram
-            for i, sp in enumerate(sps):
-                if sp.coverage is None:
-                    surrogate[i] = sp.distinct_pages
-                    sps[i] = dataclasses.replace(
-                        sp, coverage=_compulsory_coverage(sp, num_pages))
-            s_refs = jnp.asarray([sp.total_refs for sp in sps], jnp.float32)
-            h, n_distinct = cache_models.hit_rate_grid(
-                self.system.policy, counts, sample_refs, full_refs, caps_arr,
-                sorted_coverage=_stack_or_share(
-                    [sp.coverage for sp in sps]),
-                sorted_refs=s_refs,
-                sorted_distinct=jnp.asarray(
-                    [sp.distinct_pages for sp in sps], jnp.float32),
-                sorted_solo=jnp.asarray(
-                    [sp.solo_repeats for sp in sps], jnp.float32),
-                sorted_min_caps=jnp.asarray(
-                    [sp.min_capacity for sp in sps], jnp.float32),
-                sorted_full_refs=s_refs * wl.scale)
-            sorted_refs = [sp.total_refs for sp in sps]
-        else:
-            h, n_distinct = cache_models.hit_rate_grid(
-                self.system.policy, counts, sample_refs, full_refs, caps_arr)
-            sorted_refs = [0.0] * len(knobs)
-        h = np.asarray(h, np.float64)
-        n_distinct = np.asarray(n_distinct, np.float64)
-        for i, true_n in surrogate.items():
-            # report the same footprint _finish's coverage-less fallback
-            # does (IRM distinct + the part's N), not the surrogate's page
-            n_distinct[i] = float(jnp.sum(counts[i] > 0)) + true_n
+        sizes_arr = np.asarray(sizes, np.float64)
+        return GridProfiles(
+            knobs=tuple(knobs),
+            counts=jnp.stack([jnp.asarray(r, jnp.float32) for r in rows]),
+            totals=np.asarray(totals, np.float64),
+            dacs=np.asarray(dacs, np.float64),
+            sizes=sizes_arr,
+            caps=np.asarray([self.system.capacity_for(s)
+                             for s in sizes_arr], np.int64),
+            sparts=tuple(sparts),
+            skipped=tuple(skipped),
+            scale=float(wl.scale),
+            n_queries=int(wl.n_queries))
 
-        elapsed = time.perf_counter() - t0
-        per = elapsed / max(len(knobs), 1)
-        estimates: Dict[object, CamEstimate] = {}
-        for i, knob in enumerate(knobs):
-            io = (1.0 - float(h[i])) * float(dacs[i])
-            estimates[knob] = CamEstimate(
-                io_per_query=io, hit_rate=float(h[i]), dac=float(dacs[i]),
-                capacity_pages=int(caps[i]),
-                total_refs=(float(totals[i]) + sorted_refs[i]) * wl.scale,
-                distinct_pages=float(n_distinct[i]),
-                estimation_seconds=per, policy=self.system.policy,
-                device_cost=self._device_cost(io))
-        best = min(estimates, key=lambda k: estimates[k].io_per_query)
-        return GridResult(estimates, best, elapsed, tuple(skipped))
+    def _mixed_eps_rows(self, backed, wl: Workload, skipped,
+                        batch_mixed_eps: bool):
+        """Batched §V-C mixture histograms (the ROADMAP mixed-eps kernel).
+
+        Index-backed candidates exposing ``point_ref_eps`` (RMI adapters)
+        hand over per-query quantized leaf error bounds; the whole branch
+        grid then profiles in ONE grouped banded pass
+        (``page_ref.point_page_refs_mixed_eps_grid`` — references grouped
+        by LUT radius ACROSS candidates) instead of per-branch mixture
+        histograms with K x #distinct-eps jit round trips.
+
+        Returns ``{id(candidate): (counts_row, total, e_dac) | None}`` —
+        ``None`` marks a candidate whose routing raised (skip recorded).
+        """
+        if (not batch_mixed_eps or wl.kind != POINT
+                or wl.query_keys is None):
+            return {}
+        batchable = [c for c in backed if hasattr(c.index, "point_ref_eps")]
+        if not batchable:
+            return {}
+        geom = self.system.geom
+        out, ok, eps_rows, ok_dacs = {}, [], [], []
+        for c in batchable:
+            try:
+                eps_q, e_dac = c.index.point_ref_eps(wl, geom)
+            except UnsupportedWorkloadError as e:
+                skipped.append(SkippedCandidate(c.knob, str(e)))
+                out[id(c)] = None
+                continue
+            ok.append(c)
+            eps_rows.append(np.asarray(eps_q, np.int64))
+            ok_dacs.append(float(e_dac))
+        if ok:
+            num_pages = geom.num_pages(int(ok[0].index.n))
+            counts_b, totals_b = page_ref.point_page_refs_mixed_eps_grid(
+                wl.positions, np.stack(eps_rows), geom.c_ipp, num_pages)
+            for i, c in enumerate(ok):
+                out[id(c)] = (counts_b[i], float(totals_b[i]), ok_dacs[i])
+        return out
 
     def _sorted_grid(self, feasible, skipped, wl: Workload,
                      t0: float) -> GridResult:

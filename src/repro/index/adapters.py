@@ -36,7 +36,37 @@ from repro.index import radixspline as rs_mod
 from repro.index import rmi as rmi_mod
 
 __all__ = ["PGMAdapter", "RMIAdapter", "RadixSplineAdapter", "quantize_eps",
-           "ADAPTERS", "wrap_index"]
+           "ADAPTERS", "wrap_index", "sqrt2_grid", "pow2_grid",
+           "DEFAULT_EPS_GRID", "DEFAULT_BRANCH_GRID",
+           "DEFAULT_RADIX_BITS_GRID"]
+
+
+def sqrt2_grid(lo: int = 4, hi: int = 4096) -> tuple:
+    """Dense sqrt(2)-spaced grid (the ONE implementation — the deprecated
+    ``pgm_tuner.default_eps_grid`` shim delegates here)."""
+    grid, e = [], float(lo)
+    while e <= hi:
+        grid.append(int(round(e)))
+        e *= np.sqrt(2.0)
+    return tuple(dict.fromkeys(grid))
+
+
+def pow2_grid(lo: int = 2**6, hi: int = 2**16) -> tuple:
+    """Doubling grid (the ONE implementation behind branch-factor grids)."""
+    grid, b = [], int(lo)
+    while b <= hi:
+        grid.append(b)
+        b *= 2
+    return tuple(grid)
+
+
+#: Default knob grids advertised through ``knobs()`` metadata.  A tuner's
+#: ``KnobSpace`` is derived from these (``repro.tuning.session``); they are
+#: deliberately denser than what replay-based tuning could afford, because
+#: grid candidates price through the batched estimators, not execution.
+DEFAULT_EPS_GRID = sqrt2_grid()                        # sqrt(2)-spaced 4..4096
+DEFAULT_BRANCH_GRID = pow2_grid()                      # doubling 64..65536
+DEFAULT_RADIX_BITS_GRID = (8, 10, 12, 14, 16, 18)
 
 
 def quantize_eps(eps: np.ndarray) -> np.ndarray:
@@ -78,9 +108,15 @@ class PGMAdapter:
     def n(self) -> int:
         return self.index.n
 
+    @classmethod
+    def knob_metadata(cls) -> Dict[str, object]:
+        """Knob space metadata without a built instance (tuner-facing)."""
+        return {"eps": {"kind": "error_bound", "tunable": True,
+                        "grid": DEFAULT_EPS_GRID}}
+
     def knobs(self) -> Dict[str, object]:
         return {"eps": {"value": self.index.eps, "kind": "error_bound",
-                        "tunable": True}}
+                        "tunable": True, "grid": DEFAULT_EPS_GRID}}
 
     def page_ref_profile(self, workload: Workload,
                          geom: CamGeometry) -> PageRefProfile:
@@ -121,11 +157,26 @@ class RadixSplineAdapter:
     def n(self) -> int:
         return self.index.n
 
+    @classmethod
+    def knob_metadata(cls) -> Dict[str, object]:
+        """2-D knob space: corridor eps x radix table width.
+
+        ``radix_bits`` is a REAL tuning knob under a shared memory budget —
+        the table costs 4 * (2^bits + 1) bytes of footprint that competes
+        with buffer pages, so a tight budget prefers a narrow table even
+        though the in-memory knot search gets a little wider.
+        """
+        return {"eps": {"kind": "error_bound", "tunable": True,
+                        "grid": DEFAULT_EPS_GRID},
+                "radix_bits": {"kind": "lookup_accel", "tunable": True,
+                               "grid": DEFAULT_RADIX_BITS_GRID}}
+
     def knobs(self) -> Dict[str, object]:
         return {"eps": {"value": self.index.eps, "kind": "error_bound",
-                        "tunable": True},
+                        "tunable": True, "grid": DEFAULT_EPS_GRID},
                 "radix_bits": {"value": self.index.radix_bits,
-                               "kind": "lookup_accel", "tunable": False}}
+                               "kind": "lookup_accel", "tunable": True,
+                               "grid": DEFAULT_RADIX_BITS_GRID}}
 
     def page_ref_profile(self, workload: Workload,
                          geom: CamGeometry) -> PageRefProfile:
@@ -144,6 +195,15 @@ class RMIAdapter:
 
     index: rmi_mod.RMIIndex
     family: str = "rmi"
+    # Routing memo: (id(query_keys), c_ipp, strategy) -> (keys ref, eps row,
+    # E[DAC]).  Routing depends only on (index, workload), yet a tuning loop
+    # re-prices the same workload under many (budget, policy) Systems; the
+    # strong reference in the value keeps the id valid for the entry's
+    # lifetime, and the FIFO bound keeps a long-lived adapter from pinning
+    # arbitrary query arrays.  Excluded from eq/repr (pure cache).
+    _ref_cache: dict = dataclasses.field(default_factory=dict, init=False,
+                                         repr=False, compare=False)
+    _REF_CACHE_MAX = 4
 
     @classmethod
     def build(cls, keys: np.ndarray, branch: int) -> "RMIAdapter":
@@ -157,9 +217,44 @@ class RMIAdapter:
     def n(self) -> int:
         return self.index.n
 
+    @classmethod
+    def knob_metadata(cls) -> Dict[str, object]:
+        return {"branch": {"kind": "fanout", "tunable": True,
+                           "grid": DEFAULT_BRANCH_GRID}}
+
     def knobs(self) -> Dict[str, object]:
         return {"branch": {"value": self.index.branch, "kind": "fanout",
-                           "tunable": True}}
+                           "tunable": True, "grid": DEFAULT_BRANCH_GRID}}
+
+    def point_ref_eps(self, workload: Workload, geom: CamGeometry):
+        """Per-query quantized leaf error bounds + E[DAC] (§V-C inputs).
+
+        This is what the batched mixed-eps grid kernel
+        (``page_ref.point_page_refs_mixed_eps_grid``) consumes: routing is
+        host-side and cheap, so a whole branch grid can collect every
+        candidate's (eps row, E[DAC]) first and profile them in ONE grouped
+        pass instead of per-branch mixture histograms.
+        """
+        if workload.kind != POINT or workload.query_keys is None:
+            raise UnsupportedWorkloadError(
+                workload.kind,
+                detail="RMI profiling needs a point workload with "
+                       "query_keys (the root must route them)")
+        key = (id(workload.query_keys), geom.c_ipp, geom.strategy)
+        hit = self._ref_cache.get(key)
+        if hit is not None:
+            return hit[1], hit[2]
+        index = self.index
+        leaf = index.route(workload.query_keys)
+        eps_q = quantize_eps(index.leaf_eps[leaf])
+        weights = np.bincount(leaf, minlength=index.branch).astype(np.float64)
+        weights /= max(weights.sum(), 1.0)
+        e_dac = float(dac_mod.expected_dac_rmi(
+            index.leaf_eps, weights, geom.c_ipp, geom.strategy))
+        while len(self._ref_cache) >= self._REF_CACHE_MAX:
+            self._ref_cache.pop(next(iter(self._ref_cache)))
+        self._ref_cache[key] = (workload.query_keys, eps_q, e_dac)
+        return eps_q, e_dac
 
     def page_ref_profile(self, workload: Workload,
                          geom: CamGeometry) -> PageRefProfile:
@@ -173,21 +268,10 @@ class RMIAdapter:
         if workload.kind == SORTED:
             return sorted_stream_profile(workload, geom,
                                          geom.num_pages(self.index.n))
-        if workload.kind != POINT or workload.query_keys is None:
-            raise UnsupportedWorkloadError(
-                workload.kind,
-                detail="RMI profiling needs a point workload with "
-                       "query_keys (the root must route them)")
-        index = self.index
-        leaf = index.route(workload.query_keys)
-        eps_q = quantize_eps(index.leaf_eps[leaf])
-        num_pages = geom.num_pages(index.n)
+        eps_q, e_dac = self.point_ref_eps(workload, geom)
         counts, total = page_ref.point_page_refs_mixed_eps(
-            workload.positions, eps_q, geom.c_ipp, num_pages)
-        weights = np.bincount(leaf, minlength=index.branch).astype(np.float64)
-        weights /= max(weights.sum(), 1.0)
-        e_dac = float(dac_mod.expected_dac_rmi(
-            index.leaf_eps, weights, geom.c_ipp, geom.strategy))
+            workload.positions, eps_q, geom.c_ipp,
+            geom.num_pages(self.index.n))
         return PageRefProfile(counts, float(total), e_dac)
 
     def window(self, query_keys: np.ndarray):

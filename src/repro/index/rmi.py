@@ -12,10 +12,20 @@ import dataclasses
 
 import numpy as np
 
-__all__ = ["RMIIndex", "build_rmi"]
+__all__ = ["RMIIndex", "build_rmi", "rmi_size_bytes"]
 
 _BYTES_PER_LEAF = 24   # slope f8 + intercept f8 + eps i8
 _BYTES_ROOT = 16
+
+
+def rmi_size_bytes(branch: int) -> int:
+    """Footprint of a branch-factor candidate WITHOUT building it.
+
+    Root and per-leaf parameters are fixed-size, so RMI's size model is
+    exact and analytic — which is what lets tuners drop budget-infeasible
+    branches before paying an O(n) construction.
+    """
+    return _BYTES_ROOT + _BYTES_PER_LEAF * int(branch)
 
 
 @dataclasses.dataclass(frozen=True)

@@ -1,23 +1,17 @@
-"""CAM-based PGM tuning under a memory budget (paper §V-B).
+"""DEPRECATED shims: CAM-based PGM tuning (paper §V-B).
 
-Given total memory M split between index and buffer, pick
-
-    eps* = argmin_eps (1 - h(M - M_idx(eps))) * E[DAC(eps)]        (Eq. 15/16)
-
-M_idx(eps) follows the fitted dataset-specific power law a*eps^-b + c from a
-few sampled constructions (the multicriteria-PGM fitting trick), so the dense
-eps grid costs one CAM estimate per candidate — no index builds in the loop.
-The whole grid now prices through ``CostSession.estimate_grid``: one jitted
-pass over shared page-ref state instead of a per-candidate Python loop.
-
-The baseline ``multicriteria_pgm_tune`` reproduces the cache-oblivious tuner:
-it receives a fixed index-space budget (a reserved fraction of M) and picks
-the most accurate (smallest-eps) index that fits, ignoring the buffer interaction.
+Every entry point here now delegates to the ONE tuning surface,
+:class:`repro.tuning.session.TuningSession` — declarative knob spaces, lazy
+size models, pluggable tuner strategies, and the joint (knob x buffer-split)
+search.  The shims are kept for golden equivalence: same signatures, same
+result shapes, same chosen knobs on fixed seeds.  New code should build a
+:class:`~repro.tuning.session.PGMBuilder` and call ``TuningSession.tune``.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
+import warnings
 from typing import Dict, Optional, Sequence, Tuple
 
 import numpy as np
@@ -25,11 +19,17 @@ import numpy as np
 from repro.core import cam
 from repro.core.session import CostSession, GridCandidate, System
 from repro.core.workload import Workload
-from repro.index import pgm
 from repro.tuning import fit
 
 __all__ = ["PGMTuneResult", "default_eps_grid", "profile_pgm_size_model",
            "cam_tune_pgm", "cam_tune_uniform_eps", "multicriteria_pgm_tune"]
+
+
+def _deprecated(name: str) -> None:
+    warnings.warn(
+        f"repro.tuning.pgm_tuner.{name} is deprecated; use "
+        "repro.tuning.session.TuningSession with a PGMBuilder",
+        DeprecationWarning, stacklevel=3)
 
 
 @dataclasses.dataclass
@@ -42,23 +42,26 @@ class PGMTuneResult:
 
 
 def default_eps_grid(lo: int = 4, hi: int = 4096) -> Tuple[int, ...]:
-    """Dense sqrt(2)-spaced grid — much denser than what replay could afford."""
-    grid = []
-    e = float(lo)
-    while e <= hi:
-        grid.append(int(round(e)))
-        e *= np.sqrt(2.0)
-    return tuple(dict.fromkeys(grid))
+    """Dense sqrt(2)-spaced grid — much denser than what replay could afford.
+
+    Delegates to the one implementation behind the adapters' knob metadata
+    (``repro.index.adapters.sqrt2_grid``)."""
+    from repro.index.adapters import sqrt2_grid
+
+    return sqrt2_grid(lo, hi)
 
 
 def profile_pgm_size_model(
     keys: np.ndarray, sample_eps: Sequence[int] = (16, 64, 256, 1024)
 ) -> Tuple[fit.PowerLawFit, float]:
-    """Build a few PGMs, fit M_idx(eps) = a*eps^-b + c (§V-B)."""
-    t0 = time.perf_counter()
-    sizes = [pgm.build_pgm(keys, e).size_bytes for e in sample_eps]
-    model = fit.fit_power_law(list(sample_eps), sizes)
-    return model, time.perf_counter() - t0
+    """Build a few PGMs, fit M_idx(eps) = a*eps^-b + c (deprecated shim over
+    the lazy :class:`repro.tuning.session.PowerLawSizeModel`)."""
+    _deprecated("profile_pgm_size_model")
+    from repro.tuning.session import PGMBuilder
+
+    model = PGMBuilder(keys, tuple(sample_eps)).size_model()
+    fitted = model.fitted
+    return fitted, model.fit_seconds
 
 
 def cam_tune_uniform_eps(
@@ -68,13 +71,12 @@ def cam_tune_uniform_eps(
     eps_grid: Sequence[int],
     sample_rate: float = 1.0,
 ) -> Tuple[int, Dict[int, cam.CamEstimate], float]:
-    """Shared grid tuner for any uniformly error-bounded family.
+    """Shared grid tuner for any uniformly error-bounded family (deprecated
+    shim; ``CostSession.estimate_grid`` semantics preserved exactly).
 
-    One batched ``estimate_grid`` call prices the entire eps grid; the
-    session itself drops infeasible candidates (no room for even one buffer
-    page) into ``GridResult.skipped`` and raises when none remain.
     Returns (best_eps, estimates, grid_seconds).
     """
+    _deprecated("cam_tune_uniform_eps")
     session = CostSession(system)
     cands = [
         GridCandidate(knob=int(e), eps=int(e), size_bytes=float(size_model(e)))
@@ -94,17 +96,22 @@ def cam_tune_pgm(
     sample_eps: Sequence[int] = (16, 64, 256, 1024),
     sample_rate: float = 1.0,
 ) -> PGMTuneResult:
+    """Eq. 15/16 eps tuning (deprecated shim over ``TuningSession.tune``)."""
+    _deprecated("cam_tune_pgm")
+    from repro.tuning.session import PGMBuilder, TuningSession
+
     t0 = time.perf_counter()
-    size_model, _ = profile_pgm_size_model(keys, sample_eps)
-    grid = tuple(eps_grid) if eps_grid is not None else default_eps_grid()
-    best_eps, estimates, _ = cam_tune_uniform_eps(
-        Workload.point(positions, n=len(keys)), size_model,
-        System(geom, memory_budget, policy), grid, sample_rate)
+    builder = PGMBuilder(keys, tuple(sample_eps))
+    grid = tuple(int(e) for e in eps_grid) if eps_grid is not None \
+        else default_eps_grid()
+    res = TuningSession(System(geom, memory_budget, policy)).tune(
+        builder, Workload.point(positions, n=len(keys)),
+        overrides={"eps": grid}, sample_rate=sample_rate)
     return PGMTuneResult(
-        best_eps=best_eps,
-        est_io=estimates[best_eps].io_per_query,
-        estimates=estimates,
-        size_model=size_model,
+        best_eps=int(res.best_knob),
+        est_io=res.est_io,
+        estimates=res.estimates,
+        size_model=res.size_model.fitted,
         tuning_seconds=time.perf_counter() - t0,
     )
 
@@ -116,35 +123,31 @@ def multicriteria_pgm_tune(
     sample_eps: Sequence[int] = (16, 64, 256, 1024),
     profile_lookups: int = 20_000,
 ) -> Tuple[int, float]:
-    """Cache-oblivious baseline: the multicriteria PGM optimizer's
-    time-minimization-given-space mode.
+    """Cache-oblivious multicriteria-PGM baseline (deprecated shim over
+    ``TuningSession.tune(tuner=MulticriteriaTuner(...))``).
 
-    Like the real tool, it PROFILES candidates: builds each feasible index
-    and measures lookup latency (traversal + last-mile search over the
-    in-memory array), picking the fastest one that fits the space budget.
-    Buffer interaction is invisible to it by construction.
     Returns (eps, tuning_seconds).
     """
+    _deprecated("multicriteria_pgm_tune")
+    from repro.tuning.session import (MulticriteriaTuner, PGMBuilder,
+                                      TuningSession)
+
     t0 = time.perf_counter()
-    size_model, _ = profile_pgm_size_model(keys, sample_eps)
-    grid = tuple(eps_grid) if eps_grid is not None else default_eps_grid()
-    feasible = [e for e in grid if float(size_model(e)) <= index_space_budget]
-    if not feasible:
-        feasible = [max(grid)]
-    if profile_lookups:
-        # The real tool builds each candidate and profiles lookups; we build
-        # (real cost, reflected in tuning time) and score with the
-        # deterministic in-memory cost model it optimizes: traversal levels
-        # + log2 last-mile steps.  Wall-clock scoring on a noisy shared CPU
-        # would just measure noise.
-        rng = np.random.default_rng(0)
-        probe = keys[rng.integers(0, len(keys), size=profile_lookups)]
-        best, best_c = None, np.inf
-        for eps in feasible[:10]:
-            idx = pgm.build_pgm(keys, eps)
-            idx.predict(probe)                       # the profiling pass
-            cpu = 1.5 * len(idx.levels) + np.log2(2 * eps + 1)
-            if cpu < best_c:
-                best, best_c = eps, cpu
-        return best, time.perf_counter() - t0
-    return min(feasible), time.perf_counter() - t0
+    builder = PGMBuilder(keys, tuple(sample_eps))
+    grid = tuple(int(e) for e in eps_grid) if eps_grid is not None \
+        else default_eps_grid()
+    if not profile_lookups:
+        # legacy profile-free mode: the most accurate candidate that fits
+        model = builder.size_model()
+        feasible = [e for e in grid
+                    if float(model(eps=e)) <= index_space_budget]
+        return min(feasible or [max(grid)]), time.perf_counter() - t0
+    # The baseline reserves half the (synthetic) budget as buffer, so a
+    # budget of 2x the index space reproduces the legacy index_space_budget.
+    session = TuningSession(System(cam.CamGeometry(),
+                                   2.0 * index_space_budget, "lru"))
+    res = session.tune(
+        builder, Workload.point(np.zeros(1, np.int64), n=len(keys)),
+        tuner=MulticriteriaTuner(profile_lookups=profile_lookups),
+        overrides={"eps": grid})
+    return int(res.best_knob), time.perf_counter() - t0

@@ -1,17 +1,16 @@
-"""CAM-based RMI tuning (paper §V-C) + CDFShop-style baseline.
+"""DEPRECATED shims: CAM-based RMI tuning (paper §V-C) + CDFShop baseline.
 
-RMI has no closed-form size/error model, so each branch-factor candidate is
-physically constructed (unavoidable, as the paper notes) — but CAM evaluates
-it analytically from the per-leaf error bounds, bypassing last-mile execution:
+Every entry point delegates to :class:`repro.tuning.session.TuningSession`
+with an :class:`~repro.tuning.session.RMIBuilder`.  Two behavioral upgrades
+ride along (selection unchanged on golden seeds):
 
-    E[DAC]   = sum_j w_j * (1 + lambda * eps_j / C_ipp)
-    Pr_req   = workload-weighted mixture of leaf-specific Eq. 12 patterns
-
-Leaf error bounds are quantized up to powers of two before the mixture
-estimate (see ``repro.index.adapters.quantize_eps``), bounding the number of
-LUT instantiations at ~log2(max_eps) while keeping every window conservative.
-The built candidates price through one ``CostSession.estimate_grid`` call, so
-all hit-rate fixed points solve in a single vmapped pass.
+* RMI's size model is EXACT and analytic (``rmi.rmi_size_bytes``), so
+  budget-infeasible branch factors are skipped *before construction* — the
+  legacy path built every candidate eagerly and let ``estimate_grid`` drop
+  the infeasible ones afterwards;
+* feasible branch grids profile through the batched mixed-eps kernel
+  (one grouped pass for the whole grid) instead of per-branch mixture
+  histograms.
 """
 from __future__ import annotations
 
@@ -23,13 +22,20 @@ from typing import Dict, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.core import cam
-from repro.core.session import CostSession, GridCandidate, System
+from repro.core.session import CostSession, System
 from repro.core.workload import Workload
 from repro.index import rmi
 from repro.index.adapters import RMIAdapter
 
 __all__ = ["RMITuneResult", "default_branch_grid", "cam_tune_rmi",
            "estimate_rmi_io", "cdfshop_tune_rmi"]
+
+
+def _deprecated(name: str) -> None:
+    warnings.warn(
+        f"repro.tuning.rmi_tuner.{name} is deprecated; use "
+        "repro.tuning.session.TuningSession with an RMIBuilder",
+        DeprecationWarning, stacklevel=3)
 
 
 @dataclasses.dataclass
@@ -42,11 +48,11 @@ class RMITuneResult:
 
 
 def default_branch_grid(lo: int = 2**6, hi: int = 2**16) -> Tuple[int, ...]:
-    b, grid = lo, []
-    while b <= hi:
-        grid.append(b)
-        b *= 2
-    return tuple(grid)
+    """Doubling branch grid (delegates to the one implementation behind the
+    adapters' knob metadata, ``repro.index.adapters.pow2_grid``)."""
+    from repro.index.adapters import pow2_grid
+
+    return pow2_grid(lo, hi)
 
 
 def estimate_rmi_io(
@@ -78,24 +84,26 @@ def cam_tune_rmi(
     branch_grid: Optional[Sequence[int]] = None,
     sample_rate: float = 1.0,
 ) -> RMITuneResult:
+    """Branch-factor tuning (deprecated shim over ``TuningSession.tune``).
+
+    ``RMITuneResult.indexes`` now contains only the candidates that were
+    actually constructed — i.e. the budget-FEASIBLE branches; the legacy
+    path built the infeasible ones too, for nothing.
+    """
+    _deprecated("cam_tune_rmi")
+    from repro.tuning.session import RMIBuilder, TuningSession
+
     t0 = time.perf_counter()
-    grid = tuple(branch_grid) if branch_grid is not None else default_branch_grid()
-    session = CostSession(System(geom, memory_budget, policy))
-    wl = Workload.point(positions, n=len(keys), query_keys=query_keys)
-    cands = []
-    indexes: Dict[int, rmi.RMIIndex] = {}
-    for branch in grid:
-        index = rmi.build_rmi(keys, branch)
-        indexes[branch] = index
-        cands.append(GridCandidate(knob=branch, size_bytes=index.size_bytes,
-                                   index=RMIAdapter(index)))
-    # estimate_grid drops budget-infeasible branches into res.skipped and
-    # raises when none remain.
-    res = session.estimate_grid(cands, wl, sample_rate=sample_rate)
-    best = int(res.best_knob)
-    return RMITuneResult(best, res.estimates[best].io_per_query,
-                         dict(res.estimates), indexes,
-                         time.perf_counter() - t0)
+    builder = RMIBuilder(keys)
+    grid = tuple(int(b) for b in branch_grid) if branch_grid is not None \
+        else default_branch_grid()
+    res = TuningSession(System(geom, memory_budget, policy)).tune(
+        builder, Workload.point(positions, n=len(keys),
+                                query_keys=query_keys),
+        overrides={"branch": grid}, sample_rate=sample_rate)
+    indexes = {b: adapter.index for b, adapter in builder.built.items()}
+    return RMITuneResult(int(res.best_knob), res.est_io, res.estimates,
+                         indexes, time.perf_counter() - t0)
 
 
 def cdfshop_tune_rmi(
@@ -104,31 +112,25 @@ def cdfshop_tune_rmi(
     branch_grid: Optional[Sequence[int]] = None,
     profile_lookups: int = 20_000,
 ) -> Tuple[int, float, Dict[int, rmi.RMIIndex]]:
-    """CDFShop-style baseline: CPU-optimal configuration, I/O-oblivious.
+    """CDFShop-style baseline (deprecated shim over
+    ``TuningSession.tune(tuner=CDFShopTuner(...))``).
 
-    Like the real tool, it builds each candidate AND measures lookup latency
-    (root route + leaf predict + last-mile search over the in-memory array),
-    picking the fastest within the index-space budget.  Buffer effects are
-    ignored by construction.  Returns (branch, tuning_seconds, built_indexes).
+    Returns (branch, tuning_seconds, built_indexes).  The legacy tool built
+    every candidate before checking its size; the size-model path skips the
+    infeasible builds with the selection unchanged.
     """
+    _deprecated("cdfshop_tune_rmi")
+    from repro.tuning.session import CDFShopTuner, RMIBuilder, TuningSession
+
     t0 = time.perf_counter()
-    grid = tuple(branch_grid) if branch_grid is not None else default_branch_grid()
-    best, best_cost = None, np.inf
-    built: Dict[int, rmi.RMIIndex] = {}
-    rng = np.random.default_rng(0)
-    probe = keys[rng.integers(0, len(keys), size=profile_lookups)]
-    for branch in grid:
-        index = rmi.build_rmi(keys, branch)
-        if index.size_bytes > index_space_budget:
-            continue
-        built[branch] = index
-        index.window(probe)                        # the profiling pass
-        # deterministic CPU score the real tool optimizes: model evals +
-        # log2 last-mile steps over the mean leaf error
-        cpu = 2.0 + float(np.log2(2.0 * index.leaf_eps.mean() + 1.0))
-        if cpu < best_cost:
-            best, best_cost = branch, cpu
-    if best is None:
-        best = grid[0]
-        built[best] = rmi.build_rmi(keys, best)
-    return best, time.perf_counter() - t0, built
+    builder = RMIBuilder(keys)
+    grid = tuple(int(b) for b in branch_grid) if branch_grid is not None \
+        else default_branch_grid()
+    session = TuningSession(System(cam.CamGeometry(),
+                                   2.0 * index_space_budget, "lru"))
+    res = session.tune(
+        builder, Workload.point(np.zeros(1, np.int64), n=len(keys)),
+        tuner=CDFShopTuner(profile_lookups=profile_lookups),
+        overrides={"branch": grid})
+    built = {b: adapter.index for b, adapter in builder.built.items()}
+    return int(res.best_knob), time.perf_counter() - t0, built

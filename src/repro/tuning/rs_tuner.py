@@ -1,17 +1,16 @@
-"""CAM-based RadixSpline tuning — the third index family under one API.
+"""DEPRECATED shims: CAM-based RadixSpline tuning.
 
-RadixSpline's greedy spline corridor is uniformly error-bounded exactly like
-PGM (|interp(k) - rank(k)| <= eps), so the corridor eps is a tunable knob and
-the WHOLE uniform-eps machinery applies unchanged: fit a power-law size model
-from a few sampled builds, then price the dense eps grid in one
-``CostSession.estimate_grid`` pass.  The seed repo shipped RadixSpline with
-no estimation or tuning path at all; this module closes that gap and is the
-concrete payoff of the index-agnostic redesign.
+Delegates to :class:`repro.tuning.session.TuningSession` with a
+:class:`~repro.tuning.session.RadixSplineBuilder`.  The legacy entry point
+pinned ``radix_bits`` and tuned the corridor eps alone; the session tunes
+the full 2-D (eps x radix_bits) plane — ``cam_tune_radixspline`` keeps the
+pinned-bits behavior for golden equivalence.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
+import warnings
 from typing import Dict, Optional, Sequence, Tuple
 
 import numpy as np
@@ -19,12 +18,18 @@ import numpy as np
 from repro.core import cam
 from repro.core.session import System
 from repro.core.workload import Workload
-from repro.index import radixspline
 from repro.tuning import fit
-from repro.tuning.pgm_tuner import cam_tune_uniform_eps, default_eps_grid
 
 __all__ = ["RSTuneResult", "profile_radixspline_size_model",
            "cam_tune_radixspline"]
+
+
+def _deprecated(name: str) -> None:
+    warnings.warn(
+        f"repro.tuning.rs_tuner.{name} is deprecated; use "
+        "repro.tuning.session.TuningSession with a RadixSplineBuilder "
+        "(which also tunes radix_bits jointly)",
+        DeprecationWarning, stacklevel=3)
 
 
 @dataclasses.dataclass
@@ -32,7 +37,7 @@ class RSTuneResult:
     best_eps: int
     est_io: float
     estimates: Dict[int, cam.CamEstimate]
-    size_model: fit.PowerLawFit
+    size_model: object          # callable knobs -> bytes
     tuning_seconds: float
 
 
@@ -40,12 +45,10 @@ def profile_radixspline_size_model(
     keys: np.ndarray, sample_eps: Sequence[int] = (16, 64, 256, 1024),
     radix_bits: int = 16,
 ) -> Tuple[fit.PowerLawFit, float]:
-    """Build a few RadixSplines, fit M_idx(eps) = a*eps^-b + c.
-
-    The knot count shrinks roughly as a power of the corridor width, so the
-    same fitting trick as PGM's applies; the radix table contributes the
-    constant term c.
-    """
+    """Fit M_idx(eps) at fixed ``radix_bits`` (deprecated shim over the 2-D
+    :class:`repro.tuning.session.RadixSplineSizeModel`)."""
+    _deprecated("profile_radixspline_size_model")
+    from repro.index import radixspline
     t0 = time.perf_counter()
     sizes = [radixspline.build_radixspline(keys, e, radix_bits).size_bytes
              for e in sample_eps]
@@ -64,17 +67,27 @@ def cam_tune_radixspline(
     sample_rate: float = 1.0,
     radix_bits: int = 16,
 ) -> RSTuneResult:
-    """Pick the corridor eps* minimizing Eq. 15/16 under the memory budget."""
+    """Corridor-eps tuning at pinned ``radix_bits`` (deprecated shim)."""
+    _deprecated("cam_tune_radixspline")
+    from repro.tuning.session import RadixSplineBuilder, TuningSession
+    from repro.tuning.pgm_tuner import default_eps_grid
+
     t0 = time.perf_counter()
-    size_model, _ = profile_radixspline_size_model(keys, sample_eps, radix_bits)
-    grid = tuple(eps_grid) if eps_grid is not None else default_eps_grid()
-    best_eps, estimates, _ = cam_tune_uniform_eps(
-        Workload.point(positions, n=len(keys)), size_model,
-        System(geom, memory_budget, policy), grid, sample_rate)
+    builder = RadixSplineBuilder(keys, tuple(sample_eps),
+                                 ref_radix_bits=radix_bits)
+    grid = tuple(int(e) for e in eps_grid) if eps_grid is not None \
+        else default_eps_grid()
+    res = TuningSession(System(geom, memory_budget, policy)).tune(
+        builder, Workload.point(positions, n=len(keys)),
+        overrides={"eps": grid, "radix_bits": radix_bits},
+        sample_rate=sample_rate)
+    # the pinned 2-D space keys estimates by (eps, radix_bits); re-key to
+    # the legacy eps-only shape
+    estimates = {knob[0]: est for knob, est in res.estimates.items()}
     return RSTuneResult(
-        best_eps=best_eps,
-        est_io=estimates[best_eps].io_per_query,
+        best_eps=int(res.best["eps"]),
+        est_io=res.est_io,
         estimates=estimates,
-        size_model=size_model,
+        size_model=res.size_model,
         tuning_seconds=time.perf_counter() - t0,
     )

@@ -25,9 +25,7 @@ from repro.data.datasets import make_dataset
 from repro.data.workloads import WorkloadSpec, point_workload, range_workload
 from repro.index.adapters import (ADAPTERS, PGMAdapter, RMIAdapter,
                                   RadixSplineAdapter)
-from repro.tuning.pgm_tuner import cam_tune_pgm
-from repro.tuning.rmi_tuner import cam_tune_rmi
-from repro.tuning.rs_tuner import cam_tune_radixspline
+from repro.tuning.session import TuningSession, builder_for
 
 GEOM = cam.CamGeometry()
 BUDGET = 3 << 20
@@ -466,22 +464,19 @@ def test_unsupported_workload_errors_are_typed(world):
             wl)
 
 
-@pytest.mark.parametrize("family,tune", [
-    ("pgm", lambda keys, qpos, qk: cam_tune_pgm(
-        keys, qpos, 2 << 20, GEOM, "lru", eps_grid=(16, 64, 256, 1024))),
-    ("rmi", lambda keys, qpos, qk: cam_tune_rmi(
-        keys, qpos, qk, 2 << 20, GEOM, "lru",
-        branch_grid=(256, 1024, 4096))),
-    ("radixspline", lambda keys, qpos, qk: cam_tune_radixspline(
-        keys, qpos, 2 << 20, GEOM, "lru", eps_grid=(16, 64, 256, 1024),
-        radix_bits=12)),
+@pytest.mark.parametrize("family,overrides", [
+    ("pgm", {"eps": (16, 64, 256, 1024)}),
+    ("rmi", {"branch": (256, 1024, 4096)}),
+    ("radixspline", {"eps": (16, 64, 256, 1024), "radix_bits": 12}),
 ])
-def test_grid_tuning_all_families(world, family, tune):
-    """All three families grid-tune through the same estimate_grid path."""
+def test_grid_tuning_all_families(world, family, overrides):
+    """All three families grid-tune through the same TuningSession path."""
     keys, qk, qpos = world
-    res = tune(keys, qpos, qk)
-    knob = res.best_eps if hasattr(res, "best_eps") else res.best_branch
-    assert knob in res.estimates
-    assert res.est_io == res.estimates[knob].io_per_query
+    session = TuningSession(System(GEOM, 2 << 20, "lru"))
+    res = session.tune(builder_for(family, keys),
+                       Workload.point(qpos, n=len(keys), query_keys=qk),
+                       overrides=overrides)
+    assert res.best_knob in res.estimates
+    assert res.est_io == res.estimates[res.best_knob].io_per_query
     assert all(e.io_per_query >= res.est_io - 1e-9
                for e in res.estimates.values())

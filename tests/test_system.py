@@ -18,7 +18,9 @@ from repro.data.workloads import WorkloadSpec, point_workload, join_outer_keys
 from repro.index.disk_layout import PageLayout
 from repro.index.pgm import build_pgm
 from repro.join.executors import hybrid_join, inlj
-from repro.tuning.pgm_tuner import cam_tune_pgm
+from repro.core.session import System
+from repro.core.workload import Workload
+from repro.tuning.session import PGMBuilder, TuningSession
 
 GEOM = cam.CamGeometry()
 LAYOUT = PageLayout()
@@ -51,7 +53,9 @@ def test_cam_tuning_end_to_end(world):
     keys, qk, qpos = world
     budget = int(1.2 * 2**20)
     grid = (8, 16, 32, 64, 128, 256, 512)
-    res = cam_tune_pgm(keys, qpos, budget, GEOM, "lru", eps_grid=grid)
+    res = TuningSession(System(GEOM, budget, "lru")).tune(
+        PGMBuilder(keys), Workload.point(qpos, n=len(keys)),
+        overrides={"eps": grid})
     actual = {}
     for eps in grid:
         idx = build_pgm(keys, eps)
@@ -62,7 +66,7 @@ def test_cam_tuning_end_to_end(world):
         actual[eps] = replay_windows(wlo // GEOM.c_ipp, whi // GEOM.c_ipp,
                                      cap, "lru").mean()
     best_actual = min(actual.values())
-    assert actual[res.best_eps] <= 1.15 * best_actual
+    assert actual[res.best_knob] <= 1.15 * best_actual
 
 
 def test_join_end_to_end(world):

@@ -11,9 +11,11 @@ from repro.index.pgm import build_pgm
 from repro.join.calibrate import calibrate
 from repro.join.executors import hybrid_join, inlj, point_only, range_only
 from repro.join.hybrid import JoinCostParams, partition_probes
+from repro.core.session import System
+from repro.core.workload import Workload
 from repro.tuning.fit import fit_power_law
-from repro.tuning.pgm_tuner import cam_tune_pgm, multicriteria_pgm_tune
-from repro.tuning.rmi_tuner import cam_tune_rmi, cdfshop_tune_rmi
+from repro.tuning.session import (CDFShopTuner, MulticriteriaTuner,
+                                  PGMBuilder, RMIBuilder, TuningSession)
 
 
 @pytest.fixture(scope="module")
@@ -34,11 +36,12 @@ def test_power_law_fit_recovers_params():
 
 def test_cam_tune_pgm_respects_budget(setup):
     keys, qk, qpos = setup
-    geom = cam.CamGeometry()
     M = 2 << 20
-    res = cam_tune_pgm(keys, qpos, M, geom, "lru", sample_rate=0.5)
-    assert res.best_eps in res.estimates
-    assert float(res.size_model(res.best_eps)) < M
+    session = TuningSession(System(cam.CamGeometry(), M, "lru"))
+    res = session.tune(PGMBuilder(keys), Workload.point(qpos, n=len(keys)),
+                       sample_rate=0.5)
+    assert res.best_knob in res.estimates
+    assert float(res.size_model(eps=res.best_knob)) < M
     # every evaluated candidate left room for at least one buffer page
     for e, est in res.estimates.items():
         assert est.capacity_pages >= 0
@@ -48,32 +51,42 @@ def test_cam_tune_pgm_ucurve_under_tight_budget(setup):
     """With a tight budget the cost curve must rise at BOTH extremes
     (tiny eps → index starves the buffer; huge eps → DAC dominates)."""
     keys, qk, qpos = setup
-    geom = cam.CamGeometry()
     M = int(1.2 * 2**20)
-    res = cam_tune_pgm(keys, qpos, M, geom, "lru",
-                       eps_grid=(8, 16, 32, 64, 128, 256, 512, 1024, 2048))
+    session = TuningSession(System(cam.CamGeometry(), M, "lru"))
+    res = session.tune(
+        PGMBuilder(keys), Workload.point(qpos, n=len(keys)),
+        overrides={"eps": (8, 16, 32, 64, 128, 256, 512, 1024, 2048)})
     ios = {e: est.io_per_query for e, est in res.estimates.items()}
     eps_sorted = sorted(ios)
-    best = res.best_eps
+    best = res.best_knob
     assert ios[eps_sorted[-1]] > ios[best]  # right arm rises (DAC dominates)
     assert best != eps_sorted[-1]
 
 
 def test_multicriteria_returns_smallest_feasible(setup):
-    keys, _, _ = setup
-    eps, _ = multicriteria_pgm_tune(keys, index_space_budget=64 << 10)
-    eps_loose, _ = multicriteria_pgm_tune(keys, index_space_budget=8 << 20)
-    assert eps_loose <= eps  # looser space → more accurate index
+    keys, _, qpos = setup
+    wl = Workload.point(qpos, n=len(keys))
+    builder = PGMBuilder(keys)
+    tight = TuningSession(System(cam.CamGeometry(), 2 * (64 << 10), "lru")) \
+        .tune(builder, wl, tuner=MulticriteriaTuner())
+    loose = TuningSession(System(cam.CamGeometry(), 2 * (8 << 20), "lru")) \
+        .tune(builder, wl, tuner=MulticriteriaTuner())
+    assert loose.best_knob <= tight.best_knob  # looser space → more accurate
 
 
 def test_cam_tune_rmi_runs(setup):
     keys, qk, qpos = setup
-    geom = cam.CamGeometry()
-    res = cam_tune_rmi(keys, qpos, qk, 2 << 20, geom, "lru",
-                       branch_grid=(256, 1024, 4096), sample_rate=0.5)
-    assert res.best_branch in (256, 1024, 4096)
-    b, _, built = cdfshop_tune_rmi(keys, 1 << 20, branch_grid=(256, 1024, 4096))
-    assert b in built
+    session = TuningSession(System(cam.CamGeometry(), 2 << 20, "lru"))
+    builder = RMIBuilder(keys)
+    res = session.tune(builder,
+                       Workload.point(qpos, n=len(keys), query_keys=qk),
+                       overrides={"branch": (256, 1024, 4096)},
+                       sample_rate=0.5)
+    assert res.best_knob in (256, 1024, 4096)
+    cdf = TuningSession(System(cam.CamGeometry(), 2 << 20, "lru")).tune(
+        builder, Workload.point(qpos, n=len(keys), query_keys=qk),
+        tuner=CDFShopTuner(), overrides={"branch": (256, 1024, 4096)})
+    assert cdf.best_knob in builder.built
 
 
 # ---------------------------------------------------------------------------

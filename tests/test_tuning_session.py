@@ -1,0 +1,469 @@
+"""TuningSession tests.
+
+* KnobSpace derivation from adapter metadata (grids, overrides, 2-D planes).
+* Golden equivalence: the deprecated per-family tuner shims reproduce the
+  session's chosen knobs and estimates exactly; the session itself matches a
+  hand-rolled estimate_grid argmin (the legacy tuner body).
+* Satellites: no construction for budget-infeasible RMI branches; the joint
+  (knob x split) search is ONE batched solve with zero per-split model calls
+  (structurally asserted); a seek-heavy device objective can flip the chosen
+  knob; jointly tuned (eps, radix_bits) beats eps-only RadixSpline tuning.
+* Tuner-choice-vs-exhaustive-replay oracle across 3 families x 3 policies.
+* Batched mixed-eps kernel == per-branch mixture histograms.
+"""
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.core import cache_models, cam, page_ref
+from repro.core.device_models import Affine
+from repro.core.replay import replay_windows
+from repro.core.session import CostSession, GridCandidate, System
+from repro.core.workload import Workload
+from repro.data.datasets import make_dataset
+from repro.data.workloads import WorkloadSpec, point_workload
+from repro.index import rmi as rmi_mod
+from repro.index.adapters import PGMAdapter, RMIAdapter, RadixSplineAdapter
+from repro.tuning.session import (CDFShopTuner, KnobSpace,
+                                  MulticriteriaTuner, PGMBuilder,
+                                  RadixSplineBuilder, RMIBuilder,
+                                  TableSizeModel, TuningSession, builder_for)
+
+GEOM = cam.CamGeometry()
+BUDGET = 1 << 20
+
+
+@pytest.fixture(scope="module")
+def world():
+    keys = make_dataset("books", 200_000, seed=1)
+    qk, qpos = point_workload(keys, 20_000, WorkloadSpec("w4", seed=3))
+    wl = Workload.point(qpos, n=len(keys), query_keys=qk)
+    return keys, qk, qpos, wl
+
+
+@pytest.fixture(scope="module")
+def builders(world):
+    keys = world[0]
+    return {"pgm": PGMBuilder(keys), "rmi": RMIBuilder(keys),
+            "radixspline": RadixSplineBuilder(keys)}
+
+
+# ---------------------------------------------------------------------------
+# KnobSpace
+# ---------------------------------------------------------------------------
+
+def test_knob_space_from_adapter_metadata():
+    space = KnobSpace.from_metadata(PGMAdapter.knob_metadata())
+    assert space.names == ("eps",)
+    assert len(space.points()) >= 20         # the dense default grid
+    assert space.key({"eps": 64}) == 64      # 1-D spaces key by bare value
+
+    rs = KnobSpace.from_metadata(RadixSplineAdapter.knob_metadata())
+    assert rs.names == ("eps", "radix_bits")   # radix_bits IS tunable now
+    pts = rs.points()
+    n_eps = len(rs.knobs[0].values)
+    n_bits = len(rs.knobs[1].values)
+    assert len(pts) == n_eps * n_bits          # cartesian product
+    assert rs.key(pts[0]) == (pts[0]["eps"], pts[0]["radix_bits"])
+
+
+def test_knob_space_overrides():
+    space = KnobSpace.from_metadata(RadixSplineAdapter.knob_metadata(),
+                                    overrides={"eps": (32, 128),
+                                               "radix_bits": 12})
+    assert [p for p in space.points()] == [
+        {"eps": 32, "radix_bits": 12}, {"eps": 128, "radix_bits": 12}]
+    with pytest.raises(ValueError, match="unknown knobs"):
+        KnobSpace.from_metadata(PGMAdapter.knob_metadata(),
+                                overrides={"nope": (1,)})
+
+
+def test_adapter_knobs_declare_grids(world):
+    keys = world[0]
+    rs = RadixSplineAdapter.build(keys[:20_000], 64, radix_bits=10)
+    meta = rs.knobs()
+    assert meta["radix_bits"]["tunable"] is True
+    assert meta["radix_bits"]["value"] == 10
+    assert 10 in meta["radix_bits"]["grid"]
+
+
+# ---------------------------------------------------------------------------
+# Golden equivalence: session == legacy estimate_grid argmin == shims
+# ---------------------------------------------------------------------------
+
+EPS_GRID = (16, 64, 256, 1024)
+
+
+def test_session_matches_legacy_grid_argmin_pgm(world, builders):
+    """The CAM tuner must pick exactly what the legacy tuner body (one
+    estimate_grid at each knob's full capacity) picks, with identical ios."""
+    keys, qk, qpos, wl = world
+    builder = builders["pgm"]
+    model = builder.size_model()
+    session = CostSession(System(GEOM, BUDGET, "lru"))
+    cands = [GridCandidate(knob=e, eps=e, size_bytes=float(model(eps=e)))
+             for e in EPS_GRID]
+    legacy = session.estimate_grid(cands, Workload.point(qpos, n=len(keys)))
+
+    res = TuningSession(System(GEOM, BUDGET, "lru")).tune(
+        builder, Workload.point(qpos, n=len(keys)),
+        overrides={"eps": EPS_GRID})
+    assert res.best_knob == legacy.best_knob
+    for e in legacy.estimates:
+        assert abs(res.estimates[e].io_per_query
+                   - legacy.estimates[e].io_per_query) < 1e-9, e
+        assert res.estimates[e].capacity_pages \
+            == legacy.estimates[e].capacity_pages
+
+
+@pytest.mark.parametrize("policy", ["lru", "fifo", "lfu"])
+def test_shims_reproduce_session_choices(world, builders, policy):
+    """Deprecated tuner entry points are thin delegates: same knob, same io."""
+    from repro.tuning.pgm_tuner import cam_tune_pgm
+    from repro.tuning.rmi_tuner import cam_tune_rmi
+    from repro.tuning.rs_tuner import cam_tune_radixspline
+
+    keys, qk, qpos, wl = world
+    ts = TuningSession(System(GEOM, BUDGET, policy))
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        legacy_pgm = cam_tune_pgm(keys, qpos, BUDGET, GEOM, policy,
+                                  eps_grid=EPS_GRID)
+        legacy_rmi = cam_tune_rmi(keys, qpos, qk, BUDGET, GEOM, policy,
+                                  branch_grid=(256, 1024, 4096))
+        legacy_rs = cam_tune_radixspline(keys, qpos, BUDGET, GEOM, policy,
+                                         eps_grid=EPS_GRID, radix_bits=10)
+    res_pgm = ts.tune(builders["pgm"], Workload.point(qpos, n=len(keys)),
+                      overrides={"eps": EPS_GRID})
+    assert legacy_pgm.best_eps == res_pgm.best_knob
+    assert abs(legacy_pgm.est_io - res_pgm.est_io) < 1e-9
+
+    res_rmi = ts.tune(builders["rmi"], wl,
+                      overrides={"branch": (256, 1024, 4096)})
+    assert legacy_rmi.best_branch == res_rmi.best_knob
+    assert abs(legacy_rmi.est_io - res_rmi.est_io) < 1e-9
+    assert legacy_rmi.best_branch in legacy_rmi.indexes
+
+    rs_builder = RadixSplineBuilder(keys, ref_radix_bits=10)
+    res_rs = ts.tune(rs_builder, Workload.point(qpos, n=len(keys)),
+                     overrides={"eps": EPS_GRID, "radix_bits": 10})
+    assert legacy_rs.best_eps == res_rs.best["eps"]
+    assert abs(legacy_rs.est_io - res_rs.est_io) < 1e-9
+
+
+def test_baseline_shims_match_session_strategies(world):
+    from repro.tuning.pgm_tuner import multicriteria_pgm_tune
+    from repro.tuning.rmi_tuner import cdfshop_tune_rmi
+
+    keys, qk, qpos, wl = world
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        eps, _ = multicriteria_pgm_tune(keys, index_space_budget=BUDGET // 2,
+                                        eps_grid=EPS_GRID)
+        branch, _, built = cdfshop_tune_rmi(keys, BUDGET // 2,
+                                            branch_grid=(256, 1024, 4096))
+    ts = TuningSession(System(GEOM, BUDGET, "lru"))
+    res = ts.tune(PGMBuilder(keys), wl, tuner=MulticriteriaTuner(),
+                  overrides={"eps": EPS_GRID})
+    assert res.best_knob == eps and res.tuner == "multicriteria"
+    res2 = ts.tune(RMIBuilder(keys), wl, tuner=CDFShopTuner(),
+                   overrides={"branch": (256, 1024, 4096)})
+    assert res2.best_knob == branch and res2.tuner == "cdfshop"
+    assert branch in built
+
+
+def test_multicriteria_fallback_picks_coarsest_regardless_of_grid_order(
+        world):
+    """Legacy fallback semantics: when NOTHING fits the reserved index
+    space, multicriteria takes the coarsest (smallest-footprint) candidate,
+    not a grid-position-dependent one."""
+    keys, _, _, wl = world
+    ts = TuningSession(System(GEOM, 2 * 1024, "lru"))   # 1 KiB index space
+    res = ts.tune(PGMBuilder(keys), wl, tuner=MulticriteriaTuner(),
+                  overrides={"eps": (16, 4, 8)})        # scrambled grid
+    assert res.best_knob == 16                          # max eps = coarsest
+
+
+def test_multicriteria_looser_space_not_less_accurate(world):
+    """Legacy property: a looser index-space budget never picks a LESS
+    accurate (larger-eps) configuration."""
+    keys, _, _, wl = world
+    ts_tight = TuningSession(System(GEOM, 2 * (64 << 10), "lru"))
+    ts_loose = TuningSession(System(GEOM, 2 * (8 << 20), "lru"))
+    tight = ts_tight.tune(PGMBuilder(keys), wl, tuner=MulticriteriaTuner())
+    loose = ts_loose.tune(PGMBuilder(keys), wl, tuner=MulticriteriaTuner())
+    assert loose.best["eps"] <= tight.best["eps"]
+
+
+# ---------------------------------------------------------------------------
+# Satellite: no construction for infeasible candidates
+# ---------------------------------------------------------------------------
+
+def test_infeasible_rmi_branch_never_built(world, monkeypatch):
+    keys, qk, qpos, wl = world
+    built = []
+    real_build = rmi_mod.build_rmi
+
+    def counting_build(k, branch):
+        built.append(branch)
+        return real_build(k, branch)
+
+    monkeypatch.setattr(rmi_mod, "build_rmi", counting_build)
+    # 256 KiB budget: branch 65536 needs ~1.5 MiB -> infeasible, branch
+    # 16384 needs ~393 KiB -> infeasible too; only 1024 fits.
+    ts = TuningSession(System(GEOM, 256 << 10, "lru"))
+    res = ts.tune(RMIBuilder(keys), wl,
+                  overrides={"branch": (1024, 16384, 65536)})
+    assert built == [1024]                       # ONLY the feasible branch
+    assert res.best_knob == 1024
+    skipped = {s.knob: s.reason for s in res.skipped}
+    assert set(skipped) == {16384, 65536}
+    assert "footprint leaves no buffer page" in skipped[65536]
+    # the analytic size model is exact, so the skip decision is sound
+    assert rmi_mod.rmi_size_bytes(65536) > 256 << 10
+
+
+# ---------------------------------------------------------------------------
+# Satellite: joint (knob x split) search — zero per-split model calls
+# ---------------------------------------------------------------------------
+
+def test_joint_split_search_is_one_batched_solve(world, monkeypatch):
+    keys, qk, qpos, wl = world
+    solves = []
+    real_grid = cache_models.hit_rate_grid
+
+    def counting_grid(*a, **kw):
+        solves.append(1)
+        return real_grid(*a, **kw)
+
+    def no_single_estimates(*a, **kw):
+        raise AssertionError("per-candidate estimate called during tuning")
+
+    def no_single_hit_rate(*a, **kw):
+        raise AssertionError("single hit-rate solve called during tuning")
+
+    monkeypatch.setattr(cache_models, "hit_rate_grid", counting_grid)
+    monkeypatch.setattr(CostSession, "estimate", no_single_estimates)
+    monkeypatch.setattr(cache_models, "hit_rate", no_single_hit_rate)
+
+    counts = {}
+    for label, splits in (("coarse", (0.5,)),
+                          ("fine", tuple(i / 16 for i in range(1, 16)))):
+        solves.clear()
+        ts = TuningSession(System(GEOM, BUDGET, "lru"), splits=splits)
+        res = ts.tune(PGMBuilder(keys), wl, overrides={"eps": EPS_GRID})
+        counts[label] = len(solves)
+        assert res.batched_solves == 1
+        # the table really enumerates the splits (knob rows grew)
+        assert all(len(v) >= 1 for v in res.table.values())
+    # 15 splits cost exactly as many cache-model solves as 1 split
+    assert counts["coarse"] == counts["fine"] == 1
+
+
+def test_custom_objective_runs_on_table_and_prefers_frugal_split(world):
+    keys, qk, qpos, wl = world
+
+    def frugal(point, e):
+        # penalize buffer bytes: io + lambda * buffer footprint
+        return e.io + 2e-6 * e.capacity_pages * GEOM.page_bytes
+
+    ts = TuningSession(System(GEOM, BUDGET, "lru"))
+    res = ts.tune(PGMBuilder(keys), wl, objective=frugal,
+                  overrides={"eps": (64, 256)})
+    max_split = res.table[res.best_knob][0].split
+    assert res.split < max_split              # picked a sub-maximal split
+    assert res.objective == "frugal"
+    assert res.batched_solves == 1
+
+
+# ---------------------------------------------------------------------------
+# Satellite: device-model-aware objective
+# ---------------------------------------------------------------------------
+
+def test_seconds_objective_can_flip_the_chosen_knob(world):
+    """Under a seek-heavy device (per-op setup dominating transfer), the
+    objective counts miss EVENTS, not pages — so it tolerates a larger eps
+    (bigger DAC, better hit rate) that the raw-io objective rejects."""
+    keys, qk, qpos, wl = world
+    grid = (8, 16, 32, 64, 128, 256, 512, 1024, 2048, 4096)
+    ts = TuningSession(System(GEOM, BUDGET, "lru", device=Affine(alpha=0.01)))
+    builder = PGMBuilder(keys)
+    res_io = ts.tune(builder, wl, objective="io", overrides={"eps": grid})
+    res_s = ts.tune(builder, wl, objective="seconds",
+                    overrides={"eps": grid})
+    assert res_io.best_knob != res_s.best_knob
+    # each winner is optimal under its own metric
+    t_io = {k: v[0] for k, v in res_io.table.items()}
+    assert res_s.objective_value <= t_io[res_io.best_knob].seconds + 1e-12
+    assert res_io.est_io <= res_s.table[res_s.best_knob][0].io + 1e-12
+
+
+# ---------------------------------------------------------------------------
+# Satellite: RadixSpline radix_bits tuned for real
+# ---------------------------------------------------------------------------
+
+def test_joint_radix_bits_beats_eps_only(world):
+    """Under a tight shared budget, freeing radix-table bytes buys buffer
+    pages: the jointly tuned (eps, radix_bits) strictly beats eps-only
+    tuning at the legacy fixed radix_bits=16."""
+    keys, qk, qpos, wl = world
+    budget = 640 << 10
+    ts = TuningSession(System(GEOM, budget, "lru"))
+    builder = RadixSplineBuilder(keys)
+    eps_grid = (32, 64, 128, 256, 512, 1024)
+    eps_only = ts.tune(builder, wl,
+                       overrides={"eps": eps_grid, "radix_bits": 16})
+    joint = ts.tune(builder, wl,
+                    overrides={"eps": eps_grid,
+                               "radix_bits": (8, 10, 12, 14, 16)})
+    assert joint.best["radix_bits"] < 16
+    assert joint.est_io < eps_only.est_io
+    assert joint.capacity_pages > eps_only.capacity_pages
+
+
+# ---------------------------------------------------------------------------
+# Tuner choice vs exhaustive replay (3 families x 3 policies)
+# ---------------------------------------------------------------------------
+
+_ORACLE_GRIDS = {
+    "pgm": {"eps": (16, 64, 256, 1024)},
+    "rmi": {"branch": (256, 1024, 4096)},
+    "radixspline": {"eps": (32, 128, 512), "radix_bits": (10, 16)},
+}
+
+
+@pytest.mark.parametrize("family", sorted(_ORACLE_GRIDS))
+@pytest.mark.parametrize("policy", ["lru", "fifo", "lfu"])
+def test_tuner_choice_vs_exhaustive_replay(world, builders, family, policy):
+    """The chosen knob's REPLAYED I/O must be within 10% of the replay-best
+    knob across the grid — the estimates may be approximate, the decision
+    must not be."""
+    keys, qk, qpos, wl = world
+    builder = builders[family]
+    ts = TuningSession(System(GEOM, BUDGET, policy))
+    res = ts.tune(builder, wl, overrides=_ORACLE_GRIDS[family],
+                  sample_rate=0.5)
+    replayed = {}
+    space = builder.knob_space(_ORACLE_GRIDS[family])
+    for point in space.points():
+        knob = space.key(point)
+        if knob not in res.estimates:
+            continue
+        adapter = builder.build(point)
+        cap = ts.system.capacity_for(adapter.size_bytes)
+        if cap < 1:
+            continue
+        plo, phi = adapter.probe_windows(qk, GEOM)
+        replayed[knob] = float(replay_windows(plo, phi, cap, policy).mean())
+    assert res.best_knob in replayed, (family, policy)
+    best_actual = min(replayed.values())
+    assert replayed[res.best_knob] <= 1.10 * best_actual, \
+        (family, policy, replayed, res.best_knob)
+
+
+# ---------------------------------------------------------------------------
+# Batched mixed-eps kernel
+# ---------------------------------------------------------------------------
+
+def test_mixed_eps_grid_kernel_matches_per_branch(world):
+    keys, qk, qpos, wl = world
+    num_pages = GEOM.num_pages(len(keys))
+    adapters = [RMIAdapter.build(keys, b) for b in (256, 1024, 4096)]
+    eps_rows = np.stack([a.point_ref_eps(wl, GEOM)[0] for a in adapters])
+    counts, totals = page_ref.point_page_refs_mixed_eps_grid(
+        qpos, eps_rows, GEOM.c_ipp, num_pages)
+    for i, a in enumerate(adapters):
+        ref_counts, ref_total = page_ref.point_page_refs_mixed_eps(
+            qpos, eps_rows[i], GEOM.c_ipp, num_pages)
+        assert np.abs(counts[i] - np.asarray(ref_counts)).max() < 5e-2
+        assert abs(totals[i] - float(ref_total)) < 1e-3 * float(ref_total)
+
+
+def test_mixed_eps_grid_kernel_chunked_path(world):
+    """Wide-window classes must chunk without changing the histograms."""
+    keys, qk, qpos, wl = world
+    num_pages = GEOM.num_pages(len(keys))
+    a = RMIAdapter.build(keys, 64)          # tiny branch -> huge leaf eps
+    eps_rows = a.point_ref_eps(wl, GEOM)[0][None, :]
+    full, t_full = page_ref.point_page_refs_mixed_eps_grid(
+        qpos, eps_rows, GEOM.c_ipp, num_pages)
+    old = page_ref._SCRATCH_ENTRIES
+    try:
+        page_ref._SCRATCH_ENTRIES = 4096
+        chunked, t_chunk = page_ref.point_page_refs_mixed_eps_grid(
+            qpos, eps_rows, GEOM.c_ipp, num_pages)
+    finally:
+        page_ref._SCRATCH_ENTRIES = old
+    np.testing.assert_allclose(chunked, full, atol=1e-4)
+    np.testing.assert_allclose(t_chunk, t_full, rtol=1e-9)
+
+
+def test_mixed_eps_grid_many_nonpow2_classes(world):
+    """Regression: >256 distinct NON-pow2 eps classes must not wrap the
+    class codes (uint8) and merge unrelated classes."""
+    keys, qk, qpos, wl = world
+    num_pages = GEOM.num_pages(len(keys))
+    rng = np.random.default_rng(7)
+    eps_rows = rng.choice(np.arange(3, 603, 2), size=(2, 2000))  # 300 classes
+    pos = qpos[:2000]
+    counts, totals = page_ref.point_page_refs_mixed_eps_grid(
+        pos, eps_rows, GEOM.c_ipp, num_pages)
+    for i in range(2):
+        ref_counts, ref_total = page_ref.point_page_refs_mixed_eps(
+            pos, eps_rows[i], GEOM.c_ipp, num_pages)
+        assert np.abs(counts[i] - np.asarray(ref_counts)).max() < 1e-2, i
+        assert abs(totals[i] - float(ref_total)) < 1e-3 * float(ref_total)
+
+
+@pytest.mark.parametrize("policy", ["lru", "lfu"])
+def test_estimate_grid_mixed_eps_flag_equivalent(world, policy):
+    """batch_mixed_eps=True (grouped kernel) == False (per-branch path)."""
+    keys, qk, qpos, wl = world
+    session = CostSession(System(GEOM, BUDGET, policy))
+    cands = [GridCandidate(knob=b, size_bytes=rmi_mod.rmi_size_bytes(b),
+                           index=RMIAdapter.build(keys, b))
+             for b in (256, 1024, 4096)]
+    batched = session.estimate_grid(cands, wl, batch_mixed_eps=True)
+    legacy = session.estimate_grid(cands, wl, batch_mixed_eps=False)
+    assert batched.best_knob == legacy.best_knob
+    for b in legacy.estimates:
+        assert abs(batched.estimates[b].hit_rate
+                   - legacy.estimates[b].hit_rate) < 1e-4, (b, policy)
+        assert batched.estimates[b].capacity_pages \
+            == legacy.estimates[b].capacity_pages
+
+
+# ---------------------------------------------------------------------------
+# Misc session behavior
+# ---------------------------------------------------------------------------
+
+def test_budget_override_and_builder_registry(world):
+    keys, qk, qpos, wl = world
+    ts = TuningSession(System(GEOM, 64 << 20, "lru"))
+    builder = builder_for("pgm", keys)
+    wide = ts.tune(builder, wl, overrides={"eps": EPS_GRID})
+    tight = ts.tune(builder, wl, budget=BUDGET, overrides={"eps": EPS_GRID})
+    assert tight.capacity_pages < wide.capacity_pages
+    with pytest.raises(ValueError, match="unknown index family"):
+        builder_for("btree", keys)
+
+
+def test_table_size_model_override(world):
+    keys, qk, qpos, wl = world
+    adapters = {e: PGMAdapter.build(keys, e) for e in (64, 256)}
+    exact = TableSizeModel({e: float(a.size_bytes)
+                            for e, a in adapters.items()})
+    ts = TuningSession(System(GEOM, BUDGET, "lru"))
+    res = ts.tune(PGMBuilder(keys), wl, overrides={"eps": (64, 256)},
+                  size_model=exact)
+    for e, a in adapters.items():
+        assert res.estimates[e].capacity_pages \
+            == ts.system.capacity_for(a.size_bytes)
+
+
+def test_infeasible_everything_raises(world):
+    keys, qk, qpos, wl = world
+    ts = TuningSession(System(GEOM, 8 << 10, "lru"))
+    with pytest.raises(ValueError, match="memory budget too small"):
+        ts.tune(PGMBuilder(keys), wl, overrides={"eps": (8,)})
