@@ -8,10 +8,11 @@
 # single-device CPU runner, then smokes the benchmarks covering the batched
 # estimation paths (point/range grid kernels AND the policy-aware sorted
 # grid), the tuning curve, the end-to-end tuner comparison (which records
-# the mixed-eps-kernel speedup to benchmarks/results/tuning_e2e.json), and
-# the join planner (incl. the join-tree budget-split section), and finally
-# runs EVERY example script in --smoke mode so the README quickstarts stay
-# executable.
+# the mixed-eps-kernel speedup to benchmarks/results/tuning_e2e.json),
+# the join planner (incl. the join-tree budget-split section), and the
+# serving drift loop (adaptive-vs-static gates recorded to
+# benchmarks/results/serving_drift.json), and finally runs EVERY example
+# script in --smoke mode so the README quickstarts stay executable.
 #
 # DeprecationWarning raised FROM repro.* code is an error: internal code
 # must not call the deprecated tuner/estimator shims.  The gate lives in
@@ -27,6 +28,7 @@ python -m pytest -x -q -m "not env_limited"
 python -m benchmarks.run --smoke --only estimate_grid pgm_tuning_curve
 python -m benchmarks.bench_tuning_e2e --smoke
 python -m benchmarks.bench_join --smoke
+python -m benchmarks.bench_serving_drift --smoke
 
 # every example must exit 0 at CI size (each accepts --smoke)
 for ex in examples/*.py; do

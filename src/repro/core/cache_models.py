@@ -187,7 +187,7 @@ def hit_rate_compulsory(total_requests, distinct_pages) -> jnp.ndarray:
 
 @jax.jit
 def _sorted_scan_misses_freq(coverage: jnp.ndarray, capacity,
-                             solo_repeats) -> jnp.ndarray:
+                             pinned_retouches) -> jnp.ndarray:
     """Frequency-aware sorted-scan miss count from the coverage histogram.
 
     A frequency-based cache breaks the recency premise of Theorem III.1 in a
@@ -199,26 +199,30 @@ def _sorted_scan_misses_freq(coverage: jnp.ndarray, capacity,
     * steady-state retention — the converged cache keeps the ``C`` pages
       with the highest coverage (Eq. 9 applied to the coverage histogram),
       whose references hit once resident: ``miss <= R - topC_mass``;
-    * frontier survival — a reference that immediately re-touches the
-      previous probe's single page cannot be separated from it by an
-      insertion, so it hits under ANY eviction state:
-      ``miss <= R - solo_repeats``.
+    * pressure-pinned re-touches — the least fixed point of the worst-case
+      eviction-pressure recursion (every non-surviving re-reference assumed
+      to re-insert and evict).  For sorted streams this collapses to the
+      window-junction count ``pinned = sum(lo[i+1] == hi[i])`` (see
+      ``page_ref.sorted_workload_stats``): those references hit under ANY
+      eviction state, so ``miss <= R - pinned``.
 
     The model takes the tighter bound and clamps to ``[N, R]`` (compulsory
-    floor, thrash ceiling).  Replay-validated to q-error < 2 against
+    floor, thrash ceiling).  Replay-validated against
     ``repro.core.replay.LFUBuffer`` across PGM / RMI / RadixSpline streams
-    at tuning-relevant capacities; in strongly recency-like streams (narrow
-    non-repeating windows) at small capacity it stays a conservative
-    over-estimate — LFU replay there beats both closed-form hit sources.
+    at tuning-relevant capacities (q-error < 2), and — via the pinned
+    correction — on strongly recency-like narrow-window streams at small
+    capacities, where the junction bound is tight (q-error ~ 1.0-1.1 on
+    width-2 sliding windows and dense jittered width-1/2 streams that the
+    width-1 "solo" statistic under-counted by ~2x).
     """
     cov = jnp.asarray(coverage, jnp.float32)
     prefix = jnp.cumsum(-jnp.sort(-cov))
     return _freq_misses_from_prefix(
         prefix, jnp.sum(cov), jnp.sum(cov > 0).astype(jnp.float32),
-        capacity, solo_repeats)
+        capacity, pinned_retouches)
 
 
-def _freq_misses_from_prefix(prefix, r, n, capacity, solo_repeats):
+def _freq_misses_from_prefix(prefix, r, n, capacity, pinned_retouches):
     """Frequency-aware miss count given the descending-coverage prefix sums
     (``prefix[k-1]`` = mass of the k most-covered pages) — the O(P log P)
     sort is hoisted here so a knob grid over one shared stream pays it
@@ -226,8 +230,8 @@ def _freq_misses_from_prefix(prefix, r, n, capacity, solo_repeats):
     cap = jnp.clip(jnp.asarray(capacity, jnp.int32), 0, prefix.shape[0])
     topc = jnp.where(cap > 0, prefix[jnp.maximum(cap - 1, 0)], 0.0)
     steady = r - topc
-    frontier = r - jnp.asarray(solo_repeats, jnp.float32)
-    return jnp.clip(jnp.minimum(steady, frontier), n, r)
+    pinned = r - jnp.asarray(pinned_retouches, jnp.float32)
+    return jnp.clip(jnp.minimum(steady, pinned), n, r)
 
 
 def sorted_scan_misses(
@@ -237,7 +241,7 @@ def sorted_scan_misses(
     total_refs: float,
     distinct_pages: float,
     coverage: Optional[jnp.ndarray] = None,
-    solo_repeats: float = 0.0,
+    pinned_retouches: float = 0.0,
     min_capacity: int = 1,
 ) -> float:
     """Expected physical misses of a sorted one-pass probe stream.
@@ -247,8 +251,11 @@ def sorted_scan_misses(
     point-probe pricing):
 
     * ``capacity < min_capacity`` — the buffer cannot hold one probe window
-      (Theorem III.1's capacity premise fails): every logical reference
-      misses, ``miss = R`` (thrash regime);
+      (Theorem III.1's capacity premise fails): every reference except the
+      pressure-pinned window-junction re-touches misses,
+      ``miss = R - pinned`` (thrash regime — junction re-touches survive
+      even a capacity-1 buffer because no insertion separates them from the
+      previous reference);
     * recency policies, ``capacity >= N``, or no coverage histogram — the
       compulsory closed form, ``miss = N`` (Theorem III.1: one compulsory
       miss per distinct page);
@@ -260,12 +267,12 @@ def sorted_scan_misses(
     if r <= 0.0:
         return 0.0
     if capacity is not None and capacity < min_capacity:
-        return r
+        return min(max(r - float(pinned_retouches), n), r)
     if (policy in RECENCY_POLICIES or coverage is None
             or capacity is None or capacity >= n):
         return n
     return float(_sorted_scan_misses_freq(jnp.asarray(coverage), capacity,
-                                          solo_repeats))
+                                          pinned_retouches))
 
 
 def sorted_scan_hit_rate(
@@ -275,7 +282,7 @@ def sorted_scan_hit_rate(
     total_refs: float,
     distinct_pages: float,
     coverage: Optional[jnp.ndarray] = None,
-    solo_repeats: float = 0.0,
+    pinned_retouches: float = 0.0,
     min_capacity: int = 1,
 ) -> float:
     """Hit rate of a sorted probe stream: ``(R - miss) / R``.
@@ -289,7 +296,7 @@ def sorted_scan_hit_rate(
         return 0.0
     miss = sorted_scan_misses(
         policy, capacity, total_refs=r, distinct_pages=distinct_pages,
-        coverage=coverage, solo_repeats=solo_repeats,
+        coverage=coverage, pinned_retouches=pinned_retouches,
         min_capacity=min_capacity)
     return (r - miss) / max(r, 1.0)
 
@@ -300,7 +307,7 @@ def sorted_scan_hit_rate_grid(
     coverage: jnp.ndarray,
     total_refs: jnp.ndarray,
     distinct_pages: jnp.ndarray,
-    solo_repeats: jnp.ndarray,
+    pinned_retouches: jnp.ndarray,
     capacities: jnp.ndarray,
     min_capacities: jnp.ndarray,
 ) -> jnp.ndarray:
@@ -320,7 +327,8 @@ def sorted_scan_hit_rate_grid(
                       index-backed candidates contribute distinct streams.
       total_refs:     (K,) request volumes R.
       distinct_pages: (K,) distinct page counts N.
-      solo_repeats:   (K,) immediate solo re-reference counts.
+      pinned_retouches: (K,) pressure-pinned window-junction re-touch
+                      counts (see ``page_ref.sorted_workload_stats``).
       capacities:     (K,) buffer capacities in pages.
       min_capacities: (K,) Theorem III.1 capacity premises.
 
@@ -334,16 +342,18 @@ def sorted_scan_hit_rate_grid(
         miss = n
     else:
         cov = jnp.asarray(coverage, jnp.float32)
-        solo = jnp.asarray(solo_repeats, jnp.float32)
+        pinned = jnp.asarray(pinned_retouches, jnp.float32)
         if cov.ndim == 1:
             prefix = jnp.cumsum(-jnp.sort(-cov))
             freq = jax.vmap(
                 lambda rr, nn, cc, ss: _freq_misses_from_prefix(
-                    prefix, rr, nn, cc, ss))(r, n, cap, solo)
+                    prefix, rr, nn, cc, ss))(r, n, cap, pinned)
         else:
-            freq = jax.vmap(_sorted_scan_misses_freq)(cov, cap, solo)
+            freq = jax.vmap(_sorted_scan_misses_freq)(cov, cap, pinned)
         miss = jnp.where(cap >= n, n, freq)
-    miss = jnp.where(cap < jnp.asarray(min_capacities, jnp.float32), r, miss)
+    thrash = jnp.clip(r - jnp.asarray(pinned_retouches, jnp.float32), n, r)
+    miss = jnp.where(cap < jnp.asarray(min_capacities, jnp.float32),
+                     thrash, miss)
     return jnp.where(r > 0, (r - miss) / jnp.maximum(r, 1.0), 0.0)
 
 
@@ -354,7 +364,7 @@ def sorted_scan_miss_curve(
     total_refs: float,
     distinct_pages: float,
     coverage: Optional[jnp.ndarray] = None,
-    solo_repeats: float = 0.0,
+    pinned_retouches: float = 0.0,
     min_capacity: int = 1,
 ) -> jnp.ndarray:
     """Misses of ONE sorted stream as a function of buffer capacity.
@@ -379,13 +389,14 @@ def sorted_scan_miss_curve(
         ones = jnp.ones_like(caps)
         h = sorted_scan_hit_rate_grid(
             policy, jnp.asarray(coverage, jnp.float32), r * ones,
-            float(distinct_pages) * ones, float(solo_repeats) * ones,
+            float(distinct_pages) * ones, float(pinned_retouches) * ones,
             caps, float(min_capacity) * ones)
         return (1.0 - h) * r
     # Recency policies (and coverage-less profiles) price through the
     # compulsory closed form; only the thrash edge depends on capacity.
     miss = jnp.full_like(caps, float(distinct_pages))
-    return jnp.where(caps < float(min_capacity), r, miss)
+    thrash = min(max(r - float(pinned_retouches), float(distinct_pages)), r)
+    return jnp.where(caps < float(min_capacity), thrash, miss)
 
 
 def hit_rate_curve(
@@ -475,7 +486,7 @@ def hit_rate_grid(
     sorted_coverage: Optional[jnp.ndarray] = None,
     sorted_refs: Optional[jnp.ndarray] = None,
     sorted_distinct: Optional[jnp.ndarray] = None,
-    sorted_solo: Optional[jnp.ndarray] = None,
+    sorted_pinned: Optional[jnp.ndarray] = None,
     sorted_min_caps: Optional[jnp.ndarray] = None,
     sorted_full_refs: Optional[jnp.ndarray] = None,
 ):
@@ -497,7 +508,7 @@ def hit_rate_grid(
       sample_refs: (K,) sample request mass (normalizer of Pr_req).
       full_refs:   (K,) full-workload request volume R (compulsory branch).
       capacities:  (K,) buffer capacities in pages (may be <= 0).
-      sorted_coverage / sorted_refs / sorted_distinct / sorted_solo /
+      sorted_coverage / sorted_refs / sorted_distinct / sorted_pinned /
       sorted_min_caps: per-candidate sorted-stream statistics, shapes as in
         :func:`sorted_scan_hit_rate_grid`.
       sorted_full_refs: (K,) full-workload sorted request volume (CAM-x
@@ -526,7 +537,7 @@ def hit_rate_grid(
     if sorted_coverage is None:
         return h, n_distinct
     h_s = sorted_scan_hit_rate_grid(
-        policy, sorted_coverage, sorted_refs, sorted_distinct, sorted_solo,
+        policy, sorted_coverage, sorted_refs, sorted_distinct, sorted_pinned,
         capacities, sorted_min_caps)
     s_full = jnp.asarray(sorted_full_refs, jnp.float32)
     total_full = full_refs + s_full

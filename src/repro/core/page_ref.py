@@ -413,7 +413,7 @@ def sorted_workload_rn(
 def sorted_workload_stats(
     page_lo: jnp.ndarray, page_hi: jnp.ndarray, num_pages: int
 ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray]:
-    """(R, N, coverage, solo_repeats) for a sorted probe stream.
+    """(R, N, coverage, pinned_retouches) for a sorted probe stream.
 
     Deliberately NOT jitted: the join planner calls it with
     outer-relation-sized arrays whose shapes vary call to call, and a
@@ -428,11 +428,16 @@ def sorted_workload_stats(
       probe windows covering page p`` (difference array + prefix sum, same
       shape as the Eq. 13/14 histograms, so it can also join a mixed
       workload's request distribution);
-    * ``solo_repeats`` — the number of references that immediately re-touch
-      the previous probe's single page (consecutive identical width-1
-      windows).  These hits survive *any* eviction state — including an
-      LFU buffer pinned by stale high-frequency pages — because no
-      insertion can occur between the two references.
+    * ``pinned_retouches`` — references that survive eviction pressure under
+      ANY policy state: a reference to the page the immediately preceding
+      reference touched cannot be separated from it by an insertion, so no
+      eviction can occur in between.  For a sorted stream the worst-case
+      residency recursion (every other re-reference assumed to re-insert)
+      collapses — the proven-resident set between insertions is always the
+      single most recent page — so its least fixed point is exactly the
+      window-junction count ``sum(lo[i+1] == hi[i])``.  This subsumes the
+      width-1 repeat ("solo") count and is the pressure correction used by
+      ``cache_models.sorted_scan_misses``.
     """
     lo = jnp.asarray(page_lo, jnp.int32)
     hi = jnp.asarray(page_hi, jnp.int32)
@@ -442,6 +447,5 @@ def sorted_workload_stats(
     coverage = jnp.cumsum(diff)[:num_pages]
     r_total = jnp.sum((hi - lo + 1).astype(jnp.float32))
     n_distinct = jnp.sum(coverage > 0).astype(jnp.float32)
-    w1 = lo == hi
-    solo = jnp.sum((w1[1:] & w1[:-1] & (lo[1:] == lo[:-1])).astype(jnp.float32))
-    return r_total, n_distinct, coverage, solo
+    pinned = jnp.sum((lo[1:] == hi[:-1]).astype(jnp.float32))
+    return r_total, n_distinct, coverage, pinned

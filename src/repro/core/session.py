@@ -171,14 +171,14 @@ class PlanCost:
 class SortedScanPart:
     """Sorted-stream statistics feeding the ``cache_models.sorted_scan``
     family: Theorem III.1's (R, N) plus the window-coverage histogram and
-    solo-repeat count the frequency-aware closed form needs (see
-    ``page_ref.sorted_workload_stats``)."""
+    pressure-pinned re-touch count the frequency-aware closed form needs
+    (see ``page_ref.sorted_workload_stats``)."""
 
     total_refs: float
     distinct_pages: float
     min_capacity: int = 1                 # Thm III.1 capacity premise
     coverage: Optional[jnp.ndarray] = None
-    solo_repeats: float = 0.0
+    pinned_retouches: float = 0.0
 
 
 @dataclasses.dataclass
@@ -229,7 +229,7 @@ def sorted_part_for(workload: Workload, eps: int, geom: CamGeometry,
         jnp.asarray(workload.positions, jnp.int32),
         jnp.asarray(workload.hi_positions, jnp.int32),
         geom.c_ipp, num_pages)
-    r_total, n_distinct, coverage, solo = page_ref.sorted_workload_stats(
+    r_total, n_distinct, coverage, pinned = page_ref.sorted_workload_stats(
         plo, phi, num_pages)
     if eps > 0:
         min_cap = 1 + int(np.ceil(2 * eps / geom.c_ipp))
@@ -239,7 +239,8 @@ def sorted_part_for(workload: Workload, eps: int, geom: CamGeometry,
         min_cap = 1
     return SortedScanPart(
         total_refs=float(r_total), distinct_pages=float(n_distinct),
-        min_capacity=min_cap, coverage=coverage, solo_repeats=float(solo))
+        min_capacity=min_cap, coverage=coverage,
+        pinned_retouches=float(pinned))
 
 
 def sorted_stream_profile(workload: Workload, geom: CamGeometry,
@@ -291,7 +292,7 @@ def _merge_sorted_parts(parts: Sequence[SortedScanPart]) -> SortedScanPart:
         distinct_pages=float(jnp.sum(coverage > 0)),
         min_capacity=max(p.min_capacity for p in parts),
         coverage=coverage,
-        solo_repeats=sum(p.solo_repeats for p in parts))
+        pinned_retouches=sum(p.pinned_retouches for p in parts))
 
 
 def uniform_eps_profile(workload: Workload, eps: int, geom: CamGeometry,
@@ -427,6 +428,38 @@ class GridProfiles:
     def sorted_refs(self, i: int) -> float:
         sp = self.sparts[i]
         return sp.total_refs if sp is not None else 0.0
+
+    @classmethod
+    def from_accumulated(cls, system, knobs, counts, totals, dac_mass,
+                         sizes, sparts, n_queries,
+                         skipped: Sequence["SkippedCandidate"] = ()
+                         ) -> "GridProfiles":
+        """Assemble profiles from incrementally accumulated sums.
+
+        The serving-sketch entry point: everything a profile row holds is a
+        per-query-mass SUM over the workload (histogram counts, request
+        mass R, DAC access mass, sorted coverage), so a sliding-window
+        sketch can maintain those sums per chunk and re-derive the exact
+        profile of the whole window without replaying it — ``dac_mass`` is
+        the accumulated ``E[DAC] * n_queries`` mass and is normalized back
+        to a per-query expectation here.  ``scale`` is 1.0 by construction:
+        the sketch sees every event, sampling (CAM-x) happens upstream of
+        ingestion if at all.
+        """
+        sizes_arr = np.asarray(sizes, np.float64)
+        nq = max(int(n_queries), 1)
+        return cls(
+            knobs=tuple(knobs),
+            counts=jnp.asarray(counts, jnp.float32),
+            totals=np.asarray(totals, np.float64),
+            dacs=np.asarray(dac_mass, np.float64) / nq,
+            sizes=sizes_arr,
+            caps=np.asarray([system.capacity_for(s) for s in sizes_arr],
+                            np.int64),
+            sparts=tuple(sparts),
+            skipped=tuple(skipped),
+            scale=1.0,
+            n_queries=int(n_queries))
 
 
 @dataclasses.dataclass
@@ -583,8 +616,8 @@ class CostSession:
                 sorted_refs=s_refs,
                 sorted_distinct=jnp.asarray(
                     [sp.distinct_pages for sp in sps], jnp.float32),
-                sorted_solo=jnp.asarray(
-                    [sp.solo_repeats for sp in sps], jnp.float32),
+                sorted_pinned=jnp.asarray(
+                    [sp.pinned_retouches for sp in sps], jnp.float32),
                 sorted_min_caps=jnp.asarray(
                     [sp.min_capacity for sp in sps], jnp.float32),
                 sorted_full_refs=s_refs * profiles.scale)
@@ -754,7 +787,7 @@ class CostSession:
         point/range banded-matmul kernels).
 
         The probe windows of a sorted stream do not depend on eps, so ONE
-        shared (R, N, coverage, solo) profile serves every uniform-eps
+        shared (R, N, coverage, pinned) profile serves every uniform-eps
         candidate — only the capacity and the Theorem III.1 premise vary —
         and all candidates solve through one call of
         ``cache_models.sorted_scan_hit_rate_grid``.
@@ -802,7 +835,7 @@ class CostSession:
                             jnp.float32),
                 jnp.asarray([sp.distinct_pages for _, sp, _ in batched],
                             jnp.float32),
-                jnp.asarray([sp.solo_repeats for _, sp, _ in batched],
+                jnp.asarray([sp.pinned_retouches for _, sp, _ in batched],
                             jnp.float32),
                 jnp.asarray([cap for _, _, cap in batched], jnp.float32),
                 jnp.asarray([sp.min_capacity for _, sp, _ in batched],
@@ -919,7 +952,8 @@ class CostSession:
             h = cache_models.sorted_scan_hit_rate(
                 self.system.policy, cap, total_refs=sp.total_refs,
                 distinct_pages=sp.distinct_pages, coverage=sp.coverage,
-                solo_repeats=sp.solo_repeats, min_capacity=sp.min_capacity)
+                pinned_retouches=sp.pinned_retouches,
+                min_capacity=sp.min_capacity)
             io = (1.0 - h) * prof.expected_dac
             return CamEstimate(io, h, prof.expected_dac, cap,
                                sp.total_refs, sp.distinct_pages,
@@ -944,7 +978,8 @@ class CostSession:
             h_s = cache_models.sorted_scan_hit_rate(
                 self.system.policy, cap, total_refs=sp.total_refs,
                 distinct_pages=sp.distinct_pages, coverage=sp.coverage,
-                solo_repeats=sp.solo_repeats, min_capacity=sp.min_capacity)
+                pinned_retouches=sp.pinned_retouches,
+                min_capacity=sp.min_capacity)
             s_full = sp.total_refs * wl.scale
             total_full = full_refs + s_full
             miss = (1.0 - h) * full_refs + (1.0 - h_s) * s_full

@@ -108,13 +108,69 @@ class Workload:
 
     @classmethod
     def mixed(cls, *parts: "Workload") -> "Workload":
-        """Composite workload; page-reference histograms add across parts."""
+        """Composite workload; page-reference histograms add across parts.
+
+        Nested mixed parts are flattened (depth-first, order preserved), so
+        trace-compiled batches — themselves mixed — compose without manual
+        flattening: ``mixed(mixed(a, b), c).parts == (a, b, c)``.
+        """
         if not parts:
             raise ValueError("mixed workload needs at least one part")
-        ns = {p.n for p in parts if p.n is not None}
+        flat: list = []
+        for p in parts:
+            flat.extend(p.parts if p.kind == MIXED else (p,))
+        ns = {p.n for p in flat if p.n is not None}
         if len(ns) > 1:
             raise ValueError(f"mixed parts disagree on key-file size: {ns}")
-        return cls(MIXED, parts=tuple(parts), n=ns.pop() if ns else None)
+        return cls(MIXED, parts=tuple(flat), n=ns.pop() if ns else None)
+
+    @classmethod
+    def concat(cls, *workloads: "Workload") -> "Workload":
+        """Incremental construction: append workloads into one composite.
+
+        Mixed inputs are flattened, then same-kind runs concatenate into a
+        single part per kind (encounter order; array concatenation preserves
+        each input's internal probe order, which the sorted closed form
+        needs).  Returns the single merged part when only one kind appears —
+        so a stream of trace-batch workloads folds into a compact profile
+        input instead of an ever-growing parts tuple.
+        """
+        flat: list = []
+        for w in workloads:
+            flat.extend(w.parts if w.kind == MIXED else (w,))
+        if not flat:
+            raise ValueError("concat needs at least one workload")
+        by_kind: dict = {}
+        for p in flat:
+            by_kind.setdefault(p.kind, []).append(p)
+
+        def _cat(arrays):
+            got = [a for a in arrays if a is not None]
+            if not got:
+                return None
+            if len(got) != len(arrays):      # keys known only for some parts
+                return None
+            return np.concatenate(got)
+
+        merged = []
+        for kind, group in by_kind.items():
+            if len(group) == 1:
+                merged.append(group[0])
+                continue
+            ns = {p.n for p in group if p.n is not None}
+            if len(ns) > 1:
+                raise ValueError(f"concat parts disagree on key-file size: {ns}")
+            base = sum(p.base_queries if p.base_queries is not None
+                       else p.n_queries for p in group)
+            merged.append(cls(
+                kind,
+                positions=_cat([p.positions for p in group]),
+                hi_positions=_cat([p.hi_positions for p in group]),
+                query_keys=_cat([p.query_keys for p in group]),
+                n=ns.pop() if ns else None,
+                base_queries=base,
+            ))
+        return merged[0] if len(merged) == 1 else cls.mixed(*merged)
 
     # ------------------------------------------------------------- properties
     @property

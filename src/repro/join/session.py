@@ -315,7 +315,7 @@ class JoinSession:
         refs = float(widths.sum())
         typical_w = int(np.quantile(widths, 0.99)) if widths.size else 0
         min_cap = typical_w + 1
-        r, nd, coverage, solo = page_ref.sorted_workload_stats(
+        r, nd, coverage, pinned = page_ref.sorted_workload_stats(
             jnp.asarray(plo), jnp.asarray(phi), self.num_pages)
         nd = float(nd)
         # ONE vmapped solve: policy-aware sorted-stream misses at every
@@ -324,7 +324,8 @@ class JoinSession:
         miss_curve = np.asarray(cache_models.sorted_scan_miss_curve(
             self.system.policy, caps, total_refs=float(r),
             distinct_pages=nd, coverage=coverage,
-            solo_repeats=float(solo), min_capacity=min_cap), np.float64)
+            pinned_retouches=float(pinned), min_capacity=min_cap),
+            np.float64)
 
         seconds: Dict[str, np.ndarray] = {}
         ios: Dict[str, np.ndarray] = {}
@@ -498,14 +499,15 @@ class JoinSession:
         if self.system.policy in cache_models.RECENCY_POLICIES \
                 or plo.shape[0] == 0:
             return 1.0
-        r, nd, coverage, solo = page_ref.sorted_workload_stats(
+        r, nd, coverage, pinned = page_ref.sorted_workload_stats(
             jnp.asarray(plo), jnp.asarray(phi), self.num_pages)
         r, nd = float(r), float(nd)
         if nd == 0 or r <= 0:
             return 1.0
         miss = cache_models.sorted_scan_misses(
             self.system.policy, cap, total_refs=r,
-            distinct_pages=nd, coverage=coverage, solo_repeats=float(solo))
+            distinct_pages=nd, coverage=coverage,
+            pinned_retouches=float(pinned))
         return max(1.0, miss / nd)
 
     def _session_at(self, capacity: Optional[int]) -> CostSession:

@@ -544,6 +544,41 @@ class CamTuner:
         cands = [builder.candidate(pt, size) for pt, size in feasible]
         profiles = cost.grid_profiles(cands, workload, sample_rate, seed)
         skipped.extend(profiles.skipped)
+        points = {space.key(pt): pt for pt, _size in feasible}
+        return self.tune_profiles(
+            session, builder, space, profiles, points=points,
+            objective=objective, size_model=size_model,
+            skipped=skipped, t0=t0)
+
+    def tune_profiles(self, session, builder, space, profiles, *,
+                      points: Optional[Dict[object, Dict[str, object]]] = None,
+                      objective="io", size_model=None,
+                      skipped: Sequence[SkippedCandidate] = (),
+                      t0: Optional[float] = None) -> TuneResult:
+        """Joint (knob x split) search on PRECOMPUTED profiles.
+
+        The solve-and-argmin half of :meth:`tune`, callable with any
+        capacity-independent :class:`GridProfiles` — in particular one
+        assembled incrementally from serving sketches
+        (``GridProfiles.from_accumulated``).  Runs NO profiling pass: the
+        only model call is the single batched ``solve_profiles`` over the
+        (knob x split) table, which is what lets the serving loop retune
+        from sketches without replaying or re-profiling the trace
+        (structurally asserted in ``tests/test_serving.py``).
+
+        ``points`` maps each profile knob key to its knob-space point; when
+        omitted it is reconstructed from ``space.points()``.
+        """
+        t0 = time.perf_counter() if t0 is None else t0
+        system = session.system
+        cost = session.cost
+        skipped = list(skipped)
+        if points is None:
+            by_key = {}
+            for pt in space.points():
+                by_key.setdefault(space.key(pt), pt)
+            points = {kn: by_key[kn] for kn in profiles.knobs
+                      if kn in by_key}
 
         # ----- the joint (knob x split) table: pure array assembly --------
         m_budget = system.memory_budget_bytes
@@ -553,8 +588,7 @@ class CamTuner:
         row_of = {kn: i for i, kn in enumerate(profiles.knobs)}
         rows, caps, fracs, spans = [], [], [], {}
         points_of = {}
-        for pt, _size in feasible:
-            knob = space.key(pt)
+        for knob, pt in points.items():
             if knob not in row_of:
                 continue                   # profile-skipped (typed reason)
             i = row_of[knob]
@@ -766,3 +800,30 @@ class TuningSession:
         strategy = tuner if tuner is not None else CamTuner()
         return strategy.tune(session, builder, workload, space, objective,
                              sample_rate, seed, size_model)
+
+    def tune_from_profiles(self, builder: IndexBuilder, profiles,
+                           budget: Optional[float] = None, *,
+                           objective: Union[str, Callable] = "io",
+                           overrides: Optional[Dict[str, object]] = None,
+                           knob_space: Optional[KnobSpace] = None,
+                           size_model: Optional[SizeModel] = None) -> TuneResult:
+        """Joint (knob x split) retune on PRECOMPUTED profiles.
+
+        The serving loop's retune path: ``profiles`` is a capacity-
+        independent :class:`GridProfiles` — typically assembled
+        incrementally by a workload sketch (``WindowSketch.to_profiles``)
+        rather than by a ``grid_profiles`` pass — and this method runs only
+        the solve-and-argmin half of :meth:`tune`.  No trace replay, no
+        re-profiling: exactly one batched ``solve_profiles`` call.
+        """
+        session = self
+        if budget is not None:
+            session = TuningSession(
+                dataclasses.replace(self.system,
+                                    memory_budget_bytes=float(budget)),
+                self.splits)
+        space = knob_space if knob_space is not None \
+            else builder.knob_space(overrides)
+        return CamTuner().tune_profiles(
+            session, builder, space, profiles,
+            objective=objective, size_model=size_model)

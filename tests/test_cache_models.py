@@ -6,6 +6,7 @@ import pytest
 from _hyp import given, settings, st
 
 from repro.core import cache_models as cm
+from repro.core import page_ref
 from repro.core import replay
 
 
@@ -222,18 +223,51 @@ def test_sorted_scan_grid_matches_scalar():
     cov = jnp.asarray(_coverage(lo, hi, num_pages), jnp.float32)
     caps = np.array([1, 3, 10, N // 2, N + 10], np.float64)
     min_caps = np.full_like(caps, 3.0)
-    solo = 7.0
+    pinned = 7.0
     for policy in ("lru", "fifo", "lfu"):
         h_grid = np.asarray(cm.sorted_scan_hit_rate_grid(
             policy, jnp.broadcast_to(cov, (len(caps),) + cov.shape),
             jnp.full((len(caps),), float(R)), jnp.full((len(caps),), float(N)),
-            jnp.full((len(caps),), solo), jnp.asarray(caps, jnp.float32),
+            jnp.full((len(caps),), pinned), jnp.asarray(caps, jnp.float32),
             jnp.asarray(min_caps, jnp.float32)))
         for i, cap in enumerate(caps):
             h_ref = cm.sorted_scan_hit_rate(
                 policy, cap, total_refs=float(R), distinct_pages=float(N),
-                coverage=cov, solo_repeats=solo, min_capacity=3)
+                coverage=cov, pinned_retouches=pinned, min_capacity=3)
             assert abs(float(h_grid[i]) - h_ref) < 1e-5, (policy, cap)
+
+
+def test_sorted_scan_lfu_pinned_correction_vs_replay():
+    """Satellite fix: the pressure-pinned junction bound removes the ~2x
+    LFU over-prediction on strongly recency-like narrow-window streams at
+    small capacities (width-2 sliding windows, dense jittered width-1/2
+    streams), while never under-cutting replay on those streams."""
+    streams = []
+    # width-2 stride-1 sliding windows: the canonical over-prediction case
+    lo = np.arange(4000, dtype=np.int64)
+    streams.append(("slide-w2", lo, lo + 1, [8, 64, 256]))
+    # dense jittered width-1/2 stream (many probes per page)
+    rng = np.random.default_rng(3)
+    pos = np.sort(rng.integers(0, 20_000, size=8000))
+    dlo = np.clip(pos - 2, 0, 19_999) // 16
+    dhi = np.clip(pos + 2, 0, 19_999) // 16
+    dlo = np.maximum.accumulate(dlo)
+    streams.append(("dense-jitter", dlo, np.maximum(dhi, dlo), [4, 16, 64]))
+    for name, slo, shi, caps in streams:
+        num_pages = int(shi.max()) + 1
+        r, n, cov, pinned = page_ref.sorted_workload_stats(
+            jnp.asarray(slo, jnp.int32), jnp.asarray(shi, jnp.int32),
+            num_pages)
+        for cap in caps:
+            actual = float(replay.replay_windows(slo, shi, cap, "lfu").sum())
+            pred = cm.sorted_scan_misses(
+                "lfu", cap, total_refs=float(r), distinct_pages=float(n),
+                coverage=cov, pinned_retouches=float(pinned),
+                min_capacity=int((shi - slo + 1).max()))
+            q = max(pred / actual, actual / pred)
+            assert q < 1.25, (name, cap, pred, actual)
+            # junction re-touches are guaranteed hits: never under-predict
+            assert pred >= actual - 1e-6, (name, cap, pred, actual)
 
 
 def test_lemma_iv1_sorted_order_minimizes_misses():

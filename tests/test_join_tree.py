@@ -99,18 +99,18 @@ def test_sorted_scan_miss_curve_matches_scalar_model():
     hi = lo + rng.integers(0, 2, size=3_000)
     from repro.core import page_ref
     import jax.numpy as jnp
-    r, nd, cov, solo = page_ref.sorted_workload_stats(
+    r, nd, cov, pinned = page_ref.sorted_workload_stats(
         jnp.asarray(lo), jnp.asarray(hi), 500)
     caps = np.array([1, 3, 10, 50, 200, 600])
     for policy in POLICIES:
         curve = np.asarray(cache_models.sorted_scan_miss_curve(
             policy, caps, total_refs=float(r), distinct_pages=float(nd),
-            coverage=cov, solo_repeats=float(solo), min_capacity=3))
+            coverage=cov, pinned_retouches=float(pinned), min_capacity=3))
         for k, c in enumerate(caps):
             scalar = cache_models.sorted_scan_misses(
                 policy, int(c), total_refs=float(r),
                 distinct_pages=float(nd), coverage=cov,
-                solo_repeats=float(solo), min_capacity=3)
+                pinned_retouches=float(pinned), min_capacity=3)
             assert abs(curve[k] - scalar) <= 1e-3 * max(scalar, 1.0), \
                 (policy, int(c), curve[k], scalar)
 

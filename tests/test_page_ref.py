@@ -136,13 +136,13 @@ def test_sorted_workload_rn_union():
 
 
 def test_sorted_workload_stats_matches_oracle():
-    """(R, N) agree with sorted_workload_rn; coverage and solo repeats match
-    an explicit python oracle."""
+    """(R, N) agree with sorted_workload_rn; coverage and the pinned
+    window-junction re-touch count match an explicit python oracle."""
     rng = np.random.default_rng(9)
     lo = np.sort(rng.integers(0, 200, size=300))
     hi = lo + rng.integers(0, 3, size=300)
     num_pages = int(hi.max()) + 1
-    r, n, cov, solo = page_ref.sorted_workload_stats(
+    r, n, cov, pinned = page_ref.sorted_workload_stats(
         jnp.asarray(lo, jnp.int32), jnp.asarray(hi, jnp.int32), num_pages)
     r_ref, n_ref = page_ref.sorted_workload_rn(
         jnp.asarray(lo, jnp.int32), jnp.asarray(hi, jnp.int32))
@@ -152,8 +152,12 @@ def test_sorted_workload_stats_matches_oracle():
     for a, b in zip(lo, hi):
         oracle_cov[a:b + 1] += 1
     np.testing.assert_allclose(np.asarray(cov), oracle_cov, atol=1e-5)
+    oracle_pinned = sum(
+        1 for i in range(1, len(lo)) if lo[i] == hi[i - 1])
+    assert float(pinned) == oracle_pinned
+    # the junction count subsumes the width-1 repeat ("solo") statistic
     oracle_solo = sum(
         1 for i in range(1, len(lo))
         if lo[i] == hi[i] == lo[i - 1] == hi[i - 1])
-    assert float(solo) == oracle_solo
+    assert oracle_pinned >= oracle_solo
     assert float(jnp.sum(cov)) == float(r)   # mass conservation
