@@ -1,0 +1,84 @@
+"""Fleet sharding: a 4-node fleet prices its whole joint (shard-boundary
+x per-shard eps x fleet-budget-split) space in one grouped profile pass +
+one solve pass, then a hotspot develops and the rebalance gate decides —
+move the boundaries when horizon I/O savings repay data movement plus
+index rebuilds plus cold-buffer refill, refuse when the hotspot is a
+short flash that could never amortize the move.
+
+    PYTHONPATH=src python examples/shard_fleet.py [--smoke]
+"""
+import argparse
+
+import numpy as np
+
+from repro.core.cam import CamGeometry
+from repro.core.session import System
+from repro.core.workload import Workload
+from repro.data.datasets import make_dataset
+from repro.sharding import ShardingSession
+from repro.tuning.session import PGMBuilder
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--smoke", action="store_true",
+                help="CI-sized inputs (~5x below the demo default)")
+args = ap.parse_args()
+N, NQ, NODE_KB, SLAB_PAGES = ((40_000, 20_000, 32, 30) if args.smoke
+                              else (200_000, 100_000, 160, 150))
+
+keys = make_dataset("books", N, seed=1)
+node = System(CamGeometry(c_ipp=256, page_bytes=4096),
+              memory_budget_bytes=NODE_KB << 10, policy="lru")
+fleet = ShardingSession(node, PGMBuilder(keys), n_shards=4, grid=8,
+                        overrides={"eps": (8, 32, 128)})
+rng = np.random.default_rng(7)
+
+
+def traffic(hot_slab_pages=0, hot_frac=0.92, center=0.0):
+    """Uniform traffic, optionally with a hot slab at ``center``."""
+    if not hot_slab_pages:
+        return Workload.point(rng.integers(0, N, NQ), n=N)
+    slab = hot_slab_pages * node.geom.c_ipp
+    lo = min(max(0, int(center * N) - slab // 2), N - slab)
+    hot = rng.integers(lo, lo + slab, int(NQ * hot_frac))
+    cold = rng.integers(0, N, NQ - hot.shape[0])
+    pos = np.concatenate([hot, cold])
+    rng.shuffle(pos)
+    return Workload.point(pos, n=N)
+
+
+# ---- day 0: balanced traffic, solve the joint fleet configuration --------
+plan = fleet.solve(traffic())
+print(f"fleet of {plan.n_shards} nodes, "
+      f"{fleet.fleet_budget_bytes / 1024:.0f} KiB pooled budget, "
+      f"{len(plan.boundaries_searched)} boundary candidates, "
+      f"{plan.cells_solved} cells in one solve")
+print(f"  boundaries {plan.boundaries}  est {plan.io_per_query:.4f} IO/q")
+for sp in plan.shards:
+    print(f"    shard {sp.index}: eps={sp.knob}  share={sp.fraction:.3f}  "
+          f"{sp.capacity_pages} buffer pages  "
+          f"mass={plan.shard_masses[sp.index]:.2f}")
+
+# ---- a hotspot develops: most traffic crowds into shard 0's key range ----
+hot = traffic(hot_slab_pages=SLAB_PAGES)
+res = fleet.rebalance(hot, plan, horizon_queries=50 * NQ)
+print(f"\nhotspot: shard {res.hot_shard} is hot (TV={res.tv:.2f}); "
+      f"keep boundaries -> {res.io_current:.4f} IO/q, "
+      f"move -> {res.io_candidate:.4f} IO/q")
+print(f"  move cost {res.move_io:.0f} IOs vs horizon savings "
+      f"{res.predicted_savings:.0f} -> "
+      f"{'MOVE' if res.switched else 'stay'}")
+assert res.switched, "a sustained hotspot should repay the boundary move"
+plan = res.plan
+print(f"  new boundaries {plan.boundaries}, "
+      f"shares {tuple(round(f, 3) for f in plan.fractions)}")
+
+# ---- a short flash: the hot set blips to the far end of the key space ----
+flash = fleet.rebalance(traffic(hot_slab_pages=SLAB_PAGES, center=0.8),
+                        plan, horizon_queries=0.01 * NQ)
+print(f"\nflash: hot set blips to shard {flash.hot_shard} for "
+      f"~{0.01 * NQ:.0f} queries: savings {flash.predicted_savings:.0f} "
+      f"vs move {flash.move_io:.0f} "
+      f"-> {'MOVE' if flash.switched else 'REFUSED'}")
+assert not flash.switched, "a flash can never amortize data movement"
+print("\nthe gate moved boundaries for the sustained hotspot and refused "
+      "the flash.")

@@ -9,10 +9,14 @@
 # estimation paths (point/range grid kernels AND the policy-aware sorted
 # grid), the tuning curve, the end-to-end tuner comparison (which records
 # the mixed-eps-kernel speedup to benchmarks/results/tuning_e2e.json),
-# the join planner (incl. the join-tree budget-split section), and the
+# the join planner (incl. the join-tree budget-split section), the
 # serving drift loop (adaptive-vs-static gates recorded to
-# benchmarks/results/serving_drift.json), and finally runs EVERY example
-# script in --smoke mode so the README quickstarts stay executable.
+# benchmarks/results/serving_drift.json), and the sharded fleet search
+# (solved-boundaries-vs-even-split gates recorded to
+# benchmarks/results/sharding.json), verifies that every results JSON the
+# workflow uploads actually got written (catches silently-skipped smoke
+# sections), and finally runs EVERY example script in --smoke mode so the
+# README quickstarts stay executable.
 #
 # DeprecationWarning raised FROM repro.* code is an error: internal code
 # must not call the deprecated tuner/estimator shims.  The gate lives in
@@ -29,6 +33,17 @@ python -m benchmarks.run --smoke --only estimate_grid pgm_tuning_curve
 python -m benchmarks.bench_tuning_e2e --smoke
 python -m benchmarks.bench_join --smoke
 python -m benchmarks.bench_serving_drift --smoke
+python -m benchmarks.bench_sharding --smoke
+
+# every results JSON named in .github/workflows/ci.yml must exist after the
+# bench step — a missing file means a smoke section silently skipped
+for f in estimate_grid join_partition join_tree tuning_e2e serving_drift \
+         sharding; do
+    if [ ! -f "benchmarks/results/$f.json" ]; then
+        echo "MISSING benchmark result: benchmarks/results/$f.json" >&2
+        exit 1
+    fi
+done
 
 # every example must exit 0 at CI size (each accepts --smoke)
 for ex in examples/*.py; do

@@ -570,6 +570,63 @@ class CostSession:
         feasible, skipped = self._feasible(candidates)
         return self._profile_batch(feasible, wl, skipped, batch_mixed_eps)
 
+    def grid_profiles_grouped(self, groups, sample_rate: float = 1.0,
+                              seed: int = 0, batch_mixed_eps: bool = True
+                              ) -> GridProfiles:
+        """Profiles of MANY (key, candidates, workload) groups — ONE pass.
+
+        The batched-over-shards generalization of :meth:`grid_profiles`:
+        each group is profiled against its OWN workload (a shard's routed
+        sub-workload over its local page range), and the per-group rows are
+        concatenated into a single :class:`GridProfiles` whose knob keys
+        are ``(group_key, knob)`` pairs.  Histograms (and sorted coverage)
+        are zero-padded to the widest group's page span — zero columns are
+        invisible to ``hit_rate_grid`` (no mass, no distinct pages) — so
+        one :meth:`solve_profiles` call can then price ANY (group, knob,
+        capacity) combination of the whole fleet in a single
+        ``cache_models.hit_rate_grid`` solve.  This is what lets a sharded
+        search run with zero per-shard model calls: S shards x B boundary
+        candidates collapse into one profiling pass and one solve.
+        """
+        parts = []
+        for key, cands, wl in groups:
+            wls = self._sampled(wl, sample_rate, seed)
+            feasible, skipped = self._feasible(cands)
+            parts.append((key, self._profile_batch(feasible, wls, skipped,
+                                                   batch_mixed_eps)))
+        if not parts:
+            raise ValueError("grid_profiles_grouped needs at least one group")
+        scales = {p.scale for _, p in parts}
+        if len(scales) > 1:
+            raise ValueError(f"groups disagree on sample scale: {scales}")
+        width = max(int(p.counts.shape[1]) for _, p in parts)
+
+        def pad(arr: jnp.ndarray) -> jnp.ndarray:
+            w = int(arr.shape[-1])
+            if w == width:
+                return arr
+            padding = [(0, 0)] * (arr.ndim - 1) + [(0, width - w)]
+            return jnp.pad(arr, padding)
+
+        sparts = []
+        for _, p in parts:
+            for sp in p.sparts:
+                if sp is not None and sp.coverage is not None:
+                    sp = dataclasses.replace(sp, coverage=pad(sp.coverage))
+                sparts.append(sp)
+        return GridProfiles(
+            knobs=tuple((key, kn) for key, p in parts for kn in p.knobs),
+            counts=jnp.concatenate([pad(p.counts) for _, p in parts]),
+            totals=np.concatenate([p.totals for _, p in parts]),
+            dacs=np.concatenate([p.dacs for _, p in parts]),
+            sizes=np.concatenate([p.sizes for _, p in parts]),
+            caps=np.concatenate([p.caps for _, p in parts]),
+            sparts=tuple(sparts),
+            skipped=tuple(SkippedCandidate((key, s.knob), s.reason)
+                          for key, p in parts for s in p.skipped),
+            scale=float(scales.pop()),
+            n_queries=sum(p.n_queries for _, p in parts))
+
     def solve_profiles(self, profiles: GridProfiles, capacities,
                        rows: Optional[np.ndarray] = None):
         """Hit rates of profile rows at given capacities — ONE batched solve.

@@ -172,6 +172,88 @@ class Workload:
             ))
         return merged[0] if len(merged) == 1 else cls.mixed(*merged)
 
+    # ---------------------------------------------------------------- split
+    def split_at(self, cuts) -> Tuple["Workload", ...]:
+        """Split into ``len(cuts) + 1`` segment workloads at rank boundaries.
+
+        ``cuts`` are strictly increasing global ranks in ``(0, n)``; segment
+        ``s`` owns ranks ``[cuts[s-1], cuts[s])`` (with the implicit edges 0
+        and n).  Every point query lands in exactly ONE segment; range and
+        sorted windows crossing a cut are split into per-segment pieces
+        (clipped to the segment, emitted in original probe order — the
+        sorted closed forms need it) via the same repeat + prefix-scan
+        offset idiom as ``join.hybrid.partition_probes``.  Segments stay in
+        GLOBAL coordinates (same ``n``), so ``Workload.concat`` of the
+        pieces reproduces the original exactly when no window crosses a cut
+        and preserves per-kind position multisets and total covered rank
+        mass in general.  This is the shared routing primitive of
+        ``ShardingSession`` (key-space shard boundaries) and any consumer
+        that previously masked key ranges ad hoc.
+        """
+        cuts = np.asarray(cuts, np.int64)
+        if cuts.ndim != 1:
+            raise ValueError("cuts must be a 1-D array of ranks")
+        if cuts.size == 0:
+            return (self,)
+        if np.any(np.diff(cuts) <= 0) or cuts[0] <= 0 or (
+                self.n is not None and cuts[-1] >= self.n):
+            raise ValueError(
+                "cuts must be strictly increasing ranks inside (0, n); got "
+                f"{cuts.tolist()} for n={self.n}")
+        n_segs = int(cuts.size) + 1
+        if self.kind == MIXED:
+            per_part = [p.split_at(cuts) for p in self.parts]
+            segs = []
+            for s in range(n_segs):
+                live = [pp[s] for pp in per_part if pp[s].n_queries > 0]
+                if not live:
+                    segs.append(Workload.point(np.zeros(0, np.int64),
+                                               n=self.n))
+                elif len(live) == 1:
+                    segs.append(live[0])
+                else:
+                    segs.append(Workload.mixed(*live))
+            return tuple(segs)
+        if self.positions is None or self.n_queries == 0:
+            return tuple(dataclasses.replace(self) for _ in range(n_segs))
+        if self.kind == POINT:
+            seg_of = np.searchsorted(cuts, self.positions, side="right")
+            out = []
+            for s in range(n_segs):
+                m = seg_of == s
+                out.append(Workload(
+                    POINT, positions=self.positions[m],
+                    query_keys=(None if self.query_keys is None
+                                else self.query_keys[m]),
+                    n=self.n))
+            return tuple(out)
+        # range / sorted: a window may span several segments.  Pieces are
+        # generated probe-major (then segment-minor), so each segment's
+        # subsequence keeps the original probe order.
+        lo = np.asarray(self.positions, np.int64)
+        hi = np.asarray(self.hi_positions, np.int64)
+        first = np.searchsorted(cuts, lo, side="right")
+        last = np.searchsorted(cuts, hi, side="right")
+        counts = last - first + 1
+        probe = np.repeat(np.arange(lo.shape[0]), counts)
+        # within-probe piece index: arange minus each probe's start offset
+        # (exclusive prefix sum of counts, repeated) — the two-pass idiom.
+        offs = (np.arange(probe.shape[0])
+                - np.repeat(np.cumsum(counts) - counts, counts))
+        seg = first[probe] + offs
+        top = (int(self.n) if self.n is not None
+               else int(hi.max()) + 1)
+        edges_lo = np.concatenate([np.zeros(1, np.int64), cuts])
+        edges_hi = np.concatenate([cuts, np.asarray([top], np.int64)])
+        plo = np.maximum(lo[probe], edges_lo[seg])
+        phi = np.minimum(hi[probe], edges_hi[seg] - 1)
+        out = []
+        for s in range(n_segs):
+            m = seg == s
+            out.append(Workload(self.kind, positions=plo[m],
+                                hi_positions=phi[m], n=self.n))
+        return tuple(out)
+
     # ------------------------------------------------------------- properties
     @property
     def n_queries(self) -> int:

@@ -48,7 +48,7 @@ from repro.core.session import (CostSession, GridCandidate, GridProfiles,
 from repro.core.workload import MIXED, POINT, RANGE, SORTED, Workload
 
 __all__ = ["SketchChunk", "WindowSketch", "tv_distance",
-           "WIDTH_BINS", "DEFAULT_PAGE_BINS"]
+           "shard_page_masses", "WIDTH_BINS", "DEFAULT_PAGE_BINS"]
 
 WIDTH_BINS = 24           # log2 range/sorted window-width histogram
 DEFAULT_PAGE_BINS = 32    # coarse page-popularity histogram
@@ -186,6 +186,36 @@ def _drift_summary(workload: Workload, num_pages: int, c_ipp: int,
 def _normalize(h: np.ndarray) -> np.ndarray:
     s = float(h.sum())
     return h / s if s > 0 else h
+
+
+def shard_page_masses(summary: Dict[str, np.ndarray],
+                      boundary_pages: Sequence[int],
+                      num_pages: int) -> Tuple[float, ...]:
+    """Per-shard query-mass fractions read off a sketch summary.
+
+    The sharding layer's view of a serving sketch: the ``page_pop``
+    histogram bins the GLOBAL page space, and shard boundaries are page
+    positions (``ShardedSystem.boundary_pages``), so each bin's mass is
+    attributed to the shard owning the bin's first page — no routing pass,
+    no replay.  Resolution is ``page_bins``-coarse, which is exactly the
+    hot-shard detector's need: it names the shard soaking up traffic, not
+    exact counts.  Returns ``len(boundary_pages) + 1`` fractions summing
+    to 1 (all zeros for an empty summary).
+    """
+    pop = np.asarray(summary["page_pop"], np.float64)
+    page_bins = pop.shape[0]
+    cuts = np.asarray(boundary_pages, np.int64)
+    # first global page of each bin (inverse of the binning in
+    # _drift_summary: page -> page * page_bins // num_pages)
+    start = (np.arange(page_bins, dtype=np.int64) * max(num_pages, 1)
+             + page_bins - 1) // page_bins
+    shard = np.searchsorted(cuts, start, side="left")
+    masses = np.zeros(cuts.shape[0] + 1, np.float64)
+    np.add.at(masses, shard, pop)
+    total = float(masses.sum())
+    if total > 0:
+        masses /= total
+    return tuple(float(m) for m in masses)
 
 
 def tv_distance(a: Dict[str, np.ndarray], b: Dict[str, np.ndarray]) -> float:

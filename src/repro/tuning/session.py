@@ -69,6 +69,7 @@ __all__ = [
     "RMIBuilder",
     "RadixSplineBuilder",
     "builder_for",
+    "SplitTable",
     "SplitEstimate",
     "TuneResult",
     "Tuner",
@@ -432,6 +433,29 @@ def builder_for(family: str, keys: np.ndarray, **kwargs) -> IndexBuilder:
 # Results
 # ---------------------------------------------------------------------------
 
+@dataclasses.dataclass(frozen=True)
+class SplitTable:
+    """The assembled (knob x split) solve table — pure arrays, NO model calls.
+
+    One cell per enumerated (knob, buffer-capacity) pair: ``rows[t]`` names
+    the :class:`~repro.core.session.GridProfiles` row cell ``t`` prices,
+    ``caps[t]`` its capacity, ``fracs[t]`` the budget fraction it realizes,
+    and ``spans`` each knob's contiguous ``[a, b)`` cell range.  Tables
+    concatenate (cells are independent), which is how the sharded fleet
+    search solves every (boundary x shard x knob x budget-share) cell of
+    ALL its per-shard tables in ONE ``solve_profiles`` call.
+    """
+
+    rows: np.ndarray
+    caps: np.ndarray
+    fracs: np.ndarray
+    spans: Dict[object, Tuple[int, int]]
+    points_of: Dict[object, Dict[str, object]]
+
+    def __len__(self) -> int:
+        return int(self.rows.shape[0])
+
+
 class SplitEstimate(NamedTuple):
     """One (knob, buffer split) cell of the joint search table."""
 
@@ -572,19 +596,44 @@ class CamTuner:
         t0 = time.perf_counter() if t0 is None else t0
         system = session.system
         cost = session.cost
-        skipped = list(skipped)
         if points is None:
             by_key = {}
             for pt in space.points():
                 by_key.setdefault(space.key(pt), pt)
             points = {kn: by_key[kn] for kn in profiles.knobs
                       if kn in by_key}
+        table = self.assemble_table(
+            profiles, points, splits=session.splits,
+            budget_bytes=system.memory_budget_bytes,
+            page_bytes=system.geom.page_bytes)
+        # ----- ONE batched solve for the whole table ----------------------
+        h, n_distinct = cost.solve_profiles(profiles, table.caps,
+                                            rows=table.rows)
+        return self.finish_from_solution(
+            session, builder, space, profiles, table, h, n_distinct,
+            objective=objective, size_model=size_model, skipped=skipped,
+            t0=t0)
 
-        # ----- the joint (knob x split) table: pure array assembly --------
-        m_budget = system.memory_budget_bytes
-        page_b = system.geom.page_bytes
-        split_caps = [(f, int(f * m_budget // page_b))
-                      for f in session.splits]
+    @staticmethod
+    def assemble_table(profiles, points, *, splits, budget_bytes,
+                       page_bytes, index_in_split: bool = False,
+                       include_max_split: bool = True) -> SplitTable:
+        """The joint (knob x split) table — pure array assembly, NO solves.
+
+        Default semantics (the single-node tuner): each split fraction
+        ``f`` names a BUFFER slice ``floor(f * M / B)`` pages, enumerated
+        per knob when it undercuts that knob's maximal feasible capacity;
+        the maximal split (all memory the index does not claim) is listed
+        first so objective ties resolve toward the larger buffer.
+
+        ``index_in_split=True`` is the fleet semantics the sharded search
+        uses: ``f`` is a shard's share of the FLEET budget and must house
+        the shard's index AND its buffer, so the cell capacity is
+        ``floor((f * M - size) / B)`` — infeasible shares (< 1 page) are
+        dropped rather than clamped.  ``include_max_split=False`` skips
+        the implicit maximal-split row (a fleet shard can never take the
+        whole pool; its candidate shares are exactly ``splits``).
+        """
         row_of = {kn: i for i, kn in enumerate(profiles.knobs)}
         rows, caps, fracs, spans = [], [], [], {}
         points_of = {}
@@ -592,25 +641,56 @@ class CamTuner:
             if knob not in row_of:
                 continue                   # profile-skipped (typed reason)
             i = row_of[knob]
-            points_of[knob] = pt
+            size = float(profiles.sizes[i])
             cap_max = int(profiles.caps[i])
             start = len(rows)
-            # Maximal split first: objective ties resolve to the largest
-            # buffer, reproducing the legacy always-max-split tuners.
-            rows.append(i)
-            caps.append(cap_max)
-            fracs.append((m_budget - profiles.sizes[i]) / m_budget)
-            for f, c in split_caps:
-                if 1 <= c < cap_max:       # c >= cap_max: index won't fit
+            if include_max_split:
+                # Maximal split first: objective ties resolve to the largest
+                # buffer, reproducing the legacy always-max-split tuners.
+                rows.append(i)
+                caps.append(cap_max)
+                fracs.append((budget_bytes - size) / budget_bytes)
+            for f in splits:
+                if index_in_split:
+                    c = int((f * budget_bytes - size) // page_bytes)
+                    ok = c >= 1 and (not include_max_split or c < cap_max)
+                else:
+                    c = int(f * budget_bytes // page_bytes)
+                    ok = 1 <= c < cap_max  # c >= cap_max: index won't fit
+                if ok:
                     rows.append(i)
                     caps.append(c)
                     fracs.append(f)
-            spans[knob] = (start, len(rows))
-        rows_arr = np.asarray(rows, np.int64)
-        caps_arr = np.asarray(caps, np.int64)
+            if len(rows) > start:
+                spans[knob] = (start, len(rows))
+                points_of[knob] = pt
+        return SplitTable(np.asarray(rows, np.int64),
+                          np.asarray(caps, np.int64),
+                          np.asarray(fracs, np.float64), spans, points_of)
 
-        # ----- ONE batched solve for the whole table ----------------------
-        h, n_distinct = cost.solve_profiles(profiles, caps_arr, rows=rows_arr)
+    def finish_from_solution(self, session, builder, space, profiles,
+                             table: SplitTable, h, n_distinct, *,
+                             objective="io", size_model=None,
+                             skipped: Sequence[SkippedCandidate] = (),
+                             t0: Optional[float] = None,
+                             batched_solves: int = 1) -> TuneResult:
+        """Argmin + result assembly over an ALREADY-SOLVED table.
+
+        ``h``/``n_distinct`` are :meth:`CostSession.solve_profiles` outputs
+        aligned with ``table``'s cells; everything here is array lookups —
+        no model calls — so a caller that solved MANY concatenated tables
+        at once (the sharded fleet search) can finish each table's slice
+        separately without re-solving.
+        """
+        t0 = time.perf_counter() if t0 is None else t0
+        system = session.system
+        cost = session.cost
+        skipped = list(skipped)
+        spans, points_of = table.spans, table.points_of
+        rows_arr, caps_arr, fracs = table.rows, table.caps, table.fracs
+        row_of = {kn: i for i, kn in enumerate(profiles.knobs)}
+        h = np.asarray(h, np.float64)
+        n_distinct = np.asarray(n_distinct, np.float64)
         dacs = profiles.dacs[rows_arr]
         sizes = profiles.sizes[rows_arr]
         io = (1.0 - h) * dacs
@@ -671,8 +751,8 @@ class CamTuner:
             split=float(fracs[best_j]), capacity_pages=int(caps_arr[best_j]),
             est_io=float(io[best_j]), objective_value=float(obj[best_j]),
             estimates=estimates, table=entries, skipped=tuple(skipped),
-            tuning_seconds=time.perf_counter() - t0, batched_solves=1,
-            size_model=size_model)
+            tuning_seconds=time.perf_counter() - t0,
+            batched_solves=batched_solves, size_model=size_model)
 
 
 @dataclasses.dataclass

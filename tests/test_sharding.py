@@ -1,0 +1,491 @@
+"""Sharding-layer tests: routing invariants, the one-pass joint solve,
+golden equivalence, and the rebalance gate.
+
+The load-bearing guarantees, each gated here:
+
+* ``Workload.split_at`` puts every point query in exactly one segment,
+  splits crossing windows losslessly (rank mass preserved, piece counts
+  exact), and ``Workload.concat`` of the segments reproduces a mixed
+  point+range+sorted workload EXACTLY when no window crosses a cut;
+* routing: per-shard page-reference totals sum to the unsharded total
+  plus exactly the boundary-page overlap term RouteStats reports;
+* the joint (boundary × knob × budget-share) search runs ONE grouped
+  profile pass and ONE ``solve_profiles`` pass — zero per-shard model
+  calls, however many boundaries/shards/splits are enumerated
+  (structural);
+* a 1-shard fleet is golden-equivalent (1e-9) to the single-node
+  ``TuningSession`` path;
+* the rebalance gate switches only when horizon savings repay the move.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from _hyp import given, settings, st
+from repro.core.cam import CamGeometry
+from repro.core.session import CostSession, System
+from repro.core.workload import Workload
+from repro.serving.sketch import shard_page_masses
+from repro.sharding import (FleetPlan, ShardedSystem, ShardingSession,
+                            boundary_candidates, even_boundaries,
+                            quantile_boundaries, route)
+from repro.tuning.session import (CamTuner, PGMBuilder, RMIBuilder,
+                                  TuningSession)
+
+GEOM = CamGeometry(c_ipp=64, page_bytes=4096)
+N_KEYS = 8192
+
+_rng = np.random.default_rng(0)
+KEYS = np.sort(_rng.uniform(0, 1e6, N_KEYS))
+
+
+def _system(budget=64 * 1024, policy="lru"):
+    return System(GEOM, memory_budget_bytes=budget, policy=policy)
+
+
+def _point_wl(nq=2000, seed=1, n=N_KEYS):
+    rng = np.random.default_rng(seed)
+    return Workload.point(rng.integers(0, n, nq), n=n)
+
+
+def _mixed_wl(seed=2, n=N_KEYS):
+    rng = np.random.default_rng(seed)
+    pts = np.sort(rng.integers(0, n, 300))
+    lo = np.sort(rng.integers(0, n - 40, 120))
+    hi = lo + rng.integers(0, 40, 120)
+    slo = np.sort(rng.integers(0, n - 8, 150))
+    return Workload.mixed(Workload.point(pts, n=n),
+                          Workload.range_scan(lo, hi, n=n),
+                          Workload.sorted_stream(slo, slo + 7, n=n))
+
+
+def _refs(wl):
+    """Logical page references at eps=0 (windows clipped, local or global)."""
+    if wl.kind == "mixed":
+        return sum(_refs(p) for p in wl.parts)
+    if wl.positions is None or wl.n_queries == 0:
+        return 0
+    if wl.hi_positions is None:
+        return wl.n_queries
+    return int(np.sum(wl.hi_positions // GEOM.c_ipp
+                      - wl.positions // GEOM.c_ipp + 1))
+
+
+# ---------------------------------------------------------------------------
+# Workload.split_at
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.integers(1, 5))
+def test_split_at_point_partition(seed, n_cuts):
+    """Every point query lands in exactly one segment, and the segment is
+    the right one: cuts[s-1] <= p < cuts[s]."""
+    rng = np.random.default_rng(seed)
+    n = 4096
+    pos = rng.integers(0, n, 500)
+    cuts = np.sort(rng.choice(np.arange(1, n), size=n_cuts, replace=False))
+    wl = Workload.point(pos, n=n)
+    segs = wl.split_at(cuts)
+    assert len(segs) == n_cuts + 1
+    assert sum(s.n_queries for s in segs) == wl.n_queries
+    edges = np.concatenate([[0], cuts, [n]])
+    for s, seg in enumerate(segs):
+        if seg.n_queries:
+            assert np.all(seg.positions >= edges[s])
+            assert np.all(seg.positions < edges[s + 1])
+    merged = np.sort(np.concatenate([s.positions for s in segs]))
+    assert np.array_equal(merged, np.sort(pos))
+
+
+def test_split_at_mixed_concat_round_trip():
+    """Regression (the ISSUE bugfix): a mixed point+range+sorted workload
+    splits and ``Workload.concat``s back to the original EXACTLY when no
+    window crosses a cut (position-sorted inputs, so segment grouping
+    preserves order)."""
+    n = N_KEYS
+    cuts = np.asarray([2048, 4096, 6144])
+    rng = np.random.default_rng(3)
+    # windows kept strictly inside segments: lo and hi share a segment
+    lo = np.sort(rng.integers(0, n - 64, 200))
+    seg = np.searchsorted(cuts, lo, side="right")
+    edges_hi = np.concatenate([cuts, [n]])
+    hi = np.minimum(lo + rng.integers(0, 40, 200), edges_hi[seg] - 1)
+    pts = np.sort(rng.integers(0, n, 300))
+    wl = Workload.mixed(Workload.point(pts, n=n),
+                        Workload.range_scan(lo, hi, n=n),
+                        Workload.sorted_stream(lo, hi, n=n))
+    back = Workload.concat(*wl.split_at(cuts))
+    assert back.kind == "mixed" and len(back.parts) == 3
+    by_kind = {p.kind: p for p in back.parts}
+    assert np.array_equal(by_kind["point"].positions, pts)
+    for kind in ("range", "sorted"):
+        assert np.array_equal(by_kind[kind].positions, lo)
+        assert np.array_equal(by_kind[kind].hi_positions, hi)
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.integers(1, 4))
+def test_split_at_crossing_windows_lossless(seed, n_cuts):
+    """Crossing windows split into exactly (segments spanned) pieces and
+    preserve total covered rank mass."""
+    rng = np.random.default_rng(seed)
+    n = 4096
+    lo = rng.integers(0, n - 1, 150)
+    hi = np.minimum(lo + rng.integers(0, 600, 150), n - 1)
+    cuts = np.sort(rng.choice(np.arange(1, n), size=n_cuts, replace=False))
+    wl = Workload.range_scan(lo, hi, n=n)
+    segs = wl.split_at(cuts)
+    spanned = (np.searchsorted(cuts, hi, side="right")
+               - np.searchsorted(cuts, lo, side="right") + 1)
+    assert sum(s.n_queries for s in segs) == int(spanned.sum())
+    mass = sum(int(np.sum(s.hi_positions - s.positions + 1)) for s in segs
+               if s.n_queries)
+    assert mass == int(np.sum(hi - lo + 1))
+
+
+def test_split_at_rejects_bad_cuts():
+    wl = _point_wl()
+    with pytest.raises(ValueError):
+        wl.split_at([100, 100])
+    with pytest.raises(ValueError):
+        wl.split_at([0, 50])
+    with pytest.raises(ValueError):
+        wl.split_at([N_KEYS])
+
+
+# ---------------------------------------------------------------------------
+# Routing
+# ---------------------------------------------------------------------------
+
+def _fleet(boundaries, budget=64 * 1024, policy="lru"):
+    return ShardedSystem(_system(budget, policy), N_KEYS, tuple(boundaries))
+
+
+def test_route_point_exactly_one_shard():
+    wl = _point_wl(3000)
+    fleet = _fleet((2000, 4100, 6000))
+    locals_, stats = route(wl, fleet)
+    assert len(locals_) == 4
+    assert sum(w.n_queries for w in locals_) == wl.n_queries
+    assert stats.boundary_splits == 0
+    for w, sh in zip(locals_, fleet.shards):
+        if w.n_queries:
+            assert np.all(w.positions >= 0)
+            assert np.all(w.positions < sh.n_local)
+            assert w.n == sh.n_local
+
+
+def test_route_refs_sum_with_overlap_term():
+    """Per-shard eps=0 page-reference totals == unsharded total + the
+    boundary-page overlap RouteStats reports (mid-page cuts replicate
+    their page; page-aligned cuts add nothing)."""
+    wl = _mixed_wl()
+    for boundaries in [(2048, 4096), (2000, 4100, 6001), (64, 8000)]:
+        fleet = _fleet(boundaries)
+        locals_, stats = route(wl, fleet)
+        sharded = sum(_refs(w) for w in locals_)
+        assert sharded == _refs(wl) + stats.boundary_page_overlap
+        aligned = all(c % GEOM.c_ipp == 0 for c in boundaries)
+        if aligned:
+            assert stats.boundary_page_overlap == 0
+
+
+def test_route_single_shard_identity():
+    wl = _mixed_wl()
+    locals_, stats = route(wl, _fleet(()))
+    assert len(locals_) == 1
+    assert stats.boundary_splits == 0 and stats.boundary_page_overlap == 0
+    got, want = locals_[0], wl
+    for g, w in zip(got.parts, want.parts):
+        assert np.array_equal(g.positions, w.positions)
+        assert g.n == w.n
+
+
+def test_boundary_candidates_shapes():
+    wl = _point_wl(4000)
+    cands = boundary_candidates(wl, N_KEYS, 4)
+    assert len(cands) >= 2                      # even + at least one quantile
+    for b in cands:
+        assert len(b) == 3
+        assert all(0 < x < N_KEYS for x in b)
+        assert all(b[i] < b[i + 1] for i in range(len(b) - 1))
+    q = quantile_boundaries(wl, N_KEYS, 4)
+    assert q in cands
+    # a concentrated workload pulls quantile cuts into the hot range
+    hot = Workload.point(np.random.default_rng(5).integers(0, 512, 4000),
+                         n=N_KEYS)
+    qh = quantile_boundaries(hot, N_KEYS, 4)
+    assert all(c <= 512 for c in qh)
+
+
+def test_sharded_system_validation():
+    with pytest.raises(ValueError):
+        _fleet((4096, 2048))
+    with pytest.raises(ValueError):
+        _fleet((0,))
+    fleet = _fleet((2000, 4096))
+    assert fleet.replicated_cuts == (2000,)     # 4096 is page-aligned
+    shards = fleet.shards
+    assert shards[0].lo_rank == 0 and shards[-1].hi_rank == N_KEYS
+    assert shards[1].page_lo == 2000 // GEOM.c_ipp
+
+
+# ---------------------------------------------------------------------------
+# The joint solve
+# ---------------------------------------------------------------------------
+
+OVR = {"eps": (4, 64)}
+
+
+def _sharding(n_shards=2, grid=4, budget=32 * 1024, policy="lru", **kw):
+    return ShardingSession(_system(budget, policy), PGMBuilder(KEYS),
+                           n_shards, grid=grid, overrides=OVR, **kw)
+
+
+def test_solve_simplex_sanity():
+    sess = _sharding(2, grid=4)
+    plan = sess.solve(_point_wl(2000))
+    assert isinstance(plan, FleetPlan)
+    assert len(plan.shards) == 2
+    assert abs(sum(plan.fractions) - 1.0) < 1e-12
+    for p in plan.shards:
+        assert p.fraction >= 1.0 / sess.grid
+        assert p.capacity_pages >= 1
+        assert p.tune is not None and p.tune.batched_solves == 1
+    assert plan.fleet_io == pytest.approx(
+        sum(p.est_io * p.n_queries for p in plan.shards))
+    assert plan.boundaries in plan.boundaries_searched
+    assert min(plan.boundary_totals) == pytest.approx(plan.fleet_io)
+
+
+def test_solve_one_profile_pass_one_solve_pass():
+    """Structural: the whole (boundary × shard × knob × share) search makes
+    exactly ONE grouped profile pass and ONE solve pass — and never calls
+    the per-candidate estimators."""
+    calls = {"grouped": 0, "solve": 0, "grid": 0, "est": 0, "est_grid": 0}
+    orig_grouped = CostSession.grid_profiles_grouped
+    orig_solve = CostSession.solve_profiles
+
+    def counting_grouped(self, *a, **k):
+        calls["grouped"] += 1
+        return orig_grouped(self, *a, **k)
+
+    def counting_solve(self, *a, **k):
+        calls["solve"] += 1
+        return orig_solve(self, *a, **k)
+
+    def forbidden(name):
+        def fn(self, *a, **k):
+            calls[name] += 1
+            raise AssertionError(f"per-shard model call: {name}")
+        return fn
+
+    sess = _sharding(3, grid=6)
+    wl = _point_wl(3000)
+    cands = [even_boundaries(N_KEYS, 3), (1000, 2000), (3000, 6000)]
+    with pytest.MonkeyPatch.context() as mp:
+        mp.setattr(CostSession, "grid_profiles_grouped", counting_grouped)
+        mp.setattr(CostSession, "solve_profiles", counting_solve)
+        mp.setattr(CostSession, "grid_profiles", forbidden("grid"))
+        mp.setattr(CostSession, "estimate", forbidden("est"))
+        mp.setattr(CostSession, "estimate_grid", forbidden("est_grid"))
+        plan = sess.solve(wl, cands)
+    assert calls == {"grouped": 1, "solve": 1, "grid": 0, "est": 0,
+                     "est_grid": 0}
+    assert plan.cells_solved > len(cands)       # many cells, still one solve
+
+
+def test_one_shard_fleet_golden_vs_tuning_session():
+    """A 1-shard fleet IS the single-node tuner: same knob, same capacity,
+    same expected I/O to 1e-9."""
+    wl = _point_wl(2500, seed=7)
+    for policy in ("lru", "fifo", "lfu"):
+        sess = ShardingSession(_system(32 * 1024, policy), PGMBuilder(KEYS),
+                               1, grid=1, overrides=OVR)
+        plan = sess.solve(wl)
+        ref = TuningSession(_system(32 * 1024, policy)).tune(
+            PGMBuilder(KEYS), wl, overrides=OVR)
+        assert plan.boundaries == ()
+        sp = plan.shards[0]
+        assert sp.knob == ref.best_knob
+        assert sp.capacity_pages == ref.capacity_pages
+        assert sp.est_io == pytest.approx(ref.est_io, abs=1e-9)
+        assert plan.io_per_query == pytest.approx(ref.est_io, abs=1e-9)
+
+
+def test_solve_beats_even_split_under_hotspot():
+    """Mini version of the benchmark gate: a hot slab wider than any single
+    budget share makes the even split lose to solved boundaries."""
+    rng = np.random.default_rng(11)
+    nq = 4000
+    slab = 1920                                 # 30 pages at c_ipp=64
+    hot = rng.integers(0, slab, int(nq * 0.92))
+    cold = rng.integers(0, N_KEYS, nq - hot.shape[0])
+    pos = np.concatenate([hot, cold])
+    rng.shuffle(pos)
+    wl = Workload.point(pos, n=N_KEYS)
+    sess = ShardingSession(_system(8 * 1024), PGMBuilder(KEYS), 4,
+                           grid=8, overrides=OVR)
+    plan = sess.solve(wl)
+    even = sess.solve(wl, [even_boundaries(N_KEYS, 4)])
+    assert plan.io_per_query < even.io_per_query
+    # the default candidate set contains the even split, so solved can
+    # never lose to it
+    assert even_boundaries(N_KEYS, 4) in plan.boundaries_searched
+
+
+def test_solve_rejects_index_backed_builders():
+    sess = ShardingSession(_system(), RMIBuilder(KEYS), 2, grid=4,
+                           overrides={"branch": (64,)})
+    with pytest.raises(ValueError, match="uniform-eps"):
+        sess.solve(_point_wl(500))
+
+
+def test_solve_validates_inputs():
+    sess = _sharding(2, grid=4)
+    with pytest.raises(ValueError):
+        sess.solve(_point_wl(500), [(100, 200)])     # wrong cut count
+    with pytest.raises(ValueError):
+        ShardingSession(_system(), PGMBuilder(KEYS), 4, grid=3)
+    with pytest.raises(ValueError):
+        sess.solve(Workload.point(np.asarray([1]), n=N_KEYS // 2))
+
+
+# ---------------------------------------------------------------------------
+# Rebalance
+# ---------------------------------------------------------------------------
+
+def _hot_wl(center, nq=4000, width=1920, frac=0.92, seed=13):
+    rng = np.random.default_rng(seed)
+    lo = max(0, center - width // 2)
+    hot = rng.integers(lo, min(N_KEYS, lo + width), int(nq * frac))
+    cold = rng.integers(0, N_KEYS, nq - hot.shape[0])
+    pos = np.concatenate([hot, cold])
+    rng.shuffle(pos)
+    return Workload.point(pos, n=N_KEYS)
+
+
+def test_rebalance_gate_accepts_then_refuses():
+    sess = ShardingSession(_system(8 * 1024), PGMBuilder(KEYS), 4,
+                           grid=8, overrides=OVR)
+    plan = sess.solve(_point_wl(4000))          # balanced traffic
+    shifted = _hot_wl(center=960)               # hot slab in shard 0
+    res = sess.rebalance(shifted, plan, horizon_queries=5e7)
+    assert res.hot_shard == 0
+    assert res.tv > 0.2
+    assert res.io_candidate <= res.io_current + 1e-12
+    if res.to_boundaries != res.from_boundaries:
+        assert res.move_io > 0
+        assert res.switched == (res.predicted_savings > res.move_io)
+        assert res.switched                     # huge horizon repays any move
+        # a tiny horizon can never repay the same move
+        small = sess.rebalance(shifted, plan, horizon_queries=1.0)
+        assert not small.switched
+    stay = sess.rebalance(shifted, res.plan if res.switched else plan,
+                          horizon_queries=5e7,
+                          boundary_candidates_=[
+                              (res.plan if res.switched else plan).boundaries])
+    assert stay.to_boundaries == stay.from_boundaries
+    assert not stay.switched and stay.move_io == 0.0
+
+
+def test_rebalance_from_sketch_summary():
+    sess = ShardingSession(_system(8 * 1024), PGMBuilder(KEYS), 4,
+                           grid=8, overrides=OVR)
+    plan = sess.solve(_point_wl(4000))
+    shifted = _hot_wl(center=960)
+    # a synthetic sketch summary: page-popularity of the shifted traffic
+    pages = shifted.positions // GEOM.c_ipp
+    num_pages = GEOM.num_pages(N_KEYS)
+    bins = np.minimum(pages * 32 // num_pages, 31)
+    summary = {"page_pop": np.bincount(bins, minlength=32).astype(float),
+               "width": np.zeros(24), "op_mix": np.asarray([1.0, 0, 0])}
+    res = sess.rebalance(shifted, plan, horizon_queries=5e7,
+                         summary=summary)
+    assert res.hot_shard == 0
+    assert abs(sum(res.shard_masses) - 1.0) < 1e-9
+
+
+def test_shard_page_masses_attribution():
+    num_pages, page_bins = 64, 32
+    pop = np.zeros(page_bins)
+    pop[0] = 3.0                                # bin 0 -> pages 0-1
+    pop[10] = 1.0                               # bin 10 starts at page 20
+    summary = {"page_pop": pop}
+    masses = shard_page_masses(summary, boundary_pages=(10, 40),
+                               num_pages=num_pages)
+    assert len(masses) == 3
+    assert masses == (0.75, 0.25, 0.0)
+    empty = shard_page_masses({"page_pop": np.zeros(page_bins)},
+                              (10, 40), num_pages)
+    assert sum(empty) == 0.0
+
+
+# ---------------------------------------------------------------------------
+# Grouped profiles (the core/session.py extension)
+# ---------------------------------------------------------------------------
+
+def test_grid_profiles_grouped_matches_per_group():
+    """The concatenated grouped profile is exactly the per-group profiles
+    stacked — counts zero-padded to the widest page span — and solving the
+    grouped rows equals solving each group alone."""
+    cost = CostSession(_system(64 * 1024))
+    from repro.core.session import GridCandidate
+    cands = [GridCandidate(knob=e, size_bytes=4096.0, eps=e)
+             for e in (4, 64)]
+    wl_a = _point_wl(800, seed=21)
+    half = Workload.point(
+        np.random.default_rng(22).integers(0, N_KEYS // 2, 700),
+        n=N_KEYS // 2)
+    grouped = cost.grid_profiles_grouped([("a", cands, wl_a),
+                                          ("b", cands, half)])
+    pa = cost.grid_profiles(cands, wl_a)
+    pb = cost.grid_profiles(cands, half)
+    assert grouped.knobs == tuple(
+        (g, kn) for g, p in (("a", pa), ("b", pb)) for kn in p.knobs)
+    assert grouped.n_queries == pa.n_queries + pb.n_queries
+    K = len(cands)
+    width = max(pa.counts.shape[1], pb.counts.shape[1])
+    assert grouped.counts.shape == (2 * K, width)
+    np.testing.assert_allclose(
+        np.asarray(grouped.counts[:K, :pa.counts.shape[1]]),
+        np.asarray(pa.counts))
+    np.testing.assert_allclose(
+        np.asarray(grouped.counts[K:, :pb.counts.shape[1]]),
+        np.asarray(pb.counts))
+    assert np.asarray(grouped.counts[K:, pb.counts.shape[1]:]).sum() == 0
+    caps = np.asarray([5, 9] * 2)
+    rows = np.arange(2 * K)
+    h_g, nd_g = cost.solve_profiles(grouped, caps, rows=rows)
+    h_a, nd_a = cost.solve_profiles(pa, caps[:K], rows=np.arange(K))
+    h_b, nd_b = cost.solve_profiles(pb, caps[K:], rows=np.arange(K))
+    np.testing.assert_allclose(np.asarray(h_g),
+                               np.concatenate([h_a, h_b]), atol=1e-9)
+    np.testing.assert_allclose(np.asarray(nd_g),
+                               np.concatenate([nd_a, nd_b]), atol=1e-9)
+
+
+def test_assemble_table_index_in_split_semantics():
+    """Fleet semantics: a share must house index AND buffer — shares whose
+    slice can't fit one page beyond the index are dropped, and no implicit
+    maximal-split row appears."""
+    cost = CostSession(_system(64 * 1024))
+    from repro.core.session import GridCandidate
+    cands = [GridCandidate(knob=4, size_bytes=10_000.0, eps=4)]
+    profiles = cost.grid_profiles(cands, _point_wl(400))
+    M, pb = 64 * 1024.0, 4096.0
+    tab = CamTuner.assemble_table(
+        profiles, {4: {"eps": 4}}, splits=(0.125, 0.25, 0.5),
+        budget_bytes=M, page_bytes=pb, index_in_split=True,
+        include_max_split=False)
+    # 0.125 * 64K = 8192 < 10000 + page: dropped; others kept
+    assert list(tab.fracs) == [0.25, 0.5]
+    assert list(tab.caps) == [int((0.25 * M - 10_000) // pb),
+                              int((0.5 * M - 10_000) // pb)]
+    # default semantics still lists the maximal split first
+    tab_def = CamTuner.assemble_table(
+        profiles, {4: {"eps": 4}}, splits=(0.25,),
+        budget_bytes=M, page_bytes=pb)
+    assert len(tab_def) == 2
+    assert tab_def.caps[0] == int(profiles.caps[0])
