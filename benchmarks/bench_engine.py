@@ -1,0 +1,149 @@
+"""Engine executor benchmark: the fused device solve vs the host reference.
+
+Builds a >= 10^4-cell :class:`repro.engine.PriceTable` (a knob-grid profile
+batch x a dense per-knob capacity curve, over a mixed point+sorted workload
+so the full policy-fixed-point + sorted/mixed composition runs) and prices
+the SAME table through both executors:
+
+* ``host``   — ``CostSession.solve_profiles`` (the golden reference);
+* ``device`` — the fused ``kernels/price_grid.py`` pallas kernel: bisection,
+  sorted/mixed composition and objective argmin in ONE launch.
+
+On a real TPU backend the fused executor must be >= 2x faster warm than the
+host path (that is the point of fusing the pipeline into one HBM pass over
+the histograms).  Under interpret mode (CPU CI) kernel timings are
+meaningless, so the gate degrades to structure-only: float32 equivalence of
+every cell's hit rate, identical distinct-page counts, and winner agreement
+— asserted on both backends.  Results land in
+``benchmarks/results/engine_fused.json``.
+
+Run directly with ``--smoke`` for CI-sized inputs:
+
+    python -m benchmarks.bench_engine --smoke
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import time
+
+import numpy as np
+
+from benchmarks.common import GEOM, dataset, emit
+from repro.core.session import CostSession, GridCandidate, System
+from repro.core.workload import Workload
+from repro.data.workloads import WorkloadSpec, point_workload, range_workload
+from repro.engine import PriceTable, PricingEngine
+
+RESULTS = pathlib.Path(__file__).parent / "results"
+
+BUDGET = 8 << 20
+N_KNOBS = 16
+CAPS_PER_KNOB = 640          # 16 x 640 = 10_240 cells, every run
+POLICY = "lfu"               # the heaviest kernel branch (sorts + coverage)
+REPEATS = 3
+GATE_SPEEDUP = 2.0
+
+
+def _table(sess: CostSession, keys: np.ndarray, nq: int,
+           seed: int) -> PriceTable:
+    n = len(keys)
+    qk, qpos = point_workload(keys, nq, WorkloadSpec("w4", seed=seed))
+    _, _, rlop, rhip = range_workload(keys, max(nq // 4, 64),
+                                      WorkloadSpec("w1", seed=seed + 1), 64)
+    wl = Workload.mixed(Workload.point(qpos, n=n),
+                        Workload.sorted_stream(np.sort(rlop), np.sort(rhip),
+                                               n=n))
+    eps_grid = np.unique(np.geomspace(4, 512, N_KNOBS).astype(int))
+    cands = [GridCandidate(int(e), 65_536.0, eps=int(e)) for e in eps_grid]
+    prof = sess.grid_profiles(cands, wl)
+    cells = []
+    for i, kn in enumerate(prof.knobs):
+        caps = np.unique(np.geomspace(
+            1, max(int(prof.caps[i]), 2), CAPS_PER_KNOB).astype(np.int64))
+        caps = np.concatenate([caps, np.arange(1, CAPS_PER_KNOB
+                                               - caps.shape[0] + 1)
+                               + caps.max()])       # exactly CAPS_PER_KNOB
+        cells.append((kn, i, caps[:CAPS_PER_KNOB]))
+    return PriceTable.from_cells(prof, cells)
+
+
+def _time(fn, repeats: int = REPEATS) -> float:
+    fn()                                            # warm (jit compile)
+    best = np.inf
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def run(smoke: bool = False, seed: int = 0) -> dict:
+    import jax
+
+    n, nq = (40_000, 8_000) if smoke else (200_000, 40_000)
+    keys = dataset("books", n)
+    sess = CostSession(System(GEOM, memory_budget_bytes=BUDGET,
+                              policy=POLICY))
+    tab = _table(sess, keys, nq, seed)
+    assert len(tab) >= 10_000, len(tab)
+    eng = PricingEngine(sess)
+
+    sol_h = eng.price(tab, executor="host")
+    sol_d = eng.price(tab, executor="device")
+    dh = float(np.max(np.abs(sol_h.hit_rates - sol_d.hit_rates)))
+    equivalent = dh < 2e-6 and np.array_equal(sol_h.distinct, sol_d.distinct)
+    winner_ok = bool(np.isclose(sol_h.objective[sol_d.best_cell],
+                                sol_h.objective[sol_h.best_cell],
+                                rtol=1e-5, atol=1e-12))
+
+    host_s = _time(lambda: eng.price(tab, executor="host"))
+    device_s = _time(lambda: eng.price(tab, executor="device"))
+    speedup = host_s / device_s
+    on_tpu = jax.default_backend() == "tpu"
+
+    record = {
+        "cells": len(tab), "rows": int(len(tab.profiles.knobs)),
+        "caps_per_knob": CAPS_PER_KNOB, "n": n, "queries": nq,
+        "policy": POLICY, "backend": jax.default_backend(),
+        "fused_timed": on_tpu,          # interpret timings are meaningless
+        "host_seconds_warm": host_s, "device_seconds_warm": device_s,
+        "device_over_host_speedup": speedup,
+        "max_abs_hit_rate_diff": dh, "smoke": smoke,
+        "gates": {
+            "float32_equivalent": bool(equivalent),
+            "winner_agrees": winner_ok,
+            f"fused_{GATE_SPEEDUP}x_warm": (bool(speedup >= GATE_SPEEDUP)
+                                            if on_tpu else None),
+        },
+    }
+    RESULTS.mkdir(exist_ok=True)
+    out = RESULTS / "engine_fused.json"
+    out.write_text(json.dumps(record, indent=2, default=float))
+    emit("engine/host", 1e6 * host_s, f"{len(tab)} cells warm")
+    emit("engine/device", 1e6 * device_s,
+         f"speedup={speedup:.2f}x dh={dh:.1e} "
+         f"({'timed' if on_tpu else 'interpret: structure-only'}) -> {out}")
+
+    assert equivalent, f"executors diverge: max |dh| = {dh}"
+    assert winner_ok, "fused argmin disagrees with the host winner"
+    if on_tpu:
+        assert speedup >= GATE_SPEEDUP, (
+            f"fused executor only {speedup:.2f}x over host "
+            f"(< {GATE_SPEEDUP}x) on {len(tab)} cells")
+    return record
+
+
+def main(argv=None):
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized inputs (~seconds)")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+    run(smoke=args.smoke, seed=args.seed)
+
+
+if __name__ == "__main__":
+    main()

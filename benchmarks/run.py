@@ -17,6 +17,7 @@ _SMOKE_KWARGS = {
     "n_queries": 20_000,
     "n_outer": 5_000,
     "n_pages": 50_000,
+    "smoke": True,
 }
 
 
@@ -28,12 +29,13 @@ def main() -> None:
                     help="CI-sized inputs (~10x below the CPU default)")
     args = ap.parse_args()
 
-    from benchmarks import (bench_covariance, bench_estimate_grid,
-                            bench_fetch_strategy, bench_io_size, bench_join,
-                            bench_kernels, bench_kv_planner,
-                            bench_pgm_tuning_curve, bench_point_accuracy,
-                            bench_range_accuracy, bench_rmi_tuning_curve,
-                            bench_tuning_e2e)
+    from benchmarks import (bench_covariance, bench_engine,
+                            bench_estimate_grid, bench_fetch_strategy,
+                            bench_io_size, bench_join, bench_kernels,
+                            bench_kv_planner, bench_pgm_tuning_curve,
+                            bench_point_accuracy, bench_range_accuracy,
+                            bench_rmi_tuning_curve, bench_serving_drift,
+                            bench_sharding, bench_tuning_e2e)
 
     table = {
         "point_accuracy": bench_point_accuracy.run,     # Table IV / Fig 1
@@ -48,6 +50,9 @@ def main() -> None:
         "kernels": bench_kernels.run,                   # che_solver kernel
         "kv_planner": bench_kv_planner.run,             # beyond-paper (Eq.15 serving)
         "estimate_grid": bench_estimate_grid.run,       # CostSession grid vs loop
+        "serving_drift": bench_serving_drift.run,       # adaptive vs static
+        "sharding": bench_sharding.run,                 # solved vs even split
+        "engine": bench_engine.run,                     # fused executor vs host
     }
     names = args.only or list(table)
     print("name,us_per_call,derived")

@@ -11,9 +11,11 @@
 # the mixed-eps-kernel speedup to benchmarks/results/tuning_e2e.json),
 # the join planner (incl. the join-tree budget-split section), the
 # serving drift loop (adaptive-vs-static gates recorded to
-# benchmarks/results/serving_drift.json), and the sharded fleet search
+# benchmarks/results/serving_drift.json), the sharded fleet search
 # (solved-boundaries-vs-even-split gates recorded to
-# benchmarks/results/sharding.json), verifies that every results JSON the
+# benchmarks/results/sharding.json), and the pricing-engine executor pair
+# (fused-kernel-vs-host equivalence/speed gates recorded to
+# benchmarks/results/engine_fused.json), verifies that every results JSON the
 # workflow uploads actually got written (catches silently-skipped smoke
 # sections), and finally runs EVERY example script in --smoke mode so the
 # README quickstarts stay executable.
@@ -34,11 +36,12 @@ python -m benchmarks.bench_tuning_e2e --smoke
 python -m benchmarks.bench_join --smoke
 python -m benchmarks.bench_serving_drift --smoke
 python -m benchmarks.bench_sharding --smoke
+python -m benchmarks.bench_engine --smoke
 
 # every results JSON named in .github/workflows/ci.yml must exist after the
 # bench step — a missing file means a smoke section silently skipped
 for f in estimate_grid join_partition join_tree tuning_e2e serving_drift \
-         sharding; do
+         sharding engine_fused; do
     if [ ! -f "benchmarks/results/$f.json" ]; then
         echo "MISSING benchmark result: benchmarks/results/$f.json" >&2
         exit 1

@@ -60,6 +60,29 @@ RECENCY_POLICIES = ("lru", "fifo")
 
 _BISECT_ITERS = 64  # float32 bisection converges long before this
 
+#: Largest capacity the exact compare path represents (int32).  Saturating
+#: here is lossless for regime dispatch: every distinct-page count is far
+#: below it, so any saturated capacity is already in the compulsory regime.
+_CAP_MAX = 2**31 - 129
+
+
+def _exact_caps(values) -> jnp.ndarray:
+    """Integer-exact page counts for regime compares.
+
+    float32 represents integers exactly only up to 2^24 (a 64 GiB pool at
+    4 KiB pages), so ``capacity >= n_distinct``-style compares on float32
+    capacities can flip on the rounded value.  Integer inputs pass through
+    as int32 (exact to 2^31 pages); float inputs floor — for an integral
+    threshold ``floor(c) >= n`` iff ``c >= n`` and ``floor(c) < n`` iff
+    ``c < n`` — so float callers keep their semantics while integer callers
+    gain exact compares.  Saturates at ``_CAP_MAX`` to keep the float→int
+    conversion defined.
+    """
+    arr = jnp.asarray(values)
+    if jnp.issubdtype(arr.dtype, jnp.integer):
+        return jnp.minimum(arr.astype(jnp.int32), jnp.int32(_CAP_MAX))
+    return jnp.clip(jnp.floor(arr), -1.0, float(_CAP_MAX)).astype(jnp.int32)
+
 
 def _bisect(f, lo: jnp.ndarray, hi: jnp.ndarray, iters: int = _BISECT_ITERS):
     """Fixed-iteration bisection for a monotone-increasing scalar objective."""
@@ -166,7 +189,9 @@ def hit_rate_lfu(probs: jnp.ndarray, capacity) -> jnp.ndarray:
     order = jnp.argsort(-probs)
     sorted_p = probs[order]
     ranks = jnp.arange(sorted_p.shape[0])
-    mask = ranks < jnp.asarray(capacity, ranks.dtype)
+    # clip before the int cast so huge float capacities stay well-defined
+    cap = jnp.clip(jnp.asarray(capacity), 0, sorted_p.shape[0])
+    mask = ranks < cap.astype(ranks.dtype)
     return jnp.sum(jnp.where(mask, sorted_p, 0.0))
 
 
@@ -227,7 +252,8 @@ def _freq_misses_from_prefix(prefix, r, n, capacity, pinned_retouches):
     (``prefix[k-1]`` = mass of the k most-covered pages) — the O(P log P)
     sort is hoisted here so a knob grid over one shared stream pays it
     once, not once per candidate."""
-    cap = jnp.clip(jnp.asarray(capacity, jnp.int32), 0, prefix.shape[0])
+    # clip before the int cast so huge float capacities stay well-defined
+    cap = jnp.clip(jnp.asarray(capacity), 0, prefix.shape[0]).astype(jnp.int32)
     topc = jnp.where(cap > 0, prefix[jnp.maximum(cap - 1, 0)], 0.0)
     steady = r - topc
     pinned = r - jnp.asarray(pinned_retouches, jnp.float32)
@@ -337,7 +363,10 @@ def sorted_scan_hit_rate_grid(
     """
     r = jnp.asarray(total_refs, jnp.float32)
     n = jnp.asarray(distinct_pages, jnp.float32)
-    cap = jnp.asarray(capacities, jnp.float32)
+    # Regime dispatch compares in exact integer arithmetic (float32 rounds
+    # page counts above 2^24); float32 stays for the miss-count values.
+    cap_i = _exact_caps(capacities)
+    n_i = _exact_caps(distinct_pages)
     if policy in RECENCY_POLICIES:
         miss = n
     else:
@@ -347,13 +376,12 @@ def sorted_scan_hit_rate_grid(
             prefix = jnp.cumsum(-jnp.sort(-cov))
             freq = jax.vmap(
                 lambda rr, nn, cc, ss: _freq_misses_from_prefix(
-                    prefix, rr, nn, cc, ss))(r, n, cap, pinned)
+                    prefix, rr, nn, cc, ss))(r, n, cap_i, pinned)
         else:
-            freq = jax.vmap(_sorted_scan_misses_freq)(cov, cap, pinned)
-        miss = jnp.where(cap >= n, n, freq)
+            freq = jax.vmap(_sorted_scan_misses_freq)(cov, cap_i, pinned)
+        miss = jnp.where(cap_i >= n_i, n, freq)
     thrash = jnp.clip(r - jnp.asarray(pinned_retouches, jnp.float32), n, r)
-    miss = jnp.where(cap < jnp.asarray(min_capacities, jnp.float32),
-                     thrash, miss)
+    miss = jnp.where(cap_i < _exact_caps(min_capacities), thrash, miss)
     return jnp.where(r > 0, (r - miss) / jnp.maximum(r, 1.0), 0.0)
 
 
@@ -381,12 +409,13 @@ def sorted_scan_miss_curve(
 
     Returns a (K,) miss vector aligned with ``capacities``.
     """
-    caps = jnp.asarray(capacities, jnp.float32)
+    caps = jnp.asarray(capacities)   # integer dtypes keep exact compares
+    caps_f = caps.astype(jnp.float32)
     r = float(total_refs)
     if r <= 0.0:
-        return jnp.zeros_like(caps)
+        return jnp.zeros_like(caps_f)
     if policy not in RECENCY_POLICIES and coverage is not None:
-        ones = jnp.ones_like(caps)
+        ones = jnp.ones_like(caps_f)
         h = sorted_scan_hit_rate_grid(
             policy, jnp.asarray(coverage, jnp.float32), r * ones,
             float(distinct_pages) * ones, float(pinned_retouches) * ones,
@@ -394,9 +423,9 @@ def sorted_scan_miss_curve(
         return (1.0 - h) * r
     # Recency policies (and coverage-less profiles) price through the
     # compulsory closed form; only the thrash edge depends on capacity.
-    miss = jnp.full_like(caps, float(distinct_pages))
+    miss = jnp.full_like(caps_f, float(distinct_pages))
     thrash = min(max(r - float(pinned_retouches), float(distinct_pages)), r)
-    return jnp.where(caps < float(min_capacity), thrash, miss)
+    return jnp.where(_exact_caps(caps) < int(min_capacity), thrash, miss)
 
 
 def hit_rate_curve(
@@ -416,9 +445,9 @@ def hit_rate_curve(
 
     Returns a (K,) hit-rate vector aligned with ``capacities``.
     """
-    caps = jnp.asarray(capacities, jnp.float32)
+    caps = jnp.asarray(capacities)   # integer dtypes keep exact compares
     counts = jnp.asarray(counts, jnp.float32)
-    ones = jnp.ones_like(caps)
+    ones = jnp.ones(caps.shape, jnp.float32)
     h, _ = hit_rate_grid(
         policy, jnp.broadcast_to(counts, caps.shape + counts.shape),
         float(sample_refs) * ones, float(full_refs) * ones, caps)
@@ -527,12 +556,17 @@ def hit_rate_grid(
     else:
         raise ValueError(f"unknown policy {policy!r}; expected one of {POLICIES}")
     probs = counts / jnp.maximum(sample_refs[:, None], 1e-30)
-    n_distinct = jnp.sum(counts > 0, axis=1).astype(jnp.float32)
-    cap = capacities.astype(jnp.float32)
-    h_policy = jax.vmap(lambda p, c: fn(p, jnp.maximum(c, 1.0)))(probs, cap)
+    n_distinct_i = jnp.sum(counts > 0, axis=1)
+    n_distinct = n_distinct_i.astype(jnp.float32)
+    cap_f = capacities.astype(jnp.float32)
+    # exact integer compares for the regime dispatch (float32 rounds page
+    # counts above 2^24); the fixed-point solve itself stays float32 — it
+    # only runs below n_distinct, far under the rounding threshold.
+    cap_i = _exact_caps(capacities)
+    h_policy = jax.vmap(lambda p, c: fn(p, jnp.maximum(c, 1.0)))(probs, cap_f)
     h_comp = hit_rate_compulsory(full_refs, n_distinct)
-    h = jnp.where(cap >= n_distinct, h_comp, h_policy)
-    h = jnp.where(cap < 1.0, 0.0, h)
+    h = jnp.where(cap_i >= n_distinct_i, h_comp, h_policy)
+    h = jnp.where(cap_i < 1, 0.0, h)
     h = jnp.where(jnp.asarray(sample_refs, jnp.float32) > 0, h, 0.0)
     if sorted_coverage is None:
         return h, n_distinct

@@ -269,6 +269,17 @@ def _compulsory_coverage(sp: SortedScanPart, num_pages: int) -> jnp.ndarray:
         jnp.float32(sp.total_refs))
 
 
+def _exact_cap_array(values) -> jnp.ndarray:
+    """int32 page-count vector, saturating at 2^31-129 pages (≈8 TiB pools
+    at 4 KiB pages).  float32 rounds integers above 2^24, which can flip the
+    ``cap >= n_distinct`` compulsory-branch compare in ``hit_rate_grid``;
+    int32 keeps the compare exact, and any saturated capacity is already
+    deep in the compulsory regime so the clamp is lossless.
+    """
+    arr = np.floor(np.asarray(values, np.float64))
+    return jnp.asarray(np.clip(arr, -1, 2**31 - 129).astype(np.int32))
+
+
 def _stack_or_share(coverages: Sequence[jnp.ndarray]) -> jnp.ndarray:
     """One (P,) row when every candidate references the SAME stream object
     (uniform-eps grids: sorted windows are eps-independent), else a stacked
@@ -497,6 +508,16 @@ class CostSession:
     def __init__(self, system: System):
         self.system = system
         self._sample_cache: Dict[tuple, tuple] = {}
+        self._engine = None
+
+    @property
+    def engine(self):
+        """The session's :class:`~repro.engine.table.PricingEngine` —
+        lazily built (the engine layer imports this module)."""
+        if self._engine is None:
+            from repro.engine import PricingEngine
+            self._engine = PricingEngine(self)
+        return self._engine
 
     # ------------------------------------------------------------------ single
     def estimate(self, index: IndexModel, workload: Workload,
@@ -535,7 +556,10 @@ class CostSession:
         if wl.kind == SORTED:
             return self._sorted_grid(feasible, skipped, wl, t0)
         prof = self._profile_batch(feasible, wl, skipped, batch_mixed_eps)
-        h, n_distinct = self.solve_profiles(prof, prof.caps)
+        from repro.engine import PriceTable
+        sol = self.engine.price(PriceTable.max_capacity(
+            prof, self.system.memory_budget_bytes))
+        h, n_distinct = sol.hit_rates, sol.distinct
 
         elapsed = time.perf_counter() - t0
         per = elapsed / max(len(prof.knobs), 1)
@@ -648,7 +672,7 @@ class CostSession:
                   else profiles.counts[jnp.asarray(idx)])
         sample_refs = jnp.asarray(profiles.totals[idx], jnp.float32)
         full_refs = sample_refs * profiles.scale
-        caps_arr = jnp.asarray(np.asarray(capacities, np.float64), jnp.float32)
+        caps_arr = _exact_cap_array(capacities)
         num_pages = int(profiles.counts.shape[1])
         sparts = [profiles.sparts[i] for i in idx]
         surrogate = {}
@@ -671,12 +695,12 @@ class CostSession:
                 sorted_coverage=_stack_or_share(
                     [sp.coverage for sp in sps]),
                 sorted_refs=s_refs,
-                sorted_distinct=jnp.asarray(
-                    [sp.distinct_pages for sp in sps], jnp.float32),
+                sorted_distinct=_exact_cap_array(
+                    [sp.distinct_pages for sp in sps]),
                 sorted_pinned=jnp.asarray(
                     [sp.pinned_retouches for sp in sps], jnp.float32),
-                sorted_min_caps=jnp.asarray(
-                    [sp.min_capacity for sp in sps], jnp.float32),
+                sorted_min_caps=_exact_cap_array(
+                    [sp.min_capacity for sp in sps]),
                 sorted_full_refs=s_refs * profiles.scale)
         else:
             h, n_distinct = cache_models.hit_rate_grid(
@@ -890,13 +914,12 @@ class CostSession:
                 _stack_or_share([sp.coverage for _, sp, _ in batched]),
                 jnp.asarray([sp.total_refs for _, sp, _ in batched],
                             jnp.float32),
-                jnp.asarray([sp.distinct_pages for _, sp, _ in batched],
-                            jnp.float32),
+                _exact_cap_array([sp.distinct_pages for _, sp, _ in batched]),
                 jnp.asarray([sp.pinned_retouches for _, sp, _ in batched],
                             jnp.float32),
-                jnp.asarray([cap for _, _, cap in batched], jnp.float32),
-                jnp.asarray([sp.min_capacity for _, sp, _ in batched],
-                            jnp.float32)), np.float64)
+                _exact_cap_array([cap for _, _, cap in batched]),
+                _exact_cap_array([sp.min_capacity for _, sp, _ in batched])),
+                np.float64)
         hit_rates = {}
         k = 0
         for c, sp, cap in entries:

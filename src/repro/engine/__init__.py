@@ -1,0 +1,23 @@
+"""The pricing engine: one profile -> solve -> argmin pipeline.
+
+Every session (tuning, serving retune, sharded fleet search, join-tree
+cost curves, plain grid estimation) builds a :class:`PriceTable` and hands
+it to a :class:`PricingEngine`; interchangeable executors —
+:class:`~repro.engine.host.HostExecutor` (golden reference) and
+:class:`~repro.engine.device.DeviceExecutor` (fused pallas launch) — do
+the solving.  See ``docs/architecture.md`` ("The pricing engine").
+"""
+from repro.engine.host import HostExecutor
+from repro.engine.table import PriceSolution, PriceTable, PricingEngine
+
+__all__ = ["PriceTable", "PriceSolution", "PricingEngine", "HostExecutor",
+           "DeviceExecutor"]
+
+
+def __getattr__(name):
+    # DeviceExecutor pulls in the pallas kernel stack; keep it lazy so
+    # host-only use never touches kernels at import time.
+    if name == "DeviceExecutor":
+        from repro.engine.device import DeviceExecutor
+        return DeviceExecutor
+    raise AttributeError(name)

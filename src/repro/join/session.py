@@ -40,8 +40,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import cache_models, page_ref
-from repro.core.session import CostSession, PlanCost, System
+from repro.core.session import (CostSession, GridProfiles, PlanCost,
+                                SortedScanPart, System)
 from repro.core.workload import Workload, locate
+from repro.engine import PriceTable
 from repro.index.adapters import wrap_index
 from repro.join.calibrate import calibrate_system
 from repro.join.hybrid import (JoinCostParams, Segment, partition_probes,
@@ -101,10 +103,11 @@ class JoinCostCurve:
     ``plan`` collapses the model to one scalar at one capacity;
     budget-split solvers (:class:`repro.join.tree.JoinTreeSession`) need the
     whole curve so they can trade capacity between competing levels.  All
-    K capacities of one outer stream are priced by exactly two batched
-    model solves — ``cache_models.sorted_scan_miss_curve`` for the sorted
-    point-probe stream and ``cache_models.hit_rate_curve`` for the unsorted
-    INLJ stream — never a per-capacity Python loop or replay.
+    K capacities of one outer stream are priced by ONE
+    :class:`repro.engine.PricingEngine` solve over a two-row
+    :class:`repro.engine.PriceTable` (the sorted point-probe stream and the
+    unsorted INLJ stream, each at every capacity) — never a per-capacity
+    Python loop or replay.
 
     ``seconds[s][k]`` / ``physical_ios[s][k]`` is strategy ``s`` priced at
     ``capacities[k]`` buffer pages.  Curves are non-increasing in capacity
@@ -139,6 +142,102 @@ class ChooseResult:
     @property
     def strategy(self) -> str:
         return self.plan.strategy
+
+
+@dataclasses.dataclass(frozen=True)
+class _CurveState:
+    """Capacity-independent statistics of ONE outer stream — the profiling
+    half of :meth:`JoinSession.cost_curve`, split from the pricing half so a
+    join tree can batch every level's streams into ONE engine solve."""
+
+    n: int                                 # probe count
+    refs: float                            # total window page references
+    span: int                              # coalesced range-scan span (pages)
+    min_cap: int                           # Thm III.1 capacity premise
+    sorted_part: SortedScanPart            # (R, N, coverage, pinned)
+    num_pages: int                         # inner relation's page count
+    page_lo: np.ndarray                    # sorted probe windows (for the
+    page_hi: np.ndarray                    # hybrid partitioning)
+    inlj_prof: Optional[object] = None     # PageRefProfile, unsorted stream
+    inlj_scale: float = 1.0                # CAM-x full/sample ratio
+
+    @property
+    def r(self) -> float:
+        return self.sorted_part.total_refs
+
+    @property
+    def nd(self) -> float:
+        return self.sorted_part.distinct_pages
+
+
+def curve_price_table(states, caps: np.ndarray) -> PriceTable:
+    """ONE PriceTable covering every stream's sorted + INLJ curve cells.
+
+    Each ``(label, state)`` contributes up to two GridProfiles rows, each
+    priced at every capacity in ``caps``:
+
+    * ``(label, "sorted")`` — a pure sorted-scan row (empty IRM histogram
+      plus the stream's :class:`SortedScanPart`): the composed
+      ``hit_rate_grid`` collapses to the policy-aware sorted-scan model, so
+      ``(1 - h) * R`` IS the old ``sorted_scan_miss_curve``.
+    * ``(label, "inlj")`` — the unsorted stream's IRM histogram.  CAM-x
+      scales are baked in per row: counts AND totals are both multiplied by
+      the row's own scale, which leaves the IRM probabilities unchanged
+      while the full-volume request mass comes out right under the shared
+      ``scale=1.0`` profile — levels sampled at different rates can still
+      share one GridProfiles (and therefore one engine call).
+    """
+    width = max(st.num_pages for _, st in states)
+
+    def pad(arr):
+        arr = jnp.asarray(arr, jnp.float32)
+        w = int(arr.shape[-1])
+        return arr if w == width else jnp.pad(arr, (0, width - w))
+
+    knobs, counts, totals, dacs, sparts, cells = [], [], [], [], [], []
+    for label, st in states:
+        sp = st.sorted_part
+        if sp.coverage is not None:
+            sp = dataclasses.replace(sp, coverage=pad(sp.coverage))
+        knobs.append((label, "sorted"))
+        counts.append(jnp.zeros((width,), jnp.float32))
+        totals.append(0.0)
+        dacs.append(st.r / max(st.n, 1))
+        sparts.append(sp)
+        cells.append((knobs[-1], len(knobs) - 1, caps))
+        if st.inlj_prof is not None:
+            s = np.float32(st.inlj_scale)
+            knobs.append((label, "inlj"))
+            counts.append(pad(st.inlj_prof.counts) * s)
+            totals.append(float(st.inlj_prof.total_refs) * float(s))
+            dacs.append(float(st.inlj_prof.expected_dac))
+            sparts.append(None)
+            cells.append((knobs[-1], len(knobs) - 1, caps))
+    k = len(knobs)
+    profiles = GridProfiles(
+        knobs=tuple(knobs), counts=jnp.stack(counts),
+        totals=np.asarray(totals, np.float64),
+        dacs=np.asarray(dacs, np.float64), sizes=np.zeros(k, np.float64),
+        caps=np.full(k, int(np.max(caps)), np.int64), sparts=tuple(sparts),
+        skipped=(), scale=1.0, n_queries=sum(st.n for _, st in states))
+    return PriceTable.from_cells(profiles, cells)
+
+
+def _stream_curves(sol, label, st: _CurveState,
+                   caps: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+    """Read one stream's (sorted miss curve, INLJ I/O curve) back out of
+    the engine solution by its span keys."""
+    a, b = sol.table.spans[(label, "sorted")]
+    miss_curve = (1.0 - sol.hit_rates[a:b]) * st.r
+    if st.inlj_prof is None:
+        # No key file to locate against: every probe window priced cold
+        # (upper bound, biased against INLJ — as _inlj_misses).
+        io_inlj = np.full(caps.shape, st.refs)
+    else:
+        a, b = sol.table.spans[(label, "inlj")]
+        io_inlj = ((1.0 - sol.hit_rates[a:b])
+                   * st.inlj_prof.expected_dac * st.n)
+    return miss_curve, io_inlj
 
 
 def _union_size(page_lo: np.ndarray, page_hi: np.ndarray) -> int:
@@ -289,11 +388,11 @@ class JoinSession:
         """Predicted cost of every strategy across a capacity vector.
 
         The curve form of :meth:`plan`'s scalar prediction, for budget-split
-        solvers: all K capacities price through exactly TWO batched model
-        solves — the policy-aware ``cache_models.sorted_scan_miss_curve``
-        for the sorted point-probe stream (shared by point-only and the
-        hybrid's point segments) and ``cache_models.hit_rate_curve`` for the
-        unsorted INLJ stream — with no per-capacity Python loop or replay.
+        solvers: all K capacities of both model streams — the policy-aware
+        sorted point-probe stream (shared by point-only and the hybrid's
+        point segments) and the unsorted INLJ stream — price through ONE
+        ``engine.price`` call over a :func:`curve_price_table`, with no
+        per-capacity Python loop or replay.
 
         Capacity enters the hybrid's *partitioning* only through the thrash
         flag and the LFU miss scale, so the curve partitions once at the
@@ -306,27 +405,51 @@ class JoinSession:
         caps = np.atleast_1d(np.asarray(capacities, np.int64))
         if caps.size == 0 or (caps < 1).any():
             raise ValueError("capacities must be >= 1 buffer page")
-        outer_keys = self._outer_keys(outer)
         p = params or self.params
+        st = self._curve_state(outer, sample_rate)
+        sol = self._cost_session.engine.price(
+            curve_price_table([("outer", st)], caps))
+        miss_curve, io_inlj = _stream_curves(sol, "outer", st, caps)
+        return self._curve_from_solution(st, caps, miss_curve, io_inlj,
+                                         n_min, k_max, gamma, p)
+
+    def _curve_state(self, outer: Union[np.ndarray, Workload],
+                     sample_rate: float = 1.0) -> _CurveState:
+        """Profile the outer stream once, independent of capacity: sorted
+        probe-window statistics plus the unsorted stream's IRM profile."""
+        outer_keys = self._outer_keys(outer)
         probe = np.sort(outer_keys)
         plo, phi = self.inner.probe_windows(probe, self.system.geom)
         widths = phi - plo + 1
         n = probe.shape[0]
-        refs = float(widths.sum())
         typical_w = int(np.quantile(widths, 0.99)) if widths.size else 0
-        min_cap = typical_w + 1
         r, nd, coverage, pinned = page_ref.sorted_workload_stats(
             jnp.asarray(plo), jnp.asarray(phi), self.num_pages)
-        nd = float(nd)
-        # ONE vmapped solve: policy-aware sorted-stream misses at every
-        # candidate capacity (thrash below the Thm III.1 premise, compulsory
-        # N under recency eviction, frequency-aware closed form under LFU).
-        miss_curve = np.asarray(cache_models.sorted_scan_miss_curve(
-            self.system.policy, caps, total_refs=float(r),
-            distinct_pages=nd, coverage=coverage,
-            pinned_retouches=float(pinned), min_capacity=min_cap),
-            np.float64)
+        spart = SortedScanPart(float(r), float(nd), typical_w + 1,
+                               coverage, float(pinned))
+        prof, scale = None, 1.0
+        if self.inner_keys is not None:
+            wl = Workload.point(locate(self.inner_keys, outer_keys),
+                                n=self.inner.n, query_keys=outer_keys)
+            if sample_rate < 1.0:
+                wl = wl.sample(sample_rate)
+            prof = self.inner.page_ref_profile(wl, self.system.geom)
+            scale = float(wl.scale)
+        return _CurveState(
+            n=n, refs=float(widths.sum()),
+            span=(int(phi.max()) - int(plo.min()) + 1) if n else 0,
+            min_cap=typical_w + 1, sorted_part=spart,
+            num_pages=self.num_pages, page_lo=plo, page_hi=phi,
+            inlj_prof=prof, inlj_scale=scale)
 
+    def _curve_from_solution(self, st: _CurveState, caps: np.ndarray,
+                             miss_curve: np.ndarray, io_inlj: np.ndarray,
+                             n_min: int, k_max: int, gamma: float,
+                             p: JoinCostParams) -> JoinCostCurve:
+        """Assemble the four strategy curves from the solved miss curves —
+        pure Eq. 17 arithmetic, every model solve already behind the
+        engine call that produced ``miss_curve`` / ``io_inlj``."""
+        n, r, nd = st.n, st.r, st.nd
         seconds: Dict[str, np.ndarray] = {}
         ios: Dict[str, np.ndarray] = {}
         sort_s = n * p.sort_per_key
@@ -337,26 +460,12 @@ class JoinSession:
         ios["point-only"] = miss_curve.copy()
 
         # range-only: one coalesced scan — capacity-independent.
-        span = (int(phi.max()) - int(plo.min()) + 1) if n else 0
-        sec_r = (sort_s + p.eta + (p.beta + p.lambda_range) * span
+        sec_r = (sort_s + p.eta + (p.beta + p.lambda_range) * st.span
                  + 0.25 * p.alpha * n)
         seconds["range-only"] = np.full(caps.shape, sec_r)
-        ios["range-only"] = np.full(caps.shape, float(span))
+        ios["range-only"] = np.full(caps.shape, float(st.span))
 
-        # inlj: IRM hit-rate curve of the unsorted stream (ONE vmapped
-        # lockstep bisection across the capacity grid).
-        if self.inner_keys is None:
-            io_inlj = np.full(caps.shape, refs)
-        else:
-            wl = Workload.point(locate(self.inner_keys, outer_keys),
-                                n=self.inner.n, query_keys=outer_keys)
-            if sample_rate < 1.0:
-                wl = wl.sample(sample_rate)
-            prof = self.inner.page_ref_profile(wl, self.system.geom)
-            h = np.asarray(cache_models.hit_rate_curve(
-                self.system.policy, prof.counts, prof.total_refs,
-                prof.total_refs * wl.scale, caps), np.float64)
-            io_inlj = (1.0 - h) * prof.expected_dac * n
+        # inlj: IRM hit-rate curve of the unsorted stream.
         seconds["inlj"] = p.delta + p.alpha * n + p.lambda_point * io_inlj
         ios["inlj"] = io_inlj
 
@@ -367,13 +476,13 @@ class JoinSession:
         # _policy_miss_scale would solve for), not re-solved.
         k_ref = int(np.argmax(caps))
         ref_cap = int(caps[k_ref])
-        scale_ref = (1.0 if ref_cap < min_cap
+        scale_ref = (1.0 if ref_cap < st.min_cap
                      else max(1.0, float(miss_curve[k_ref]) / max(nd, 1.0)))
         p_eff = (p if scale_ref == 1.0 else dataclasses.replace(
             p, lambda_point=p.lambda_point * scale_ref))
-        segments = partition_probes(plo, phi, p_eff, n_min=n_min,
-                                    k_max=k_max, gamma=gamma,
-                                    thrash=ref_cap < min_cap)
+        segments = partition_probes(st.page_lo, st.page_hi, p_eff,
+                                    n_min=n_min, k_max=k_max, gamma=gamma,
+                                    thrash=ref_cap < st.min_cap)
         pt = [s for s in segments if not s.use_range]
         rg = [s for s in segments if s.use_range]
         d_pt = float(sum(s.distinct_pages for s in pt))

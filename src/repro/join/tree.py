@@ -11,11 +11,12 @@ problem:
 * ``plan``    — derive each level's probe stream by threading match keys
   level-to-level (the locate-once discipline: key containment is a CPU
   operation on resident key files, only page fetches cost I/O), price every
-  level's four strategies across the whole candidate-capacity grid with
-  :meth:`repro.join.session.JoinSession.cost_curve` (two batched model
-  solves per level — ``sorted_scan_miss_curve`` + ``hit_rate_curve`` — no
-  per-split Python loop), then pick the budget split by enumerating the
-  fraction simplex over the precomputed curve tables (pure array lookups).
+  level's four strategies across the whole candidate-capacity grid through
+  ONE :class:`repro.engine.PricingEngine` solve (every level's sorted and
+  INLJ streams at every candidate capacity batched into a single
+  :func:`repro.join.session.curve_price_table` — no per-level or per-split
+  model call), then pick the budget split by enumerating the fraction
+  simplex over the precomputed curve tables (pure array lookups).
 * ``choose``  — the per-level strategy falls out of the same tables: at the
   chosen split each level takes the strategy minimizing its composed
   Eq. 17 cost at its capacity slice.
@@ -36,12 +37,13 @@ from typing import Callable, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
-from repro.core.session import PlanCost, System
+from repro.core.session import CostSession, PlanCost, System
 from repro.core.workload import Workload
 from repro.index.adapters import wrap_index
 from repro.join.hybrid import JoinCostParams
 from repro.join.session import (STRATEGIES, JoinCostCurve, JoinPlan,
-                                JoinSession, JoinStats)
+                                JoinSession, JoinStats, _stream_curves,
+                                curve_price_table)
 from repro.sim.machine import MachineParams
 
 __all__ = ["TreePlan", "TreeStats", "JoinTreeSession"]
@@ -156,6 +158,10 @@ class JoinTreeSession:
                         inner_keys=np.asarray(keys), machine=machine,
                         params=params)
             for w, keys in zip(wrapped, inner_keys))
+        # The tree's own pricing surface: plan() batches EVERY level's curve
+        # cells into one PriceTable and solves them through this session's
+        # engine in a single call.
+        self._cost_session = CostSession(system)
 
     @property
     def n_levels(self) -> int:
@@ -200,11 +206,13 @@ class JoinTreeSession:
         ``grid`` is the split resolution: candidate fractions are j/grid,
         and the solver enumerates every composition of ``grid`` shares into
         ``n_levels`` positive parts.  The expensive part — every level's
-        four-strategy cost at every candidate capacity — is precomputed by
-        :meth:`JoinSession.cost_curve` (two batched cache-model solves per
-        level); the simplex enumeration is then pure array arithmetic over
-        those tables.  ``objective`` ranks splits by predicted ``"seconds"``
-        (Eq. 17) or predicted physical ``"io"``.
+        four-strategy cost at every candidate capacity — prices through
+        ONE engine call: each level's capacity-independent stream profile
+        (:meth:`JoinSession._curve_state`) becomes two PriceTable rows, the
+        whole fleet of (level x stream x capacity) cells solves as a single
+        batched table, and the simplex enumeration is then pure array
+        arithmetic over the resulting curves.  ``objective`` ranks splits
+        by predicted ``"seconds"`` (Eq. 17) or predicted physical ``"io"``.
         """
         n_levels = self.n_levels
         if grid < n_levels:
@@ -231,13 +239,23 @@ class JoinTreeSession:
         shares = np.arange(1, n_shares + 1)
         caps = ((shares * self.pool_pages) // grid).astype(np.int64)
 
+        if (caps < 1).any():
+            raise ValueError("capacities must be >= 1 buffer page")
+        # ONE solve for the whole tree: every level's sorted + INLJ stream
+        # at every candidate capacity, batched into a single PriceTable.
+        states = [sess._curve_state(streams[lvl], sample_rate)
+                  for lvl, sess in enumerate(self.sessions)]
+        sol = self._cost_session.engine.price(
+            curve_price_table(list(enumerate(states)), caps))
+
         curves: list[JoinCostCurve] = []
         cost_tab = np.empty((n_levels, n_shares))
         strat_tab = np.empty((n_levels, n_shares), np.int64)
         for lvl, sess in enumerate(self.sessions):
-            curve = sess.cost_curve(streams[lvl], caps, n_min=n_min,
-                                    k_max=k_max, gamma=gamma, params=params,
-                                    sample_rate=sample_rate)
+            miss_curve, io_inlj = _stream_curves(sol, lvl, states[lvl], caps)
+            curve = sess._curve_from_solution(
+                states[lvl], caps, miss_curve, io_inlj, n_min, k_max, gamma,
+                params)
             curves.append(curve)
             table = curve.seconds if objective == "seconds" \
                 else curve.physical_ios

@@ -1,0 +1,217 @@
+"""Fused PriceTable solve: policy fixed point + sorted/mixed composition +
+objective argmin in ONE pallas launch (the DeviceExecutor hot path).
+
+Generalizes ``che_solver.py``'s K-candidates-per-HBM-pass idiom from one
+histogram x K characteristic times to K histograms x C capacities: each
+grid program loads ONE profile row's popularity histogram into VMEM and
+prices ALL of that row's table cells against it — the Che/Fricker
+bisection (or the LFU top-C mass) runs lockstep over the row's C
+capacities as (C, P) VPU work on the resident block, the policy-aware
+sorted-scan model and the mixed composition of
+``cache_models.hit_rate_grid`` apply in place, and each program folds its
+row's objective minimum into a revisited (1, 1) accumulator tile with a
+lowest-cell-id tie-break.  A (knob x split x capacity) table therefore
+prices in a single launch — one HBM pass over the histograms, no
+per-stage XLA round trips.
+
+Semantics mirror ``cache_models.hit_rate_grid`` branch for branch
+(compulsory closed form where ``cap >= N`` in exact int32 compares, zero
+below one page, thrash/frequency/compulsory sorted regimes, expected-miss
+composition); equivalence is float32-tolerance only (summation order),
+pinned by tests/test_engine.py against the host executor.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels._compat import CompilerParams as _CompilerParams
+
+__all__ = ["price_grid", "PAD_ID"]
+
+_LANES = 128
+#: Cell id marking a padded (row, slot) cell; valid ids are always below it.
+PAD_ID = 2**31 - 1
+
+_F32_COLS = 16   # packed per-row float32 scalars (see _price_kernel)
+_I32_COLS = 8    # packed per-row int32 scalars
+
+
+def _price_kernel(*refs, policy: str, has_sorted: bool, iters: int,
+                  n_in: int):
+    """One program = one profile row priced at all its C cells.
+
+    Packed scalar columns (one row each per program):
+      f32: 0 sample_refs, 1 full_refs, 2 n_distinct, 3 pmin,
+           4 sorted_refs, 5 sorted_full_refs, 6 sorted_distinct,
+           7 sorted_pinned, 8 objective_scale
+      i32: 0 n_distinct, 1 sorted_distinct, 2 sorted_min_capacity
+    """
+    ins, outs = refs[:n_in], refs[n_in:]
+    it = iter(ins)
+    p = next(it)[...]                                       # (1, P) probs
+    sp = next(it)[...] if policy == "lfu" else None         # (1, P) desc
+    cov = (next(it)[...] if (has_sorted and policy == "lfu")
+           else None)                                       # (1, P) desc
+    f = next(it)[...]                                       # (1, 16) f32
+    z = next(it)[...]                                       # (1, 8) i32
+    caps_f = next(it)[...]                                  # (1, C)
+    caps_i = next(it)[...]                                  # (1, C)
+    ids = next(it)[...]                                     # (1, C)
+    h_ref, bv_ref, bi_ref = outs
+
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        bv_ref[...] = jnp.full_like(bv_ref, jnp.inf)
+        bi_ref[...] = jnp.full_like(bi_ref, jnp.int32(PAD_ID))
+
+    sample_refs, full, n_f, pmin = f[0, 0], f[0, 1], f[0, 2], f[0, 3]
+    n_i = z[0, 0]
+    c_eff = jnp.maximum(caps_f, 1.0)                        # (1, C)
+    c_t = c_eff.T                                           # (C, 1)
+
+    # -- policy fixed point, lockstep over the row's C capacities ----------
+    if policy in ("lru", "fifo"):
+        hi = jnp.maximum(4.0 * c_t / pmin, 1.0)
+        lo = jnp.zeros_like(hi)
+
+        def occ(t):                                         # (C, 1) -> (C, P)
+            if policy == "lru":
+                return -jnp.expm1(-p * t)
+            return p * t / (1.0 - p + p * t)
+
+        def body(_, st):
+            lo, hi = st
+            mid = 0.5 * (lo + hi)
+            val = jnp.sum(occ(mid), axis=1, keepdims=True) - c_t
+            lo = jnp.where(val < 0.0, mid, lo)
+            hi = jnp.where(val < 0.0, hi, mid)
+            return lo, hi
+
+        lo, hi = jax.lax.fori_loop(0, iters, body, (lo, hi))
+        t_c = 0.5 * (lo + hi)
+        h_pol = jnp.sum(p * occ(t_c), axis=1, keepdims=True).T   # (1, C)
+    else:                                                   # lfu: top-C mass
+        iota = jax.lax.broadcasted_iota(jnp.int32, (caps_i.shape[1],
+                                                    p.shape[1]), 1)
+        mask = iota < jnp.maximum(caps_i, 1).T              # (C, P)
+        h_pol = jnp.sum(jnp.where(mask, sp, 0.0), axis=1,
+                        keepdims=True).T
+
+    h_comp = jnp.where(full > 0, (full - n_f) / jnp.maximum(full, 1.0), 0.0)
+    h = jnp.where(caps_i >= n_i, h_comp, h_pol)
+    h = jnp.where(caps_i < 1, 0.0, h)
+    h = jnp.where(sample_refs > 0, h, 0.0)
+
+    # -- sorted-scan model + mixed composition (hit_rate_grid tail) --------
+    if has_sorted:
+        s_r, s_full, s_n, pinned = f[0, 4], f[0, 5], f[0, 6], f[0, 7]
+        s_n_i, s_min_i = z[0, 1], z[0, 2]
+        if policy in ("lru", "fifo"):
+            miss = jnp.zeros_like(caps_f) + s_n
+        else:
+            iota = jax.lax.broadcasted_iota(jnp.int32, (caps_i.shape[1],
+                                                        p.shape[1]), 1)
+            topc = jnp.sum(jnp.where(iota < caps_i.T, cov, 0.0), axis=1,
+                           keepdims=True).T
+            freq = jnp.clip(jnp.minimum(s_r - topc, s_r - pinned), s_n, s_r)
+            miss = jnp.where(caps_i >= s_n_i, s_n, freq)
+        thrash = jnp.clip(s_r - pinned, s_n, s_r)
+        miss = jnp.where(caps_i < s_min_i, thrash, miss)
+        h_s = jnp.where(s_r > 0, (s_r - miss) / jnp.maximum(s_r, 1.0), 0.0)
+        total = full + s_full
+        miss_mix = (1.0 - h) * full + (1.0 - h_s) * s_full
+        h = jnp.where(total > 0, 1.0 - miss_mix / jnp.maximum(total, 1.0),
+                      0.0)
+
+    h_ref[...] = h
+
+    # -- objective + argmin folded into the revisited accumulator tile -----
+    obj = jnp.where(ids < PAD_ID, (1.0 - h) * f[0, 8], jnp.inf)
+    minv = jnp.min(obj)
+    minid = jnp.min(jnp.where(obj == minv, ids, jnp.int32(PAD_ID)))
+    prev_v, prev_i = bv_ref[0, 0], bi_ref[0, 0]
+    better = (minv < prev_v) | ((minv == prev_v) & (minid < prev_i))
+    bv_ref[0, 0] = jnp.where(better, minv, prev_v)
+    bi_ref[0, 0] = jnp.where(better, minid, prev_i)
+
+
+@functools.partial(jax.jit, static_argnames=("policy", "has_sorted",
+                                             "iters", "interpret"))
+def price_grid(policy: str, probs, sorted_probs, cov_desc, f32s, i32s,
+               caps_f, caps_i, ids, *, has_sorted: bool, iters: int = 64,
+               interpret: bool = False):
+    """Price a (K rows x C cells-per-row) padded table in one launch.
+
+    Args:
+      probs: (K, P) float32 request probabilities per profile row.
+      sorted_probs: (K, P) descending-sorted ``probs`` (read iff lfu).
+      cov_desc: (K, P) descending-sorted sorted-scan coverage (read iff
+        lfu AND ``has_sorted``).
+      f32s / i32s: (K, 16) / (K, 8) packed per-row scalars (layout in
+        :func:`_price_kernel`).
+      caps_f / caps_i / ids: (K, C) per-cell capacities (float32 /
+        exact int32) and global cell ids; padded cells carry
+        ``caps_i = -1`` and ``ids = PAD_ID``.
+
+    Returns:
+      (h (K, C) float32, best_val (1, 1) float32, best_id (1, 1) int32) —
+      ``best_id`` is the global objective argmin over valid cells
+      (lowest id on ties, i.e. first cell in table order).
+    """
+    k, p_width = probs.shape
+    c = caps_f.shape[1]
+    pad_p = (-p_width) % _LANES
+    pad_c = (-c) % _LANES
+    if pad_p:
+        probs = jnp.pad(probs, ((0, 0), (0, pad_p)))
+        sorted_probs = jnp.pad(sorted_probs, ((0, 0), (0, pad_p)))
+        cov_desc = jnp.pad(cov_desc, ((0, 0), (0, pad_p)))
+    if pad_c:
+        caps_f = jnp.pad(caps_f, ((0, 0), (0, pad_c)),
+                         constant_values=-1.0)
+        caps_i = jnp.pad(caps_i, ((0, 0), (0, pad_c)), constant_values=-1)
+        ids = jnp.pad(ids, ((0, 0), (0, pad_c)), constant_values=PAD_ID)
+    pp, cc = p_width + pad_p, c + pad_c
+
+    inputs, in_specs = [probs], [pl.BlockSpec((1, pp), lambda i: (i, 0))]
+    if policy == "lfu":
+        inputs.append(sorted_probs)
+        in_specs.append(pl.BlockSpec((1, pp), lambda i: (i, 0)))
+    if has_sorted and policy == "lfu":
+        inputs.append(cov_desc)
+        in_specs.append(pl.BlockSpec((1, pp), lambda i: (i, 0)))
+    inputs += [f32s, i32s, caps_f, caps_i, ids]
+    in_specs += [
+        pl.BlockSpec((1, _F32_COLS), lambda i: (i, 0)),
+        pl.BlockSpec((1, _I32_COLS), lambda i: (i, 0)),
+        pl.BlockSpec((1, cc), lambda i: (i, 0)),
+        pl.BlockSpec((1, cc), lambda i: (i, 0)),
+        pl.BlockSpec((1, cc), lambda i: (i, 0)),
+    ]
+
+    h, best_val, best_id = pl.pallas_call(
+        functools.partial(_price_kernel, policy=policy,
+                          has_sorted=has_sorted, iters=iters,
+                          n_in=len(inputs)),
+        grid=(k,),
+        in_specs=in_specs,
+        out_specs=[
+            pl.BlockSpec((1, cc), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((k, cc), jnp.float32),
+            jax.ShapeDtypeStruct((1, 1), jnp.float32),
+            jax.ShapeDtypeStruct((1, 1), jnp.int32),
+        ],
+        compiler_params=_CompilerParams(dimension_semantics=("arbitrary",)),
+        interpret=interpret,
+    )(*inputs)
+    return h[:, :c], best_val, best_id

@@ -49,6 +49,7 @@ import numpy as np
 
 from repro.core.session import CostSession, SkippedCandidate, System
 from repro.core.workload import Workload
+from repro.engine import PriceTable
 from repro.tuning.session import (CamTuner, IndexBuilder, SizeModel,
                                   SplitTable, TuneResult, TuningSession,
                                   _feasibility_split)
@@ -232,28 +233,24 @@ class ShardingSession:
         M = self.fleet_budget_bytes
         pb = self.node.geom.page_bytes
         tables: Dict[Tuple[int, int], Tuple[SplitTable, int]] = {}
-        rows_parts, caps_parts = [], []
-        offset = 0
+        parts, offset = [], 0
         for key, _c, _wl in groups:
             pts = {(key, kn): pt for kn, pt in points.items()}
-            tab = CamTuner.assemble_table(
+            tab = PriceTable.from_profiles(
                 profiles, pts, splits=self.splits, budget_bytes=M,
                 page_bytes=pb, index_in_split=True,
                 include_max_split=False)
             tables[key] = (tab, offset)
-            rows_parts.append(tab.rows)
-            caps_parts.append(tab.caps)
+            parts.append(tab)
             offset += len(tab)
-        rows = np.concatenate(rows_parts) if rows_parts \
-            else np.zeros(0, np.int64)
-        caps = np.concatenate(caps_parts) if caps_parts \
-            else np.zeros(0, np.int64)
+        fleet_table = PriceTable.concat(parts)
 
-        # ---- ONE solve pass over every cell ------------------------------
-        h, n_distinct = self.cost.solve_profiles(profiles, caps, rows=rows)
-        h = np.asarray(h, np.float64)
-        n_distinct = np.asarray(n_distinct, np.float64)
-        io = (1.0 - h) * profiles.dacs[rows]
+        # ---- ONE engine call prices every cell ---------------------------
+        if len(fleet_table):
+            sol = self.cost.engine.price(fleet_table, objective="io")
+            h, n_distinct, io = sol.hit_rates, sol.distinct, sol.io
+        else:
+            h = n_distinct = io = np.zeros(0, np.float64)
 
         # ---- cost tensor: best knob per (boundary, shard, share) ---------
         B, S = len(bcands), self.n_shards
@@ -313,17 +310,7 @@ class ShardingSession:
             tab, off = tables[key]
             shares = np.round(tab.fracs * self.grid).astype(np.int64)
             sel = np.where(shares == u)[0]
-            knob_of = {}
-            for kn, (a, b) in tab.spans.items():
-                for t in range(a, b):
-                    knob_of[t] = kn
-            sub = SplitTable(
-                rows=tab.rows[sel], caps=tab.caps[sel],
-                fracs=tab.fracs[sel],
-                spans={knob_of[int(t)]: (k, k + 1)
-                       for k, t in enumerate(sel)},
-                points_of={knob_of[int(t)]: tab.points_of[knob_of[int(t)]]
-                           for t in sel})
+            sub = tab.subset(sel)
             tune = tuner.finish_from_solution(
                 tsession, self.builder, self.space, profiles, sub,
                 h[off + sel], n_distinct[off + sel], objective="io",
@@ -347,7 +334,7 @@ class ShardingSession:
             route_stats=routed[best_bi][1],
             boundaries_searched=bcands,
             boundary_totals=tuple(totals_by_boundary),
-            cells_solved=int(rows.shape[0]),
+            cells_solved=len(fleet_table),
             skipped=tuple(skipped),
             solve_seconds=time.perf_counter() - t0)
 

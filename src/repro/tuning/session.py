@@ -50,6 +50,7 @@ from repro.core.cam import CamEstimate
 from repro.core.session import (CostSession, GridCandidate, SkippedCandidate,
                                 System)
 from repro.core.workload import Workload
+from repro.engine import PriceTable
 from repro.index import pgm as pgm_mod
 from repro.index import radixspline as rs_mod
 from repro.index import rmi as rmi_mod
@@ -433,27 +434,10 @@ def builder_for(family: str, keys: np.ndarray, **kwargs) -> IndexBuilder:
 # Results
 # ---------------------------------------------------------------------------
 
-@dataclasses.dataclass(frozen=True)
-class SplitTable:
-    """The assembled (knob x split) solve table — pure arrays, NO model calls.
-
-    One cell per enumerated (knob, buffer-capacity) pair: ``rows[t]`` names
-    the :class:`~repro.core.session.GridProfiles` row cell ``t`` prices,
-    ``caps[t]`` its capacity, ``fracs[t]`` the budget fraction it realizes,
-    and ``spans`` each knob's contiguous ``[a, b)`` cell range.  Tables
-    concatenate (cells are independent), which is how the sharded fleet
-    search solves every (boundary x shard x knob x budget-share) cell of
-    ALL its per-shard tables in ONE ``solve_profiles`` call.
-    """
-
-    rows: np.ndarray
-    caps: np.ndarray
-    fracs: np.ndarray
-    spans: Dict[object, Tuple[int, int]]
-    points_of: Dict[object, Dict[str, object]]
-
-    def __len__(self) -> int:
-        return int(self.rows.shape[0])
+#: The joint (knob x split) solve table IS the engine's canonical table IR
+#: (PR 8 moved it there verbatim); the alias keeps the tuning-era name that
+#: sharding and the test suite grew up with.
+SplitTable = PriceTable
 
 
 class SplitEstimate(NamedTuple):
@@ -606,67 +590,26 @@ class CamTuner:
             profiles, points, splits=session.splits,
             budget_bytes=system.memory_budget_bytes,
             page_bytes=system.geom.page_bytes)
-        # ----- ONE batched solve for the whole table ----------------------
-        h, n_distinct = cost.solve_profiles(profiles, table.caps,
-                                            rows=table.rows)
+        # ----- ONE engine call prices the whole table ---------------------
+        sol = cost.engine.price(
+            table, objective=objective if objective == "seconds" else "io")
         return self.finish_from_solution(
-            session, builder, space, profiles, table, h, n_distinct,
-            objective=objective, size_model=size_model, skipped=skipped,
-            t0=t0)
+            session, builder, space, profiles, table, sol.hit_rates,
+            sol.distinct, objective=objective, size_model=size_model,
+            skipped=skipped, t0=t0)
 
     @staticmethod
     def assemble_table(profiles, points, *, splits, budget_bytes,
                        page_bytes, index_in_split: bool = False,
                        include_max_split: bool = True) -> SplitTable:
-        """The joint (knob x split) table — pure array assembly, NO solves.
-
-        Default semantics (the single-node tuner): each split fraction
-        ``f`` names a BUFFER slice ``floor(f * M / B)`` pages, enumerated
-        per knob when it undercuts that knob's maximal feasible capacity;
-        the maximal split (all memory the index does not claim) is listed
-        first so objective ties resolve toward the larger buffer.
-
-        ``index_in_split=True`` is the fleet semantics the sharded search
-        uses: ``f`` is a shard's share of the FLEET budget and must house
-        the shard's index AND its buffer, so the cell capacity is
-        ``floor((f * M - size) / B)`` — infeasible shares (< 1 page) are
-        dropped rather than clamped.  ``include_max_split=False`` skips
-        the implicit maximal-split row (a fleet shard can never take the
-        whole pool; its candidate shares are exactly ``splits``).
-        """
-        row_of = {kn: i for i, kn in enumerate(profiles.knobs)}
-        rows, caps, fracs, spans = [], [], [], {}
-        points_of = {}
-        for knob, pt in points.items():
-            if knob not in row_of:
-                continue                   # profile-skipped (typed reason)
-            i = row_of[knob]
-            size = float(profiles.sizes[i])
-            cap_max = int(profiles.caps[i])
-            start = len(rows)
-            if include_max_split:
-                # Maximal split first: objective ties resolve to the largest
-                # buffer, reproducing the legacy always-max-split tuners.
-                rows.append(i)
-                caps.append(cap_max)
-                fracs.append((budget_bytes - size) / budget_bytes)
-            for f in splits:
-                if index_in_split:
-                    c = int((f * budget_bytes - size) // page_bytes)
-                    ok = c >= 1 and (not include_max_split or c < cap_max)
-                else:
-                    c = int(f * budget_bytes // page_bytes)
-                    ok = 1 <= c < cap_max  # c >= cap_max: index won't fit
-                if ok:
-                    rows.append(i)
-                    caps.append(c)
-                    fracs.append(f)
-            if len(rows) > start:
-                spans[knob] = (start, len(rows))
-                points_of[knob] = pt
-        return SplitTable(np.asarray(rows, np.int64),
-                          np.asarray(caps, np.int64),
-                          np.asarray(fracs, np.float64), spans, points_of)
+        """The joint (knob x split) table — delegates to
+        :meth:`repro.engine.PriceTable.from_profiles`, where the assembly
+        semantics (max-split-first tie ordering, ``index_in_split`` fleet
+        capacities) now live."""
+        return PriceTable.from_profiles(
+            profiles, points, splits=splits, budget_bytes=budget_bytes,
+            page_bytes=page_bytes, index_in_split=index_in_split,
+            include_max_split=include_max_split)
 
     def finish_from_solution(self, session, builder, space, profiles,
                              table: SplitTable, h, n_distinct, *,

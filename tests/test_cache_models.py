@@ -285,3 +285,24 @@ def test_lemma_iv1_sorted_order_minimizes_misses():
         perm = rng.permutation(len(pos))
         perm_misses = replay.replay_windows(lo[perm], hi[perm], cap, "lru").sum()
         assert perm_misses >= sorted_misses
+
+
+def test_sorted_scan_capacity_compares_exact_above_float32():
+    """Regression: page-count regime compares must be exact above 2^24.
+
+    float32 rounds 2^24 + 1 down to 2^24, so a rounded compare would put a
+    16777216-page buffer AT (not below) a 16777217-page Theorem III.1
+    premise and silently skip the thrash regime at large capacities; the
+    exact int32 compare path must keep the one-page distinction.
+    """
+    r, n = float(2**25), float(2**24)
+    cov = jnp.ones((8,), jnp.float32)           # unused under recency
+    caps = np.array([2**24, 2**24 + 1], np.int64)
+    min_caps = np.full(2, 2**24 + 1, np.int64)
+    for policy in ("lru", "fifo", "lfu"):
+        h = np.asarray(cm.sorted_scan_hit_rate_grid(
+            policy, jnp.broadcast_to(cov, (2, 8)),
+            jnp.full((2,), r), jnp.full((2,), n), jnp.zeros((2,)),
+            jnp.asarray(caps), jnp.asarray(min_caps)))
+        assert h[0] == 0.0, (policy, h)         # one page short: thrash
+        assert h[1] == pytest.approx(0.5), (policy, h)   # at the premise

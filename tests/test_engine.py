@@ -1,0 +1,267 @@
+"""PricingEngine / PriceTable / executor tests.
+
+* Executor golden equivalence: the fused DeviceExecutor (interpret mode off
+  TPU) is float32-equivalent to the HostExecutor — per-cell hit rates,
+  distinct pages and the argmin winner — across 3 policies x 4 workload
+  kinds (point / range / sorted / mixed) and on grouped (sharded-style)
+  profiles.
+* Structural one-engine-call-per-solve: estimate_grid, the tuner's joint
+  (knob x split) search and the join cost curve each run EXACTLY one
+  ``engine.price`` (the tree's single call is pinned in test_join_tree.py,
+  the sharded fleet's in test_sharding.py).
+* Dispatch: explicit executor arg > REPRO_ENGINE_EXECUTOR > engine default;
+  unknown names, empty tables, detached tables and bad objectives raise.
+* PriceTable algebra: concat span offsetting, duplicate-knob and
+  mixed-profiles rejection, subset rehydration.
+"""
+import numpy as np
+import pytest
+
+from repro.core.cam import CamGeometry
+from repro.core.session import CostSession, GridCandidate, System
+from repro.core.workload import Workload
+from repro.data.datasets import make_dataset
+from repro.data.workloads import WorkloadSpec, point_workload, range_workload
+from repro.engine import (DeviceExecutor, HostExecutor, PriceTable,
+                          PricingEngine)
+
+GEOM = CamGeometry()
+BUDGET = 3 << 20
+POLICIES = ("lru", "fifo", "lfu")
+EPS_GRID = (8, 16, 32, 64)
+SPLITS = (0.25, 0.5, 0.75)
+
+
+@pytest.fixture(scope="module")
+def world():
+    keys = make_dataset("books", 50_000, seed=1)
+    n = len(keys)
+    qk, qpos = point_workload(keys, 5_000, WorkloadSpec("w4", seed=3))
+    rlo, rhi, rlop, rhip = range_workload(keys, 2_000,
+                                          WorkloadSpec("w1", seed=5), 64)
+    wls = {
+        "point": Workload.point(qpos, n=n, query_keys=qk),
+        "range": Workload.range_scan(rlop, rhip, n=n),
+        "sorted": Workload.sorted_stream(np.sort(rlop), np.sort(rhip), n=n),
+        "mixed": Workload.mixed(Workload.point(qpos, n=n),
+                                Workload.sorted_stream(np.sort(rlop),
+                                                       np.sort(rhip), n=n)),
+    }
+    return keys, wls
+
+
+def _cands():
+    return [GridCandidate(eps, 65_536.0, eps=eps) for eps in EPS_GRID]
+
+
+def _table(sess, wl):
+    prof = sess.grid_profiles(_cands(), wl)
+    return PriceTable.from_profiles(
+        prof, {kn: {} for kn in prof.knobs}, splits=SPLITS,
+        budget_bytes=float(BUDGET), page_bytes=GEOM.page_bytes)
+
+
+def _assert_equivalent(sol_h, sol_d):
+    dh = np.max(np.abs(sol_h.hit_rates - sol_d.hit_rates))
+    assert dh < 2e-6, dh                       # float32 summation-order only
+    assert np.array_equal(sol_h.distinct, sol_d.distinct)
+    # winners agree up to objective ties at float32 resolution
+    assert np.isclose(sol_h.objective[sol_d.best_cell],
+                      sol_h.objective[sol_h.best_cell],
+                      rtol=1e-5, atol=1e-12)
+    assert sol_h.executor == "host" and sol_d.executor == "device"
+
+
+# ---------------------------------------------------------------------------
+# Golden equivalence: fused device executor vs host reference
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("policy", POLICIES)
+@pytest.mark.parametrize("kind", ("point", "range", "sorted", "mixed"))
+def test_executors_agree_across_policies_and_kinds(world, policy, kind):
+    keys, wls = world
+    sess = CostSession(System(GEOM, BUDGET, policy))
+    tab = _table(sess, wls[kind])
+    assert len(tab) > len(EPS_GRID)            # splits really enumerated
+    eng = PricingEngine(sess)
+    _assert_equivalent(eng.price(tab, executor="host"),
+                       eng.price(tab, executor="device"))
+
+
+@pytest.mark.parametrize("policy", POLICIES)
+def test_executors_agree_on_grouped_profiles(world, policy):
+    """Sharded-style (group, knob) profiles: padded histograms, concatenated
+    rows — the fleet table shape — solve identically on both executors."""
+    keys, wls = world
+    sess = CostSession(System(GEOM, BUDGET, policy))
+    prof = sess.grid_profiles_grouped(
+        [("s0", _cands(), wls["point"]),
+         ("s1", _cands()[:2], wls["mixed"])])
+    tab = PriceTable.from_profiles(
+        prof, {kn: {} for kn in prof.knobs}, splits=SPLITS,
+        budget_bytes=float(BUDGET), page_bytes=GEOM.page_bytes)
+    eng = PricingEngine(sess)
+    _assert_equivalent(eng.price(tab, executor="host"),
+                       eng.price(tab, executor="device"))
+
+
+def test_executors_agree_on_seconds_objective(world):
+    keys, wls = world
+    sess = CostSession(System(GEOM, BUDGET, "lru"))
+    tab = _table(sess, wls["point"])
+    eng = PricingEngine(sess)
+    sol_h = eng.price(tab, objective="seconds", executor="host")
+    sol_d = eng.price(tab, objective="seconds", executor="device")
+    _assert_equivalent(sol_h, sol_d)
+    assert sol_h.objective_name == "seconds"
+
+
+# ---------------------------------------------------------------------------
+# Structural: every session runs EXACTLY one engine call per solve
+# ---------------------------------------------------------------------------
+
+def test_estimate_grid_is_one_engine_call(world):
+    keys, wls = world
+    sess = CostSession(System(GEOM, BUDGET, "lru"))
+    assert sess.engine.calls == 0
+    sess.estimate_grid(_cands(), wls["point"])
+    assert sess.engine.calls == 1
+    sess.estimate_grid(_cands(), wls["mixed"])
+    assert sess.engine.calls == 2
+
+
+def test_tuner_joint_search_is_one_engine_call(world):
+    from repro.tuning.session import PGMBuilder, TuningSession
+    keys, wls = world
+    ts = TuningSession(System(GEOM, BUDGET, "lru"),
+                       splits=tuple(i / 8 for i in range(1, 8)))
+    assert ts.cost.engine.calls == 0
+    res = ts.tune(PGMBuilder(keys), wls["point"],
+                  overrides={"eps": EPS_GRID})
+    assert ts.cost.engine.calls == 1
+    assert res.batched_solves == 1
+
+
+def test_join_cost_curve_is_one_engine_call(world):
+    from repro.index.adapters import PGMAdapter
+    from repro.join.session import JoinSession
+    keys, wls = world
+    adapter = PGMAdapter.build(keys, eps=32)
+    system = System(GEOM, (1 << 20) + adapter.size_bytes, "lfu")
+    s = JoinSession(adapter, system, inner_keys=keys)
+    outer = np.asarray(keys[::7])
+    s.cost_curve(outer, np.array([4, 16, 64, 256]), n_min=128)
+    assert s._cost_session.engine.calls == 1
+
+
+# ---------------------------------------------------------------------------
+# Capacity dtype: exact compares above float32's 2^24 integer range
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("policy", POLICIES)
+def test_large_capacity_thrash_flip_exact_on_both_executors(policy):
+    """Regression: a 2^24-page buffer one page below a 2^24 + 1 Thm III.1
+    premise must thrash on BOTH executors — float32 capacity arithmetic
+    would round the two equal and skip the regime entirely."""
+    import dataclasses
+
+    import jax.numpy as jnp
+
+    from repro.core.session import GridProfiles, SortedScanPart
+
+    cov = jnp.zeros((32,), jnp.float32).at[:16].set(2.0)   # R=32, N=16
+    sp = SortedScanPart(32.0, 16.0, 2**24 + 1, cov, 0.0)
+    prof = GridProfiles(
+        knobs=("k",), counts=jnp.zeros((1, 32), jnp.float32),
+        totals=np.zeros(1), dacs=np.ones(1), sizes=np.zeros(1),
+        caps=np.array([2**25]), sparts=(sp,), skipped=(), scale=1.0,
+        n_queries=32)
+    tab = PriceTable.from_cells(
+        prof, [("k", 0, np.array([2**24, 2**24 + 1]))])
+    eng = PricingEngine(CostSession(System(GEOM, BUDGET, policy)))
+    for ex in ("host", "device"):
+        sol = eng.price(tab, executor=ex)
+        assert sol.hit_rates[0] == 0.0, (ex, sol.hit_rates)   # thrash
+        assert sol.hit_rates[1] == pytest.approx(0.5), ex     # modeled
+        assert sol.best_cell == 1, ex
+
+
+# ---------------------------------------------------------------------------
+# Dispatch and validation
+# ---------------------------------------------------------------------------
+
+def test_dispatch_precedence(world, monkeypatch):
+    keys, wls = world
+    sess = CostSession(System(GEOM, BUDGET, "lru"))
+    tab = _table(sess, wls["point"])
+
+    # constructor default
+    assert PricingEngine(sess, executor="host").price(tab).executor == "host"
+    # env var beats constructor default
+    monkeypatch.setenv("REPRO_ENGINE_EXECUTOR", "device")
+    eng = PricingEngine(sess, executor="host")
+    assert eng.price(tab).executor == "device"
+    # explicit argument beats the env var
+    assert eng.price(tab, executor="host").executor == "host"
+    # executor instances pass straight through
+    assert eng.price(tab, executor=HostExecutor()).executor == "host"
+    assert eng.price(tab,
+                     executor=DeviceExecutor(interpret=True)
+                     ).executor == "device"
+
+
+def test_engine_rejects_bad_inputs(world):
+    keys, wls = world
+    sess = CostSession(System(GEOM, BUDGET, "lru"))
+    tab = _table(sess, wls["point"])
+    eng = PricingEngine(sess)
+    with pytest.raises(ValueError):
+        eng.price(tab, executor="gpu-ish")
+    with pytest.raises(ValueError):
+        eng.price(tab, objective="latency")
+    empty = PriceTable(np.zeros(0, np.int64), np.zeros(0, np.int64),
+                       np.zeros(0), {}, {}, tab.profiles)
+    with pytest.raises(ValueError):
+        eng.price(empty)
+    detached = PriceTable(tab.rows, tab.caps, tab.fracs, tab.spans,
+                          tab.points_of, None)
+    with pytest.raises(ValueError):
+        eng.price(detached)
+
+
+# ---------------------------------------------------------------------------
+# PriceTable algebra
+# ---------------------------------------------------------------------------
+
+def test_concat_offsets_spans_and_rejects_duplicates(world):
+    keys, wls = world
+    sess = CostSession(System(GEOM, BUDGET, "lru"))
+    prof = sess.grid_profiles(_cands(), wls["point"])
+    t1 = PriceTable.from_cells(prof, [("a", 0, np.array([4, 8])),
+                                      ("b", 1, np.array([16]))])
+    t2 = PriceTable.from_cells(prof, [("c", 2, np.array([32, 64, 128]))])
+    cat = PriceTable.concat([t1, t2])
+    assert len(cat) == 6
+    assert cat.spans == {"a": (0, 2), "b": (2, 3), "c": (3, 6)}
+    assert np.array_equal(cat.rows, [0, 0, 1, 2, 2, 2])
+    with pytest.raises(ValueError):
+        PriceTable.concat([t1, t1])            # duplicate knob keys
+    other = sess.grid_profiles(_cands()[:2], wls["point"])
+    with pytest.raises(ValueError):            # mixed GridProfiles objects
+        PriceTable.concat([t1, PriceTable.from_cells(
+            other, [("z", 0, np.array([4]))])])
+
+
+def test_subset_rehydrates_singleton_spans(world):
+    keys, wls = world
+    sess = CostSession(System(GEOM, BUDGET, "lru"))
+    tab = _table(sess, wls["point"])
+    eng = PricingEngine(sess)
+    sol = eng.price(tab, executor="host")
+    sel = [a for kn, (a, b) in sorted(tab.spans.items())]
+    sub = sol.subset(sel)
+    assert len(sub.table) == len(sel)
+    assert all(b - a == 1 for a, b in sub.table.spans.values())
+    assert set(sub.table.spans) == set(tab.spans)
+    # the sliced solution re-ranks within the slice
+    assert sub.best_cell == int(np.argmin(sol.objective[sel]))

@@ -9,8 +9,10 @@
   total I/O is within 15% of the exhaustive-replay best over every
   (simplex split x per-level strategy) combination — 3 policies x 2 outer
   skews (uniform w1, zipf w2).
-* Batched solve: planning a tree performs NO replay and exactly one
-  batched sorted-miss-curve solve per level (no per-split model calls).
+* Batched solve: planning a tree performs NO replay and exactly ONE
+  engine solve for the whole tree (every level's sorted + INLJ stream at
+  every candidate capacity in one PriceTable — no per-level or per-split
+  model calls).
 * System.with_budget_fraction / PlanCost.compose / capacity-capped
   execution semantics.
 """
@@ -178,7 +180,7 @@ def test_tree_match_count_equals_numpy_oracle(world):
 
 
 # ---------------------------------------------------------------------------
-# The split solve is one batched grid — no replay, no per-split model calls
+# The split solve is one batched grid — no replay, ONE engine call
 # ---------------------------------------------------------------------------
 
 def test_tree_plan_is_replay_free_and_batched(world, monkeypatch):
@@ -190,22 +192,18 @@ def test_tree_plan_is_replay_free_and_batched(world, monkeypatch):
         raise AssertionError("tree planning must not touch the disk")
     monkeypatch.setattr(BufferedDisk, "fetch_window", _no_replay)
 
-    calls = {"curve": 0}
-    orig = cache_models.sorted_scan_miss_curve
-    def _counting(*a, **kw):
-        calls["curve"] += 1
-        return orig(*a, **kw)
-    monkeypatch.setattr(cache_models, "sorted_scan_miss_curve", _counting)
-    import repro.join.session as session_mod
-    monkeypatch.setattr(session_mod.cache_models, "sorted_scan_miss_curve",
-                        _counting)
-
     from repro.join.hybrid import JoinCostParams
+    engine = tree._cost_session.engine
+    before = engine.calls
     plan = tree.plan(outers["w1"], grid=GRID, n_min=128, k_max=4096,
                      params=JoinCostParams())   # pre-fit: no calibration run
     assert isinstance(plan, TreePlan)
-    # one batched sorted-curve solve per level, NOT one per split
-    assert calls["curve"] == tree.n_levels
+    # ONE engine solve for the whole tree — every (level x stream x
+    # capacity) cell in one PriceTable, NOT one solve per level or split
+    assert engine.calls - before == 1
+    # ... and none of the per-level sessions solved anything on the side
+    for sess in tree.sessions:
+        assert sess._cost_session.engine.calls == 0
     n_splits = len(list(combinations(range(1, GRID), tree.n_levels - 1)))
     assert n_splits > tree.n_levels  # the simplex is genuinely larger
 
