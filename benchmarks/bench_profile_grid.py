@@ -1,0 +1,135 @@
+"""Device profiling benchmark: the banded one-hot matmul occupancy kernel
+vs the host LUT-gather + bincount reference.
+
+Builds a synthetic mixed-eps profiling batch (K candidate rows x Q point
+queries, pow2 leaf-eps classes drawn per reference — the §V-C RMI shape)
+and runs the SAME batch through both mixed-eps kernels:
+
+* ``host``   — ``core.page_ref.point_page_refs_mixed_eps_grid`` (gathered
+  float64 LUT rows + ``np.bincount`` per class);
+* ``device`` — ``kernels.profile_grid.point_page_refs_mixed_eps_grid``:
+  per-class occupancy as banded one-hot matmuls in ONE pallas launch,
+  histogram rows born (and staying) in HBM for the chained profile→price
+  path.
+
+On a real TPU backend the device kernel must be >= 2x faster warm (that is
+the point: the histograms feed the fused price kernel without a host
+round-trip).  Under interpret mode (CPU CI) kernel timings are
+meaningless, so the gate degrades to structure-only: <= 2e-6 normalized
+occupancy equivalence and matching totals — asserted on both backends.
+Results land in ``benchmarks/results/profile_grid.json``.
+
+Run directly with ``--smoke`` for CI-sized inputs:
+
+    python -m benchmarks.bench_profile_grid --smoke
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import time
+
+import numpy as np
+
+from benchmarks.common import GEOM, emit
+from repro.core import page_ref
+from repro.kernels import profile_grid
+
+RESULTS = pathlib.Path(__file__).parent / "results"
+
+K_ROWS = 8                   # candidate rows profiled per launch
+EPS_CLASSES = (4, 16, 64, 256, 1024)   # pow2 leaf-eps mixture
+REPEATS = 3
+GATE_SPEEDUP = 2.0
+
+
+def _batch(num_pages: int, nq: int, seed: int):
+    rng = np.random.default_rng(seed)
+    # zipf-ish hot set over the key space, like a w4 point workload
+    pos = rng.zipf(1.2, nq) % (num_pages * GEOM.c_ipp)
+    eps_rows = rng.choice(EPS_CLASSES, size=(K_ROWS, nq)).astype(np.int64)
+    return pos.astype(np.int64), eps_rows
+
+
+def _time(fn, repeats: int = REPEATS) -> float:
+    fn()                                            # warm (jit compile)
+    best = np.inf
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def run(smoke: bool = False, seed: int = 0) -> dict:
+    import jax
+
+    num_pages, nq = (512, 20_000) if smoke else (4096, 200_000)
+    positions, eps_rows = _batch(num_pages, nq, seed)
+
+    counts_h, totals_h = page_ref.point_page_refs_mixed_eps_grid(
+        positions, eps_rows, GEOM.c_ipp, num_pages)
+    counts_d, totals_d = profile_grid.point_page_refs_mixed_eps_grid(
+        positions, eps_rows, GEOM.c_ipp, num_pages)
+    ch = np.asarray(counts_h, np.float64)
+    cd = np.asarray(counts_d, np.float64)
+    scale = max(1.0, float(ch.max()))
+    dh = float(np.max(np.abs(ch - cd))) / scale
+    dt = float(np.max(np.abs(np.asarray(totals_h) - np.asarray(totals_d))
+                      / np.maximum(np.asarray(totals_h), 1.0)))
+    equivalent = dh < 2e-6 and dt < 2e-6
+
+    host_s = _time(lambda: page_ref.point_page_refs_mixed_eps_grid(
+        positions, eps_rows, GEOM.c_ipp, num_pages))
+    device_s = _time(lambda: np.asarray(
+        profile_grid.point_page_refs_mixed_eps_grid(
+            positions, eps_rows, GEOM.c_ipp, num_pages)[0]))
+    speedup = host_s / device_s
+    on_tpu = jax.default_backend() == "tpu"
+
+    record = {
+        "rows": K_ROWS, "queries": nq, "num_pages": num_pages,
+        "c_ipp": GEOM.c_ipp, "eps_classes": list(EPS_CLASSES),
+        "backend": jax.default_backend(),
+        "fused_timed": on_tpu,          # interpret timings are meaningless
+        "host_seconds_warm": host_s, "device_seconds_warm": device_s,
+        "device_over_host_speedup": speedup,
+        "max_norm_occupancy_diff": dh, "max_rel_totals_diff": dt,
+        "smoke": smoke,
+        "gates": {
+            "float32_equivalent": bool(equivalent),
+            f"fused_{GATE_SPEEDUP}x_warm": (bool(speedup >= GATE_SPEEDUP)
+                                            if on_tpu else None),
+        },
+    }
+    RESULTS.mkdir(exist_ok=True)
+    out = RESULTS / "profile_grid.json"
+    out.write_text(json.dumps(record, indent=2, default=float))
+    emit("profile/host", 1e6 * host_s, f"{K_ROWS}x{nq} refs warm")
+    emit("profile/device", 1e6 * device_s,
+         f"speedup={speedup:.2f}x dh={dh:.1e} "
+         f"({'timed' if on_tpu else 'interpret: structure-only'}) -> {out}")
+
+    assert equivalent, (
+        f"occupancy kernels diverge: norm dh = {dh}, totals dt = {dt}")
+    if on_tpu:
+        assert speedup >= GATE_SPEEDUP, (
+            f"device profiling only {speedup:.2f}x over host "
+            f"(< {GATE_SPEEDUP}x) on {K_ROWS}x{nq} references")
+    return record
+
+
+def main(argv=None):
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized inputs")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+    print("name,us_per_call,derived")
+    run(smoke=args.smoke, seed=args.seed)
+
+
+if __name__ == "__main__":
+    main()

@@ -33,9 +33,10 @@ def main() -> None:
                             bench_estimate_grid, bench_fetch_strategy,
                             bench_io_size, bench_join, bench_kernels,
                             bench_kv_planner, bench_pgm_tuning_curve,
-                            bench_point_accuracy, bench_range_accuracy,
-                            bench_rmi_tuning_curve, bench_serving_drift,
-                            bench_sharding, bench_tuning_e2e)
+                            bench_point_accuracy, bench_profile_grid,
+                            bench_range_accuracy, bench_rmi_tuning_curve,
+                            bench_serving_drift, bench_sharding,
+                            bench_tuning_e2e)
 
     table = {
         "point_accuracy": bench_point_accuracy.run,     # Table IV / Fig 1
@@ -53,6 +54,7 @@ def main() -> None:
         "serving_drift": bench_serving_drift.run,       # adaptive vs static
         "sharding": bench_sharding.run,                 # solved vs even split
         "engine": bench_engine.run,                     # fused executor vs host
+        "profile_grid": bench_profile_grid.run,         # device occupancy kernel
     }
     names = args.only or list(table)
     print("name,us_per_call,derived")

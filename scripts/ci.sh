@@ -15,7 +15,9 @@
 # (solved-boundaries-vs-even-split gates recorded to
 # benchmarks/results/sharding.json), and the pricing-engine executor pair
 # (fused-kernel-vs-host equivalence/speed gates recorded to
-# benchmarks/results/engine_fused.json), verifies that every results JSON the
+# benchmarks/results/engine_fused.json), and the device occupancy-profiling
+# kernel (host-vs-device mixed-eps equivalence/speed gates recorded to
+# benchmarks/results/profile_grid.json), verifies that every results JSON the
 # workflow uploads actually got written (catches silently-skipped smoke
 # sections), and finally runs EVERY example script in --smoke mode so the
 # README quickstarts stay executable.
@@ -37,11 +39,12 @@ python -m benchmarks.bench_join --smoke
 python -m benchmarks.bench_serving_drift --smoke
 python -m benchmarks.bench_sharding --smoke
 python -m benchmarks.bench_engine --smoke
+python -m benchmarks.bench_profile_grid --smoke
 
 # every results JSON named in .github/workflows/ci.yml must exist after the
 # bench step — a missing file means a smoke section silently skipped
 for f in estimate_grid join_partition join_tree tuning_e2e serving_drift \
-         sharding engine_fused; do
+         sharding engine_fused profile_grid; do
     if [ ! -f "benchmarks/results/$f.json" ]; then
         echo "MISSING benchmark result: benchmarks/results/$f.json" >&2
         exit 1

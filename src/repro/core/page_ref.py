@@ -18,7 +18,7 @@ estimator jits.
 from __future__ import annotations
 
 import functools
-from typing import Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -30,6 +30,8 @@ __all__ = [
     "point_page_refs_grid",
     "point_page_refs_mixed_eps",
     "point_page_refs_mixed_eps_grid",
+    "mixed_eps_class_codes",
+    "mixed_eps_class_eps",
     "range_page_refs",
     "range_page_refs_grid",
     "page_intervals",
@@ -261,6 +263,37 @@ def _point_lut_np(eps: int, c_ipp: int) -> np.ndarray:
     return np.maximum(0, hi - lo + 1) / float(2 * eps + 1)
 
 
+def mixed_eps_class_codes(
+    flat_eps: np.ndarray,
+) -> Tuple[np.ndarray, Optional[np.ndarray]]:
+    """Eps-class codes shared by the host and device mixed-eps kernels.
+
+    Class codes without a sort over K*Q elements: pow2-quantized bounds
+    (the adapters' contract) map to their exponent — popcount(e - 1) —
+    while arbitrary bounds (third-party callers) fall back to unique-rank
+    codes.  Returns ``(codes, classes)``: ``codes[i]`` is the class code of
+    ``flat_eps[i]``; ``classes`` is ``None`` for pow2 inputs (decode with
+    :func:`mixed_eps_class_eps`) or the sorted unique eps values otherwise.
+    Both kernels MUST group through this one helper so their per-class LUT
+    layouts stay aligned (pinned by the host-vs-device oracle suite).
+    """
+    flat_eps = np.asarray(flat_eps, np.int64)
+    if np.bitwise_and(flat_eps, flat_eps - 1).any():
+        classes, codes = np.unique(flat_eps, return_inverse=True)
+        if len(classes) <= 256:             # byte compares in the class loop
+            codes = codes.astype(np.uint8)
+        return codes, classes
+    if hasattr(np, "bitwise_count"):
+        return np.bitwise_count(flat_eps - 1), None
+    codes = np.rint(np.log2(flat_eps.astype(np.float64))).astype(np.uint8)
+    return codes, None
+
+
+def mixed_eps_class_eps(code: int, classes: Optional[np.ndarray]) -> int:
+    """Decode a :func:`mixed_eps_class_codes` code back to its eps value."""
+    return int(classes[code]) if classes is not None else 1 << int(code)
+
+
 def point_page_refs_mixed_eps_grid(
     positions: np.ndarray,
     eps_rows: np.ndarray,
@@ -301,21 +334,7 @@ def point_page_refs_mixed_eps_grid(
     pad = num_pages + 2 * max_radius
     counts = np.zeros(k * pad, np.float64)
 
-    # Class codes without a sort over K*Q elements: pow2-quantized bounds
-    # (the adapters' contract) map to their exponent — popcount(e - 1) —
-    # while arbitrary bounds (third-party callers) fall back to unique-rank
-    # codes.
-    flat_eps = eps_rows.ravel()
-    if np.bitwise_and(flat_eps, flat_eps - 1).any():
-        classes, codes = np.unique(flat_eps, return_inverse=True)
-        if len(classes) <= 256:             # byte compares in the class loop
-            codes = codes.astype(np.uint8)
-    elif hasattr(np, "bitwise_count"):
-        codes = np.bitwise_count(flat_eps - 1)
-        classes = None
-    else:
-        codes = np.rint(np.log2(flat_eps.astype(np.float64))).astype(np.uint8)
-        classes = None
+    codes, classes = mixed_eps_class_codes(eps_rows.ravel())
     # Shared flat arrays: row*pad + page in one precomputed vector, so each
     # class needs exactly two gathers before its banded bincount.  All big
     # temporaries live in the module scratch pool — the kernel is memory-
@@ -329,7 +348,7 @@ def point_page_refs_mixed_eps_grid(
     np.copyto(slot_tiled, slot.astype(np.int32)[None, :])
     slot_tiled = slot_tiled.reshape(-1)
     for code in np.flatnonzero(np.bincount(codes)):
-        eps = int(classes[code]) if classes is not None else 1 << int(code)
+        eps = mixed_eps_class_eps(code, classes)
         class_idx = np.flatnonzero(codes == code)
         radius = lut_radius(eps, c_ipp)
         width = 2 * radius + 1

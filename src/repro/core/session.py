@@ -21,6 +21,7 @@ per-eps recompiles, which is the tuning-loop speedup the paper's §V needs.
 from __future__ import annotations
 
 import dataclasses
+import os
 import time
 from typing import (Dict, NamedTuple, Optional, Protocol, Sequence, Tuple,
                     runtime_checkable)
@@ -267,6 +268,25 @@ def _compulsory_coverage(sp: SortedScanPart, num_pages: int) -> jnp.ndarray:
     """
     return jnp.zeros((num_pages,), jnp.float32).at[0].set(
         jnp.float32(sp.total_refs))
+
+
+def _resolve_profile_executor(executor: Optional[str]) -> str:
+    """Profiling-side executor dispatch, mirroring ``PricingEngine._resolve``:
+    an explicit argument wins, then the ``REPRO_ENGINE_EXECUTOR`` environment
+    variable, then auto — ``device`` on a TPU backend, ``host`` elsewhere.
+    ``host`` is the golden ``np.bincount`` mixed-eps kernel; ``device`` the
+    banded one-hot matmul kernel (``kernels/profile_grid.py``), whose
+    histograms are born in HBM and chain into the fused pricing launch.
+    """
+    if executor is None:
+        executor = os.environ.get("REPRO_ENGINE_EXECUTOR") or None
+    if executor is None:
+        import jax
+        executor = "device" if jax.default_backend() == "tpu" else "host"
+    if executor not in ("host", "device"):
+        raise ValueError(f"unknown profile executor {executor!r}; expected "
+                         "'host' or 'device'")
+    return executor
 
 
 def _exact_cap_array(values) -> jnp.ndarray:
@@ -532,8 +552,8 @@ class CostSession:
     # ------------------------------------------------------------------- grid
     def estimate_grid(self, candidates: Sequence[GridCandidate],
                       workload: Workload, sample_rate: float = 1.0,
-                      seed: int = 0, batch_mixed_eps: bool = True
-                      ) -> GridResult:
+                      seed: int = 0, batch_mixed_eps: bool = True,
+                      executor: Optional[str] = None) -> GridResult:
         """Estimate a whole knob grid in one jitted/vmapped pass.
 
         Page-ref state (positions, scatter targets) is shared across
@@ -555,7 +575,8 @@ class CostSession:
         feasible, skipped = self._feasible(candidates)
         if wl.kind == SORTED:
             return self._sorted_grid(feasible, skipped, wl, t0)
-        prof = self._profile_batch(feasible, wl, skipped, batch_mixed_eps)
+        prof = self._profile_batch(feasible, wl, skipped, batch_mixed_eps,
+                                   executor)
         from repro.engine import PriceTable
         sol = self.engine.price(PriceTable.max_capacity(
             prof, self.system.memory_budget_bytes))
@@ -579,8 +600,8 @@ class CostSession:
 
     def grid_profiles(self, candidates: Sequence[GridCandidate],
                       workload: Workload, sample_rate: float = 1.0,
-                      seed: int = 0, batch_mixed_eps: bool = True
-                      ) -> GridProfiles:
+                      seed: int = 0, batch_mixed_eps: bool = True,
+                      executor: Optional[str] = None) -> GridProfiles:
         """Capacity-independent profiles of a knob grid (one batched pass).
 
         The profiling half of :meth:`estimate_grid`: feasibility filtering,
@@ -589,13 +610,21 @@ class CostSession:
         the rest.  Pair with :meth:`solve_profiles` to price the SAME
         profiles at arbitrary (row, capacity) combinations — the engine
         behind the tuner's joint (knob x buffer-split) search.
+
+        ``executor`` picks the mixed-eps kernel: ``"host"`` (the golden
+        ``np.bincount`` path), ``"device"`` (the banded one-hot matmul
+        kernel of ``kernels/profile_grid.py`` — histograms stay in HBM and
+        chain into the fused pricing launch), or ``None`` for the engine's
+        dispatch rule (``REPRO_ENGINE_EXECUTOR``, then auto-TPU).
         """
         wl = self._sampled(workload, sample_rate, seed)
         feasible, skipped = self._feasible(candidates)
-        return self._profile_batch(feasible, wl, skipped, batch_mixed_eps)
+        return self._profile_batch(feasible, wl, skipped, batch_mixed_eps,
+                                   executor)
 
     def grid_profiles_grouped(self, groups, sample_rate: float = 1.0,
-                              seed: int = 0, batch_mixed_eps: bool = True
+                              seed: int = 0, batch_mixed_eps: bool = True,
+                              executor: Optional[str] = None
                               ) -> GridProfiles:
         """Profiles of MANY (key, candidates, workload) groups — ONE pass.
 
@@ -617,7 +646,8 @@ class CostSession:
             wls = self._sampled(wl, sample_rate, seed)
             feasible, skipped = self._feasible(cands)
             parts.append((key, self._profile_batch(feasible, wls, skipped,
-                                                   batch_mixed_eps)))
+                                                   batch_mixed_eps,
+                                                   executor)))
         if not parts:
             raise ValueError("grid_profiles_grouped needs at least one group")
         scales = {p.scale for _, p in parts}
@@ -652,7 +682,9 @@ class CostSession:
             n_queries=sum(p.n_queries for _, p in parts))
 
     def solve_profiles(self, profiles: GridProfiles, capacities,
-                       rows: Optional[np.ndarray] = None):
+                       rows: Optional[np.ndarray] = None,
+                       policy: Optional[str] = None,
+                       policies=None):
         """Hit rates of profile rows at given capacities — ONE batched solve.
 
         ``rows[i]`` names the profile row that ``capacities[i]`` applies to
@@ -665,9 +697,31 @@ class CostSession:
         wraps), preserving the per-candidate composition semantics of
         ``_finish``.  Returns ``(hit_rates, distinct_pages)`` float64
         arrays aligned with ``capacities``.
+
+        ``policy`` overrides the system's eviction policy for every cell;
+        ``policies`` gives a PER-CELL policy column (names, or ids into
+        ``cache_models.POLICIES`` with -1 = the session policy — the
+        multi-policy ``PriceTable.pols`` contract): cells group by policy
+        and solve as one ``hit_rate_grid`` dispatch per distinct policy
+        (<= 3), scattered back in cell order.
         """
         idx = (np.arange(len(profiles.knobs), dtype=np.int64)
                if rows is None else np.asarray(rows, np.int64))
+        if policies is not None:
+            base = policy if policy is not None else self.system.policy
+            names = [base if p == -1 or p is None
+                     else (p if isinstance(p, str)
+                           else cache_models.POLICIES[int(p)])
+                     for p in np.asarray(policies).tolist()]
+            caps_in = np.asarray(capacities)
+            h_out = np.empty(len(names), np.float64)
+            nd_out = np.empty(len(names), np.float64)
+            for pol in sorted(set(names)):
+                m = np.asarray([nm == pol for nm in names])
+                h_out[m], nd_out[m] = self.solve_profiles(
+                    profiles, caps_in[m], rows=idx[m], policy=pol)
+            return h_out, nd_out
+        policy = policy if policy is not None else self.system.policy
         counts = (profiles.counts if rows is None
                   else profiles.counts[jnp.asarray(idx)])
         sample_refs = jnp.asarray(profiles.totals[idx], jnp.float32)
@@ -691,7 +745,7 @@ class CostSession:
                         sp, coverage=_compulsory_coverage(sp, num_pages))
             s_refs = jnp.asarray([sp.total_refs for sp in sps], jnp.float32)
             h, n_distinct = cache_models.hit_rate_grid(
-                self.system.policy, counts, sample_refs, full_refs, caps_arr,
+                policy, counts, sample_refs, full_refs, caps_arr,
                 sorted_coverage=_stack_or_share(
                     [sp.coverage for sp in sps]),
                 sorted_refs=s_refs,
@@ -704,7 +758,7 @@ class CostSession:
                 sorted_full_refs=s_refs * profiles.scale)
         else:
             h, n_distinct = cache_models.hit_rate_grid(
-                self.system.policy, counts, sample_refs, full_refs, caps_arr)
+                policy, counts, sample_refs, full_refs, caps_arr)
         h = np.asarray(h, np.float64)
         n_distinct = np.asarray(n_distinct, np.float64)
         for i, true_n in surrogate.items():
@@ -730,7 +784,8 @@ class CostSession:
         return feasible, skipped
 
     def _profile_batch(self, feasible, wl: Workload, skipped,
-                       batch_mixed_eps: bool) -> GridProfiles:
+                       batch_mixed_eps: bool,
+                       executor: Optional[str] = None) -> GridProfiles:
         """Assemble per-candidate (histogram, R, E[DAC], sorted part) rows."""
         geom = self.system.geom
         uniform = [c for c in feasible if c.index is None]
@@ -757,7 +812,7 @@ class CostSession:
                     min_capacity=1 + int(np.ceil(2 * c.eps / geom.c_ipp)))
                 for c in uniform)
         mixed_rows = self._mixed_eps_rows(backed, wl, skipped,
-                                          batch_mixed_eps)
+                                          batch_mixed_eps, executor)
         for c in backed:
             if id(c) in mixed_rows:
                 entry = mixed_rows[id(c)]
@@ -823,15 +878,20 @@ class CostSession:
             n_queries=int(wl.n_queries))
 
     def _mixed_eps_rows(self, backed, wl: Workload, skipped,
-                        batch_mixed_eps: bool):
+                        batch_mixed_eps: bool,
+                        executor: Optional[str] = None):
         """Batched §V-C mixture histograms (the ROADMAP mixed-eps kernel).
 
         Index-backed candidates exposing ``point_ref_eps`` (RMI adapters)
         hand over per-query quantized leaf error bounds; the whole branch
-        grid then profiles in ONE grouped banded pass
-        (``page_ref.point_page_refs_mixed_eps_grid`` — references grouped
-        by LUT radius ACROSS candidates) instead of per-branch mixture
-        histograms with K x #distinct-eps jit round trips.
+        grid then profiles in ONE grouped banded pass — references grouped
+        by LUT radius ACROSS candidates — instead of per-branch mixture
+        histograms with K x #distinct-eps jit round trips.  The pass runs
+        on the resolved profile executor: ``host`` is the golden
+        ``page_ref.point_page_refs_mixed_eps_grid`` bincount kernel,
+        ``device`` the banded one-hot matmul kernel
+        (``kernels.profile_grid``) whose histogram rows stay device
+        arrays from birth.
 
         Returns ``{id(candidate): (counts_row, total, e_dac) | None}`` —
         ``None`` marks a candidate whose routing raised (skip recorded).
@@ -856,8 +916,15 @@ class CostSession:
             ok_dacs.append(float(e_dac))
         if ok:
             num_pages = geom.num_pages(int(ok[0].index.n))
-            counts_b, totals_b = page_ref.point_page_refs_mixed_eps_grid(
-                wl.positions, np.stack(eps_rows), geom.c_ipp, num_pages)
+            if _resolve_profile_executor(executor) == "device":
+                from repro.kernels import profile_grid as _device_profile
+                counts_b, totals_b = \
+                    _device_profile.point_page_refs_mixed_eps_grid(
+                        wl.positions, np.stack(eps_rows), geom.c_ipp,
+                        num_pages)
+            else:
+                counts_b, totals_b = page_ref.point_page_refs_mixed_eps_grid(
+                    wl.positions, np.stack(eps_rows), geom.c_ipp, num_pages)
             for i, c in enumerate(ok):
                 out[id(c)] = (counts_b[i], float(totals_b[i]), ok_dacs[i])
         return out

@@ -42,10 +42,29 @@ class DeviceExecutor:
         self.interpret = interpret
 
     def solve(self, engine, table, row_scale):
+        from repro.core.cache_models import POLICIES
         profiles = table.profiles
         rows = np.asarray(table.rows, np.int64)
-        urows, inv = np.unique(rows, return_inverse=True)
-        k, t = urows.shape[0], rows.shape[0]
+        t = rows.shape[0]
+
+        # ---- per-cell policies: group by (profile row, policy) ----------
+        # A kernel program owns ONE fixed point, so multi-policy tables
+        # split a profile row into one program per policy it prices under;
+        # single-policy tables reduce to the plain per-row grouping.
+        base_code = POLICIES.index(engine.cost.system.policy)
+        if table.pols is None:
+            cell_pols = np.full(t, base_code, np.int64)
+        else:
+            cell_pols = np.asarray(table.pols, np.int64)
+            cell_pols = np.where(cell_pols < 0, base_code, cell_pols)
+        ukeys, inv = np.unique(rows * len(POLICIES) + cell_pols,
+                               return_inverse=True)
+        urows = ukeys // len(POLICIES)
+        upols = (ukeys % len(POLICIES)).astype(np.int32)
+        k = urows.shape[0]
+        upol_set = set(upols.tolist())
+        policy = (POLICIES[upol_set.pop()] if len(upol_set) == 1
+                  else "multi")
 
         # ---- cell layout: group cells by profile row, keep table order --
         per_row = np.bincount(inv, minlength=k)
@@ -76,7 +95,6 @@ class DeviceExecutor:
             np.float32)
         scale = np.asarray(row_scale, np.float64)[urows].astype(np.float32)
 
-        policy = engine.cost.system.policy
         sparts = [profiles.sparts[i] for i in urows]
         has_sorted = any(sp is not None for sp in sparts)
         surrogate = {}
@@ -86,6 +104,7 @@ class DeviceExecutor:
         f32s[:, 2] = nd_i.astype(np.float32)
         f32s[:, 3], f32s[:, 8] = pmin, scale
         i32s[:, 0] = _exact_i32(nd_i)
+        i32s[:, 3] = upols                  # read iff policy == "multi"
 
         dummy = jnp.zeros((k, 1), jnp.float32)
         cov = cov_desc = dummy
@@ -106,10 +125,10 @@ class DeviceExecutor:
             i32s[:, 2] = _exact_i32([sp.min_capacity for sp in sps])
             cov = jnp.stack([jnp.asarray(sp.coverage, jnp.float32)
                              for sp in sps])
-            if policy == "lfu":
+            if policy in ("lfu", "multi"):
                 cov_desc = -jnp.sort(-cov, axis=1)
-        sorted_probs = (-jnp.sort(-probs, axis=1) if policy == "lfu"
-                        else dummy)
+        sorted_probs = (-jnp.sort(-probs, axis=1)
+                        if policy in ("lfu", "multi") else dummy)
 
         # ---- one fused launch -------------------------------------------
         h2, _, best_id = _pg.price_grid(

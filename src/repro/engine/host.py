@@ -21,8 +21,12 @@ class HostExecutor:
     def solve(self, engine, table, row_scale):
         # Looked up on the session instance so monkeypatched counters
         # (class- or instance-level) keep observing the one solve call.
+        # Multi-policy tables hand the per-cell policy column through;
+        # solve_profiles groups by policy internally (one hit_rate_grid
+        # dispatch per distinct policy), still ONE solve_profiles call.
         h, n_distinct = engine.cost.solve_profiles(
-            table.profiles, table.caps, rows=table.rows)
+            table.profiles, table.caps, rows=table.rows,
+            policies=table.pols)
         # No device-side argmin: the engine ranks on the host.
         return (np.asarray(h, np.float64),
                 np.asarray(n_distinct, np.float64), None)

@@ -66,6 +66,11 @@ class PriceTable:
     spans: Dict[object, Tuple[int, int]]
     points_of: Dict[object, Dict[str, object]]
     profiles: Optional[object] = None      # GridProfiles the rows index into
+    #: Per-cell eviction-policy ids indexing ``cache_models.POLICIES``
+    #: (-1 = the pricing session's configured policy).  ``None`` — the
+    #: default for every builder — means every cell prices under the
+    #: session policy; :meth:`cross_policies` fills the column in.
+    pols: Optional[np.ndarray] = None
 
     def __len__(self) -> int:
         return int(self.rows.shape[0])
@@ -158,6 +163,43 @@ class PriceTable:
                    np.zeros(len(rows), np.float64), spans, points_of,
                    profiles)
 
+    def cross_policies(self, policies: Sequence[str]) -> "PriceTable":
+        """Replicate every cell per eviction policy — policy becomes a knob.
+
+        The p-th copy's cells carry policy id ``POLICIES.index(p)``; spans
+        are re-keyed ``(policy, knob)`` and each knob point gains a
+        ``"policy"`` entry, so the downstream argmin / ``TuneResult``
+        treats the eviction policy exactly like any other knob axis.  One
+        engine call then prices lru/fifo/lfu side-by-side — on the
+        ``DeviceExecutor`` in ONE fused launch (the kernel's ``"multi"``
+        mode selects the fixed point per row by policy id).
+        """
+        from repro.core.cache_models import POLICIES
+        policies = tuple(policies)
+        if not policies:
+            raise ValueError("cross_policies needs at least one policy")
+        unknown = [p for p in policies if p not in POLICIES]
+        if unknown:
+            raise ValueError(f"unknown policies {unknown!r}; expected a "
+                             f"subset of {POLICIES}")
+        if len(set(policies)) != len(policies):
+            raise ValueError(f"duplicate policies in {policies!r}")
+        if self.pols is not None:
+            raise ValueError("table already carries policy ids; "
+                             "cross_policies must start from a plain table")
+        n = len(self)
+        reps = len(policies)
+        spans, points_of = {}, {}
+        for j, p in enumerate(policies):
+            for kn, (a, b) in self.spans.items():
+                spans[(p, kn)] = (a + j * n, b + j * n)
+                points_of[(p, kn)] = dict(self.points_of[kn], policy=p)
+        pols = np.repeat(np.asarray([POLICIES.index(p) for p in policies],
+                                    np.int16), n)
+        return PriceTable(np.tile(self.rows, reps), np.tile(self.caps, reps),
+                          np.tile(self.fracs, reps), spans, points_of,
+                          self.profiles, pols)
+
     # ---------------------------------------------------------- composition
     @classmethod
     def concat(cls, tables: Sequence["PriceTable"]) -> "PriceTable":
@@ -181,10 +223,18 @@ class PriceTable:
                 spans[kn] = (a + off, b + off)
                 points_of[kn] = t.points_of[kn]
             off += len(t)
+        if all(t.pols is None for t in tables):
+            pols = None
+        else:
+            # -1 (session default) fills plain tables so mixed concats keep
+            # every cell's policy semantics
+            pols = np.concatenate([
+                t.pols if t.pols is not None
+                else np.full(len(t), -1, np.int16) for t in tables])
         return cls(np.concatenate([t.rows for t in tables]),
                    np.concatenate([t.caps for t in tables]),
                    np.concatenate([t.fracs for t in tables]),
-                   spans, points_of, prof)
+                   spans, points_of, prof, pols)
 
     def subset(self, sel) -> "PriceTable":
         """Slice cells back out of a (possibly concatenated) table.
@@ -204,7 +254,8 @@ class PriceTable:
             spans={knob_of[int(t)]: (k, k + 1) for k, t in enumerate(sel)},
             points_of={knob_of[int(t)]: self.points_of[knob_of[int(t)]]
                        for t in sel},
-            profiles=self.profiles)
+            profiles=self.profiles,
+            pols=None if self.pols is None else self.pols[sel])
 
 
 @dataclasses.dataclass(frozen=True)

@@ -44,17 +44,25 @@ def _price_kernel(*refs, policy: str, has_sorted: bool, iters: int,
                   n_in: int):
     """One program = one profile row priced at all its C cells.
 
+    ``policy`` is one of the static ``cache_models.POLICIES`` (the whole
+    launch shares one fixed point) or ``"multi"``: each program reads its
+    OWN policy id from i32 column 3 (``POLICIES`` order: 0 lru, 1 fifo,
+    2 lfu) and selects between the recency bisection and the LFU top-C
+    mass — one launch pricing a multi-policy table side by side.
+
     Packed scalar columns (one row each per program):
       f32: 0 sample_refs, 1 full_refs, 2 n_distinct, 3 pmin,
            4 sorted_refs, 5 sorted_full_refs, 6 sorted_distinct,
            7 sorted_pinned, 8 objective_scale
-      i32: 0 n_distinct, 1 sorted_distinct, 2 sorted_min_capacity
+      i32: 0 n_distinct, 1 sorted_distinct, 2 sorted_min_capacity,
+           3 policy id (read iff policy == "multi")
     """
     ins, outs = refs[:n_in], refs[n_in:]
     it = iter(ins)
+    lfu_read = policy in ("lfu", "multi")
     p = next(it)[...]                                       # (1, P) probs
-    sp = next(it)[...] if policy == "lfu" else None         # (1, P) desc
-    cov = (next(it)[...] if (has_sorted and policy == "lfu")
+    sp = next(it)[...] if lfu_read else None                # (1, P) desc
+    cov = (next(it)[...] if (has_sorted and lfu_read)
            else None)                                       # (1, P) desc
     f = next(it)[...]                                       # (1, 16) f32
     z = next(it)[...]                                       # (1, 8) i32
@@ -76,14 +84,20 @@ def _price_kernel(*refs, policy: str, has_sorted: bool, iters: int,
     c_t = c_eff.T                                           # (C, 1)
 
     # -- policy fixed point, lockstep over the row's C capacities ----------
-    if policy in ("lru", "fifo"):
+    pol_id = z[0, 3] if policy == "multi" else None
+    if policy in ("lru", "fifo", "multi"):
         hi = jnp.maximum(4.0 * c_t / pmin, 1.0)
         lo = jnp.zeros_like(hi)
 
         def occ(t):                                         # (C, 1) -> (C, P)
             if policy == "lru":
                 return -jnp.expm1(-p * t)
-            return p * t / (1.0 - p + p * t)
+            if policy == "fifo":
+                return p * t / (1.0 - p + p * t)
+            # multi: per-program scalar select between the recency forms
+            # (the bisected objective stays monotone either way)
+            return jnp.where(pol_id == 0, -jnp.expm1(-p * t),
+                             p * t / (1.0 - p + p * t))
 
         def body(_, st):
             lo, hi = st
@@ -96,12 +110,14 @@ def _price_kernel(*refs, policy: str, has_sorted: bool, iters: int,
         lo, hi = jax.lax.fori_loop(0, iters, body, (lo, hi))
         t_c = 0.5 * (lo + hi)
         h_pol = jnp.sum(p * occ(t_c), axis=1, keepdims=True).T   # (1, C)
-    else:                                                   # lfu: top-C mass
+    if policy in ("lfu", "multi"):                          # lfu: top-C mass
         iota = jax.lax.broadcasted_iota(jnp.int32, (caps_i.shape[1],
                                                     p.shape[1]), 1)
         mask = iota < jnp.maximum(caps_i, 1).T              # (C, P)
-        h_pol = jnp.sum(jnp.where(mask, sp, 0.0), axis=1,
+        h_lfu = jnp.sum(jnp.where(mask, sp, 0.0), axis=1,
                         keepdims=True).T
+        h_pol = (h_lfu if policy == "lfu"
+                 else jnp.where(pol_id == 2, h_lfu, h_pol))
 
     h_comp = jnp.where(full > 0, (full - n_f) / jnp.maximum(full, 1.0), 0.0)
     h = jnp.where(caps_i >= n_i, h_comp, h_pol)
@@ -121,6 +137,9 @@ def _price_kernel(*refs, policy: str, has_sorted: bool, iters: int,
                            keepdims=True).T
             freq = jnp.clip(jnp.minimum(s_r - topc, s_r - pinned), s_n, s_r)
             miss = jnp.where(caps_i >= s_n_i, s_n, freq)
+            if policy == "multi":   # recency rows take the compulsory form
+                miss = jnp.where(pol_id == 2, miss,
+                                 jnp.zeros_like(caps_f) + s_n)
         thrash = jnp.clip(s_r - pinned, s_n, s_r)
         miss = jnp.where(caps_i < s_min_i, thrash, miss)
         h_s = jnp.where(s_r > 0, (s_r - miss) / jnp.maximum(s_r, 1.0), 0.0)
@@ -149,10 +168,14 @@ def price_grid(policy: str, probs, sorted_probs, cov_desc, f32s, i32s,
     """Price a (K rows x C cells-per-row) padded table in one launch.
 
     Args:
+      policy: a ``cache_models.POLICIES`` name (uniform launch) or
+        ``"multi"`` — each row reads its own policy id from i32 column 3,
+        so one launch prices lru/fifo/lfu rows side by side.
       probs: (K, P) float32 request probabilities per profile row.
-      sorted_probs: (K, P) descending-sorted ``probs`` (read iff lfu).
+      sorted_probs: (K, P) descending-sorted ``probs`` (read iff lfu or
+        multi).
       cov_desc: (K, P) descending-sorted sorted-scan coverage (read iff
-        lfu AND ``has_sorted``).
+        (lfu or multi) AND ``has_sorted``).
       f32s / i32s: (K, 16) / (K, 8) packed per-row scalars (layout in
         :func:`_price_kernel`).
       caps_f / caps_i / ids: (K, C) per-cell capacities (float32 /
@@ -180,10 +203,10 @@ def price_grid(policy: str, probs, sorted_probs, cov_desc, f32s, i32s,
     pp, cc = p_width + pad_p, c + pad_c
 
     inputs, in_specs = [probs], [pl.BlockSpec((1, pp), lambda i: (i, 0))]
-    if policy == "lfu":
+    if policy in ("lfu", "multi"):
         inputs.append(sorted_probs)
         in_specs.append(pl.BlockSpec((1, pp), lambda i: (i, 0)))
-    if has_sorted and policy == "lfu":
+    if has_sorted and policy in ("lfu", "multi"):
         inputs.append(cov_desc)
         in_specs.append(pl.BlockSpec((1, pp), lambda i: (i, 0)))
     inputs += [f32s, i32s, caps_f, caps_i, ids]

@@ -1,0 +1,218 @@
+"""TPU-native mixed-eps occupancy: the device half of the profiling side.
+
+``core/page_ref.py::point_page_refs_mixed_eps_grid`` — the §V-C grouped
+mixture-histogram kernel behind every RMI branch-grid profile — is
+deliberately host-side: one LUT-row gather plus one weighted
+``np.bincount`` per eps class, which beats XLA CPU scatters ~10x but caps
+tuning-loop and drift-retune scale exactly where the ROADMAP's
+"device-resident tuning fabric, leg 2" says it does.  This module is the
+TPU-native counterpart: per-eps-class page occupancy as banded ONE-HOT
+MATMULS over device-resident position arrays, so the histograms are born
+in HBM and can chain straight into the fused pricing kernel
+(``kernels/price_grid.py``) without ever visiting the host.
+
+The factorization replaces both host gathers with MXU contractions.  With
+queries grouped by pow2 leaf-eps class exactly like the host path
+(``page_ref.mixed_eps_class_codes`` — the SAME helper), stack every
+class's Eq. 12 LUT, centered on the grid-wide max radius D, into one
+
+    lutstack[d, c * C_ipp + s] = LUT_c[s, d - (D - D_c)]      (W, n_c*C_ipp)
+
+and encode each query as the combined key ``code * C_ipp + slot``.  Then
+for one candidate row and one query tile:
+
+    SEL[cs, q] = [key_q == cs]              one-hot     (n_c*C_ipp, QT)
+    T1         = lutstack @ SEL             banded mass (W, QT)
+    counts[page_q + d] += T1[d, q]          for d in [0, W)
+
+and the scatter in the last line is itself W one-hot matmuls
+``T1[d] @ [page_q + d == j]`` — no gathers, no scatters, pure iota
+compares and MXU work.  Padded queries carry key -1 and never match.
+
+The output is the SAME padded ``(K, P + 2D)`` layout the host kernel
+accumulates into (out-of-range window mass lands in the pad and is
+sliced off); :func:`point_page_refs_mixed_eps_grid` mirrors the host
+function's signature and slicing exactly.  Equivalence: exact for
+integer-mass inputs (every LUT entry 0 or 1 — f32 sums of integers), and
+float32-tolerance otherwise; pinned host-vs-device by
+tests/test_kernels.py across families x policies x workloads.
+
+Grid = (K rows, page tiles, query tiles); each program owns one
+candidate row x one page-tile block of the padded histogram and
+accumulates its query tiles into the revisited block (zero-initialized on
+the first visit), so VMEM stays bounded whatever the workload size.
+Interpret mode off-TPU via the shared ``kernels.ops._auto_interpret``
+rule.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from repro.core import page_ref
+from repro.kernels import ops as kernel_ops
+from repro.kernels._compat import CompilerParams as _CompilerParams
+
+__all__ = ["profile_grid", "point_page_refs_mixed_eps_grid"]
+
+_LANES = 128
+_SUBLANES = 8
+_Q_TILE = 512        # queries resident per program
+_P_TILE = 2048       # padded-histogram columns per program
+
+
+def _ceil_to(n: int, m: int) -> int:
+    return -(-n // m) * m
+
+
+def _occupancy_kernel(keys_ref, pages_ref, lut_ref, out_ref, *,
+                      width: int, n_cc: int, q_tile: int, p_tile: int):
+    """One program = one candidate row x one page tile x one query tile."""
+    pt_i = pl.program_id(1)
+    qt_i = pl.program_id(2)
+
+    @pl.when(qt_i == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    keys = keys_ref[...]                                    # (1, QT) int32
+    pages = pages_ref[...]                                  # (1, QT) int32
+    lut = lut_ref[...]                                      # (Wp, CCp) f32
+
+    # one-hot over the combined (class, slot) key; pad queries (key -1)
+    # match nothing, so their T1 column is zero and they contribute nothing
+    sel = (jax.lax.broadcasted_iota(jnp.int32, (n_cc, q_tile), 0)
+           == keys).astype(jnp.float32)
+    t1 = jnp.dot(lut, sel, preferred_element_type=jnp.float32)  # (Wp, QT)
+
+    page_col = pages.T                                      # (QT, 1)
+    base = (jax.lax.broadcasted_iota(jnp.int32, (q_tile, p_tile), 1)
+            + pt_i * p_tile)                                # global column
+    acc = out_ref[...]
+    for d in range(width):
+        oh = (base == page_col + d).astype(jnp.float32)     # (QT, PT)
+        acc = acc + jnp.dot(t1[d:d + 1, :], oh,
+                            preferred_element_type=jnp.float32)
+    out_ref[...] = acc
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("width", "pad", "interpret"))
+def profile_grid(keys, pages, lutstack, *, width: int, pad: int,
+                 interpret: bool = False) -> jnp.ndarray:
+    """Banded one-hot occupancy of a whole candidate grid in one launch.
+
+    Args:
+      keys: (K, Q) int32 combined ``class_code * C_ipp + slot`` per query
+        (per candidate row); padded queries carry -1.
+      pages: (1, Q) int32 shared query pages (any value where keys == -1).
+      lutstack: (W', CC') float32 stacked per-class LUTs, centered on the
+        grid-wide max radius (layout in the module docstring); W' / CC'
+        may carry zero padding to sublane / lane multiples.
+      width: the true band width ``2 * max_radius + 1`` (<= W').
+      pad: the true padded histogram width ``num_pages + 2 * max_radius``.
+
+    Returns:
+      (K, pad) float32 — the SAME padded layout the host kernel
+      accumulates into; callers slice ``[:, D : D + num_pages]``.
+    """
+    k, q = keys.shape
+    q_tile = min(_Q_TILE, _ceil_to(q, _LANES))
+    qp = _ceil_to(q, q_tile)
+    p_tile = min(_P_TILE, _ceil_to(pad, _LANES))
+    pp = _ceil_to(pad, p_tile)
+    if qp > q:
+        keys = jnp.pad(keys, ((0, 0), (0, qp - q)), constant_values=-1)
+        pages = jnp.pad(pages, ((0, 0), (0, qp - q)), constant_values=-1)
+    n_cc = int(lutstack.shape[1])
+
+    out = pl.pallas_call(
+        functools.partial(_occupancy_kernel, width=width, n_cc=n_cc,
+                          q_tile=q_tile, p_tile=p_tile),
+        grid=(k, pp // p_tile, qp // q_tile),
+        in_specs=[
+            pl.BlockSpec((1, q_tile), lambda i, p, t: (i, t)),
+            pl.BlockSpec((1, q_tile), lambda i, p, t: (0, t)),
+            pl.BlockSpec(lutstack.shape, lambda i, p, t: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, p_tile), lambda i, p, t: (i, p)),
+        out_shape=jax.ShapeDtypeStruct((k, pp), jnp.float32),
+        compiler_params=_CompilerParams(
+            dimension_semantics=("arbitrary", "arbitrary", "arbitrary")),
+        interpret=interpret,
+    )(keys, pages, lutstack)
+    return out[:, :pad]
+
+
+def _lut_stack(class_eps, c_ipp: int, max_radius: int) -> np.ndarray:
+    """Stack per-class Eq. 12 LUTs centered on the grid-wide max radius.
+
+    Centering reproduces the host kernel's ``base + (D - D_c) + d'``
+    offset arithmetic: class c's width-``2*D_c+1`` band sits at rows
+    ``[D - D_c, D + D_c]`` of the shared width-``2*D+1`` band, and all
+    other rows are zero — so one uniform ``page + d`` target rule serves
+    every class.
+    """
+    width = 2 * max_radius + 1
+    wp = _ceil_to(width, _SUBLANES)
+    ccp = _ceil_to(len(class_eps) * c_ipp, _LANES)
+    stack = np.zeros((wp, ccp), np.float32)
+    for ci, eps in enumerate(class_eps):
+        radius = page_ref.lut_radius(eps, c_ipp)
+        lut = page_ref._point_lut_np(eps, c_ipp)       # (C_ipp, 2*D_c+1)
+        off = max_radius - radius
+        stack[off:off + 2 * radius + 1,
+              ci * c_ipp:(ci + 1) * c_ipp] = lut.T.astype(np.float32)
+    return stack
+
+
+def point_page_refs_mixed_eps_grid(
+    positions: np.ndarray,
+    eps_rows: np.ndarray,
+    c_ipp: int,
+    num_pages: int,
+    *,
+    interpret: Optional[bool] = None,
+) -> Tuple[jnp.ndarray, np.ndarray]:
+    """Device counterpart of ``page_ref.point_page_refs_mixed_eps_grid``.
+
+    Same signature, same grouping (one shared class-code pass through
+    ``page_ref.mixed_eps_class_codes``), same padded-accumulate-then-slice
+    semantics — but the histograms are computed on-device and RETURNED as a
+    device array, so a caller chaining into the fused pricing kernel never
+    round-trips them through the host.
+
+    Returns (counts (K, num_pages) float32 device array, totals (K,)
+    float64 host array) — shapes and meaning identical to the host kernel.
+    """
+    positions = np.asarray(positions, np.int64)
+    eps_rows = np.maximum(np.asarray(eps_rows, np.int64), 1)
+    k, q_n = eps_rows.shape
+    if positions.shape[0] != q_n:
+        raise ValueError(f"eps_rows has {q_n} columns for "
+                         f"{positions.shape[0]} positions")
+    page = (positions // c_ipp).astype(np.int32)
+    slot = (positions - page.astype(np.int64) * c_ipp).astype(np.int32)
+    max_radius = page_ref.lut_radius(int(eps_rows.max()), c_ipp)
+    pad = num_pages + 2 * max_radius
+
+    codes, classes = page_ref.mixed_eps_class_codes(eps_rows.ravel())
+    present = np.flatnonzero(np.bincount(codes))
+    class_eps = [page_ref.mixed_eps_class_eps(c, classes) for c in present]
+    # dense-rank the (possibly sparse) codes into lutstack column groups
+    dense = np.searchsorted(present, codes.astype(np.int64)).astype(np.int32)
+    keys = dense.reshape(k, q_n) * np.int32(c_ipp) + slot[None, :]
+
+    padded = profile_grid(
+        jnp.asarray(keys), jnp.asarray(page[None, :]),
+        jnp.asarray(_lut_stack(class_eps, c_ipp, max_radius)),
+        width=2 * max_radius + 1, pad=pad,
+        interpret=kernel_ops._auto_interpret(interpret))
+    counts = padded[:, max_radius:max_radius + num_pages]
+    totals = np.asarray(jnp.sum(counts, axis=1), np.float64)
+    return counts, totals

@@ -61,6 +61,9 @@ class ServingConfig:
     batch_size: int = 512          # events per ingested batch
     window_chunks: int = 8         # sliding-window length, in batches
     page_bins: int = DEFAULT_PAGE_BINS
+    # None = per-call default (REPRO_ENGINE_EXECUTOR, else auto-TPU);
+    # "device" keeps batch occupancy profiling on the accelerator.
+    profile_executor: Optional[str] = None
     drift_threshold: float = 0.15  # TV distance that triggers an evaluation
     hysteresis: float = 0.05       # re-arm band below the threshold
     cooldown_batches: int = 2      # min batches between evaluations
@@ -138,7 +141,8 @@ class ServingSession:
         self.sketch = WindowSketch(
             tuning.cost, self.candidates,
             window_chunks=self.config.window_chunks,
-            page_bins=self.config.page_bins)
+            page_bins=self.config.page_bins,
+            profile_executor=self.config.profile_executor)
         self.current: Optional[TuneResult] = None
         self.stats = ServingStats()
         self.decisions: List[RetuneDecision] = []

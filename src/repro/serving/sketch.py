@@ -254,11 +254,13 @@ class WindowSketch:
     def __init__(self, cost: CostSession,
                  candidates: Sequence[GridCandidate], *,
                  window_chunks: int = 8,
-                 page_bins: int = DEFAULT_PAGE_BINS):
+                 page_bins: int = DEFAULT_PAGE_BINS,
+                 profile_executor: Optional[str] = None):
         if window_chunks < 1:
             raise ValueError("window_chunks must be >= 1")
         self.cost = cost
         self.system = cost.system
+        self.profile_executor = profile_executor
         self.candidates = list(candidates)
         self.sizes = np.asarray([c.size_bytes for c in self.candidates],
                                 np.float64)
@@ -278,7 +280,8 @@ class WindowSketch:
         ingested is touched, and eviction is the deque dropping the expired
         chunk (subtraction-free).
         """
-        profs = self.cost.grid_profiles(self.candidates, workload)
+        profs = self.cost.grid_profiles(self.candidates, workload,
+                                        executor=self.profile_executor)
         if self.knobs is None:
             self.knobs = profs.knobs
         elif profs.knobs != self.knobs:

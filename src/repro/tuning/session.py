@@ -513,12 +513,23 @@ def _feasibility_split(points, space, size_model, system):
 
 
 @dataclasses.dataclass
+@dataclasses.dataclass
 class CamTuner:
     """The paper's tuner: cache-aware joint (knob x buffer split) search.
 
     One ``grid_profiles`` pass (capacity-independent), one
     ``solve_profiles`` pass over the whole (knob x split) table, then pure
-    array argmin — zero per-split model calls.  Objectives:
+    array argmin — zero per-split model calls.
+
+    ``policies`` makes the EVICTION POLICY a knob: the assembled table is
+    crossed with the given ``cache_models.POLICIES`` names
+    (``PriceTable.cross_policies``), so the single engine call prices
+    every (knob x split x policy) cell — side by side in ONE fused launch
+    on the device executor — and the winning point carries a ``"policy"``
+    entry.  ``None`` (default) prices under the session's configured
+    policy, exactly as before.
+
+    Objectives:
 
     * ``"io"``      — expected physical I/Os per query, Eq. 15/16;
     * ``"seconds"`` — device-model-aware: each miss event issues one device
@@ -533,6 +544,7 @@ class CamTuner:
       memory-frugality penalty that prefers sub-maximal splits.
     """
 
+    policies: Optional[Tuple[str, ...]] = None
     name: str = "cam"
 
     def tune(self, session, builder, workload, space, objective,
@@ -590,6 +602,10 @@ class CamTuner:
             profiles, points, splits=session.splits,
             budget_bytes=system.memory_budget_bytes,
             page_bytes=system.geom.page_bytes)
+        if self.policies:
+            # policy-as-a-knob: cross every (knob x split) cell with the
+            # candidate eviction policies — still ONE engine call below
+            table = table.cross_policies(self.policies)
         # ----- ONE engine call prices the whole table ---------------------
         sol = cost.engine.price(
             table, objective=objective if objective == "seconds" else "io")
@@ -631,7 +647,6 @@ class CamTuner:
         skipped = list(skipped)
         spans, points_of = table.spans, table.points_of
         rows_arr, caps_arr, fracs = table.rows, table.caps, table.fracs
-        row_of = {kn: i for i, kn in enumerate(profiles.knobs)}
         h = np.asarray(h, np.float64)
         n_distinct = np.asarray(n_distinct, np.float64)
         dacs = profiles.dacs[rows_arr]
@@ -677,14 +692,19 @@ class CamTuner:
             j = a + int(np.argmin(obj[a:b]))
             if obj[j] < best_val:
                 best_knob, best_j, best_val = knob, j, float(obj[j])
-            i = row_of[knob]
+            # the span's first cell names the knob's profile row (every
+            # cell of a span shares one row) — valid for plain AND
+            # policy-crossed tables, whose (policy, knob) keys are not
+            # profile knob keys
+            i = int(rows_arr[a])
             estimates[knob] = CamEstimate(
                 io_per_query=float(io[j]), hit_rate=float(h[j]),
                 dac=float(dacs[j]), capacity_pages=int(caps_arr[j]),
                 total_refs=(float(profiles.totals[i])
                             + profiles.sorted_refs(i)) * profiles.scale,
                 distinct_pages=float(n_distinct[j]),
-                estimation_seconds=per_cand, policy=system.policy,
+                estimation_seconds=per_cand,
+                policy=points_of[knob].get("policy", system.policy),
                 device_cost=cost._device_cost(float(io[j])))
         if best_knob is None:
             raise ValueError("no knob point survived profiling")
@@ -811,6 +831,7 @@ class TuningSession:
              overrides: Optional[Dict[str, object]] = None,
              knob_space: Optional[KnobSpace] = None,
              size_model: Optional[SizeModel] = None,
+             policies: Optional[Sequence[str]] = None,
              sample_rate: float = 1.0, seed: int = 0) -> TuneResult:
         session = self
         if budget is not None:
@@ -820,7 +841,12 @@ class TuningSession:
                 self.splits)
         space = knob_space if knob_space is not None \
             else builder.knob_space(overrides)
-        strategy = tuner if tuner is not None else CamTuner()
+        if policies is not None and tuner is not None:
+            raise ValueError("policies= configures the CAM tuner; pass "
+                             "CamTuner(policies=...) explicitly instead of "
+                             "combining it with tuner=")
+        strategy = tuner if tuner is not None \
+            else CamTuner(policies=tuple(policies) if policies else None)
         return strategy.tune(session, builder, workload, space, objective,
                              sample_rate, seed, size_model)
 
@@ -829,7 +855,9 @@ class TuningSession:
                            objective: Union[str, Callable] = "io",
                            overrides: Optional[Dict[str, object]] = None,
                            knob_space: Optional[KnobSpace] = None,
-                           size_model: Optional[SizeModel] = None) -> TuneResult:
+                           size_model: Optional[SizeModel] = None,
+                           policies: Optional[Sequence[str]] = None,
+                           ) -> TuneResult:
         """Joint (knob x split) retune on PRECOMPUTED profiles.
 
         The serving loop's retune path: ``profiles`` is a capacity-
@@ -847,6 +875,7 @@ class TuningSession:
                 self.splits)
         space = knob_space if knob_space is not None \
             else builder.knob_space(overrides)
-        return CamTuner().tune_profiles(
+        tuner = CamTuner(policies=tuple(policies) if policies else None)
+        return tuner.tune_profiles(
             session, builder, space, profiles,
             objective=objective, size_model=size_model)

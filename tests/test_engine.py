@@ -190,15 +190,16 @@ def test_large_capacity_thrash_flip_exact_on_both_executors(policy):
 # Dispatch and validation
 # ---------------------------------------------------------------------------
 
-def test_dispatch_precedence(world, monkeypatch):
+def test_dispatch_precedence(world, engine_executor):
     keys, wls = world
     sess = CostSession(System(GEOM, BUDGET, "lru"))
     tab = _table(sess, wls["point"])
 
     # constructor default
+    engine_executor(None)
     assert PricingEngine(sess, executor="host").price(tab).executor == "host"
     # env var beats constructor default
-    monkeypatch.setenv("REPRO_ENGINE_EXECUTOR", "device")
+    engine_executor("device")
     eng = PricingEngine(sess, executor="host")
     assert eng.price(tab).executor == "device"
     # explicit argument beats the env var
@@ -265,3 +266,255 @@ def test_subset_rehydrates_singleton_spans(world):
     assert set(sub.table.spans) == set(tab.spans)
     # the sliced solution re-ranks within the slice
     assert sub.best_cell == int(np.argmin(sol.objective[sel]))
+
+
+# ---------------------------------------------------------------------------
+# Device-resident profiling: host-vs-device oracle across index families
+# ---------------------------------------------------------------------------
+
+from _hyp import given, settings, st  # noqa: E402
+from repro.tuning.session import (PGMBuilder, RMIBuilder,  # noqa: E402
+                                  RadixSplineBuilder)
+
+# RMI is the only family routed through the mixed-eps pass (point_ref_eps
+# is point-only); uniform-eps families profile identically on either
+# executor, which the oracle asserts bit-for-bit.
+FAMILY_KINDS = {"pgm": ("point", "range", "mixed"),
+                "rmi": ("point",),
+                "radixspline": ("point", "range", "mixed")}
+
+
+@pytest.fixture(scope="module")
+def family_cands(world):
+    keys = world[0]
+    pgm, rmi = PGMBuilder(keys), RMIBuilder(keys)
+    rs = RadixSplineBuilder(keys)
+    return {
+        "pgm": [pgm.candidate({"eps": e}, 65_536.0) for e in (16, 64)],
+        "rmi": [rmi.candidate({"branch": b}, 0.0) for b in (64, 256)],
+        "radixspline": [rs.candidate({"eps": e, "radix_bits": 10}, 65_536.0)
+                        for e in (32, 128)],
+    }
+
+
+@pytest.mark.parametrize("family", ("pgm", "rmi", "radixspline"))
+@pytest.mark.parametrize("policy", POLICIES)
+def test_device_profiling_oracle(world, family_cands, family, policy):
+    """grid_profiles(executor="device") is golden-equivalent to the host
+    bincount path — exact where the mass is integer or the mixed-eps pass
+    is bypassed, <= 2e-6 normalized on the RMI float32 matmul path — and
+    the device-born profiles price identically through BOTH executors."""
+    keys, wls = world
+    sess = CostSession(System(GEOM, BUDGET, policy))
+    eng = PricingEngine(sess)
+    for kind in FAMILY_KINDS[family]:
+        cands = family_cands[family]
+        ph = sess.grid_profiles(cands, wls[kind], executor="host")
+        pd = sess.grid_profiles(cands, wls[kind], executor="device")
+        assert ph.knobs == pd.knobs
+        ch = np.asarray(ph.counts, np.float64)
+        cd = np.asarray(pd.counts, np.float64)
+        if family == "rmi":
+            scale = max(1.0, float(ch.max()))
+            assert np.max(np.abs(ch - cd)) / scale < 2e-6, kind
+            assert np.max(np.abs(ph.totals - pd.totals)
+                          / np.maximum(ph.totals, 1.0)) < 2e-6, kind
+        else:
+            assert np.array_equal(ch, cd), kind
+            assert np.array_equal(ph.totals, pd.totals), kind
+        # solved hit rates agree through BOTH pricing executors
+        hh, ndh = sess.solve_profiles(ph, ph.caps)
+        hd, ndd = sess.solve_profiles(pd, pd.caps)
+        assert np.max(np.abs(np.asarray(hh) - np.asarray(hd))) < 2e-6, kind
+        assert np.array_equal(np.round(ndh), np.round(ndd)), kind
+        tab = PriceTable.from_profiles(
+            pd, {kn: {} for kn in pd.knobs}, splits=SPLITS,
+            budget_bytes=float(BUDGET), page_bytes=GEOM.page_bytes)
+        _assert_equivalent(eng.price(tab, executor="host"),
+                           eng.price(tab, executor="device"))
+
+
+def test_profile_dispatch_precedence(world, family_cands, engine_executor,
+                                     monkeypatch):
+    """The profile side obeys the SAME precedence as the price side:
+    explicit executor arg > REPRO_ENGINE_EXECUTOR > backend auto rule."""
+    import jax
+
+    from repro.core import page_ref as _pr
+    from repro.kernels import profile_grid as _dpg
+
+    keys, wls = world
+    sess = CostSession(System(GEOM, BUDGET, "lru"))
+    cands = family_cands["rmi"]
+    calls = {"host": 0, "device": 0}
+    real_h = _pr.point_page_refs_mixed_eps_grid
+    real_d = _dpg.point_page_refs_mixed_eps_grid
+
+    def spy(side, real):
+        def wrapped(*a, **k):
+            calls[side] += 1
+            return real(*a, **k)
+        return wrapped
+
+    monkeypatch.setattr(_pr, "point_page_refs_mixed_eps_grid",
+                        spy("host", real_h))
+    monkeypatch.setattr(_dpg, "point_page_refs_mixed_eps_grid",
+                        spy("device", real_d))
+
+    engine_executor("device")                       # env forces device
+    sess.grid_profiles(cands, wls["point"])
+    assert calls == {"host": 0, "device": 1}
+
+    engine_executor("host")                         # explicit arg beats env
+    sess.grid_profiles(cands, wls["point"], executor="device")
+    assert calls == {"host": 0, "device": 2}
+    sess.grid_profiles(cands, wls["point"])         # env alone -> host
+    assert calls == {"host": 1, "device": 2}
+
+    engine_executor(None)                           # auto: by backend
+    sess.grid_profiles(cands, wls["point"])
+    auto = "device" if jax.default_backend() == "tpu" else "host"
+    assert calls[auto] == (3 if auto == "device" else 2)
+
+    with pytest.raises(ValueError, match="executor"):
+        sess.grid_profiles(cands, wls["point"], executor="gpu-ish")
+
+
+# ---------------------------------------------------------------------------
+# Multi-policy tables: policy as a knob, one launch
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("executor", ("host", "device"))
+def test_cross_policies_matches_single_policy_solves(world, executor):
+    """One multi-policy solve == three single-policy solves, per policy
+    block bit-for-bit, with identical per-policy winners and a global
+    winner equal to the best of the three."""
+    keys, wls = world
+    sess = CostSession(System(GEOM, BUDGET, "lru"))
+    tab = _table(sess, wls["mixed"])    # sorted part: exercises lfu coverage
+    n = len(tab)
+    multi = tab.cross_policies(POLICIES)
+    assert len(multi) == 3 * n
+    sol = PricingEngine(sess).price(tab.cross_policies(POLICIES),
+                                    executor=executor)
+    best_by_policy = {}
+    for j, pol in enumerate(POLICIES):
+        single = PricingEngine(CostSession(System(GEOM, BUDGET, pol))).price(
+            tab, executor=executor)
+        blk = slice(j * n, (j + 1) * n)
+        assert np.array_equal(sol.hit_rates[blk], single.hit_rates), pol
+        assert np.array_equal(sol.distinct[blk], single.distinct), pol
+        assert int(np.argmin(sol.objective[blk])) == single.best_cell, pol
+        best_by_policy[pol] = single.objective[single.best_cell]
+        for kn, (a, b) in tab.spans.items():
+            assert multi.spans[(pol, kn)] == (a + j * n, b + j * n)
+            assert multi.points_of[(pol, kn)]["policy"] == pol
+    assert sol.objective[sol.best_cell] == min(best_by_policy.values())
+
+
+def test_cross_policies_validation(world):
+    keys, wls = world
+    sess = CostSession(System(GEOM, BUDGET, "lru"))
+    tab = _table(sess, wls["point"])
+    with pytest.raises(ValueError):
+        tab.cross_policies(())
+    with pytest.raises(ValueError):
+        tab.cross_policies(("lru", "lru"))
+    with pytest.raises(ValueError):
+        tab.cross_policies(("arc",))
+    with pytest.raises(ValueError):               # no double-crossing
+        tab.cross_policies(("lru",)).cross_policies(("fifo",))
+
+
+def test_pols_column_survives_concat_and_subset(world):
+    keys, wls = world
+    sess = CostSession(System(GEOM, BUDGET, "lru"))
+    prof = sess.grid_profiles(_cands(), wls["point"])
+    plain = PriceTable.from_cells(prof, [("a", 0, np.array([4, 8]))])
+    multi = PriceTable.from_cells(
+        prof, [("b", 1, np.array([16, 32]))]).cross_policies(("lru", "lfu"))
+    cat = PriceTable.concat([plain, multi])
+    # plain cells carry -1 (session default); crossed cells their policy id
+    assert cat.pols is not None
+    assert cat.pols.tolist() == [-1, -1, 0, 0, 2, 2]
+    sub = cat.subset([1, 3, 5])
+    assert sub.pols.tolist() == [-1, 0, 2]
+    # all-default concat keeps pols=None (no phantom policy column)
+    plain2 = PriceTable.from_cells(prof, [("c", 2, np.array([64]))])
+    assert PriceTable.concat([plain, plain2]).pols is None
+
+
+# ---------------------------------------------------------------------------
+# PriceTable algebra — property tests (skip cleanly without hypothesis)
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def prof_point(world):
+    keys, wls = world
+    sess = CostSession(System(GEOM, BUDGET, "lru"))
+    return sess, sess.grid_profiles(_cands(), wls["point"])
+
+
+def _rand_table(prof, rng, tag, n_knobs):
+    cells = []
+    for j in range(n_knobs):
+        caps = rng.integers(2, 5000, rng.integers(1, 4))
+        cells.append((f"{tag}{j}", int(rng.integers(0, len(prof.knobs))),
+                      np.sort(caps)))
+    return PriceTable.from_cells(prof, cells)
+
+
+@given(st.integers(0, 2**31 - 1), st.integers(1, 4), st.integers(1, 4))
+@settings(max_examples=25, deadline=None)
+def test_concat_offset_invariant(prof_point, seed, n1, n2):
+    """concat keeps every span's cells, in order, at a pure offset."""
+    _, prof = prof_point
+    rng = np.random.default_rng(seed)
+    t1 = _rand_table(prof, rng, "a", n1)
+    t2 = _rand_table(prof, rng, "b", n2)
+    cat = PriceTable.concat([t1, t2])
+    assert len(cat) == len(t1) + len(t2)
+    assert np.array_equal(cat.rows, np.concatenate([t1.rows, t2.rows]))
+    assert np.array_equal(cat.caps, np.concatenate([t1.caps, t2.caps]))
+    for kn, (a, b) in t1.spans.items():
+        assert cat.spans[kn] == (a, b)
+    for kn, (a, b) in t2.spans.items():
+        assert cat.spans[kn] == (a + len(t1), b + len(t1))
+
+
+@given(st.integers(0, 2**31 - 1))
+@settings(max_examples=10, deadline=None)
+def test_solution_subset_roundtrip(prof_point, seed):
+    """PriceSolution.subset re-ranks the slice consistently with the full
+    solve, and subsetting a crossed table keeps each cell's policy id."""
+    sess, prof = prof_point
+    rng = np.random.default_rng(seed)
+    tab = _rand_table(prof, rng, "k", 3).cross_policies(("lru", "lfu"))
+    sol = PricingEngine(sess).price(tab, executor="host")
+    sel = np.sort(rng.choice(len(tab), size=rng.integers(1, len(tab) + 1),
+                             replace=False))
+    sub = sol.subset(sel)
+    assert np.array_equal(sub.hit_rates, sol.hit_rates[sel])
+    assert sub.best_cell == int(np.argmin(sol.objective[sel]))
+    assert np.array_equal(sub.table.pols, tab.pols[sel])
+
+
+@given(st.integers(0, 2**31 - 1))
+@settings(max_examples=10, deadline=None)
+def test_from_cells_matches_degenerate_from_profiles(prof_point, seed):
+    """from_profiles with no splits degenerates to one max-capacity cell
+    per knob — exactly what from_cells builds from profiles.caps."""
+    _, prof = prof_point
+    rng = np.random.default_rng(seed)
+    knobs = [kn for kn in prof.knobs if rng.integers(0, 2)] or [prof.knobs[0]]
+    tp = PriceTable.from_profiles(
+        prof, {kn: {} for kn in knobs}, splits=(),
+        budget_bytes=float(BUDGET), page_bytes=GEOM.page_bytes)
+    row_of = {kn: i for i, kn in enumerate(prof.knobs)}
+    tc = PriceTable.from_cells(
+        prof, [(kn, row_of[kn], np.asarray([prof.caps[row_of[kn]]]))
+               for kn in knobs])
+    assert np.array_equal(tp.rows, tc.rows)
+    assert np.array_equal(tp.caps, tc.caps)
+    assert tp.spans == tc.spans
+    assert tp.pols is None and tc.pols is None

@@ -94,3 +94,93 @@ def test_che_solve_matches_bisection():
         assert abs(consistency - cap) / cap < 1e-2
         t_ref = float(solve_che_time(p, cap))
         assert abs(float(t_kernel) - t_ref) / t_ref < 0.02
+
+
+# ---------------------------------------------------------------------------
+# Mixed-eps occupancy: device banded-matmul kernel vs host bincount oracle
+# ---------------------------------------------------------------------------
+
+from repro.core import page_ref  # noqa: E402
+from repro.kernels import profile_grid  # noqa: E402
+
+C_IPP = 128
+
+
+def _occupancy_pair(positions, eps_rows, num_pages):
+    ch, th = page_ref.point_page_refs_mixed_eps_grid(
+        positions, eps_rows, C_IPP, num_pages)
+    cd, td = profile_grid.point_page_refs_mixed_eps_grid(
+        positions, eps_rows, C_IPP, num_pages)
+    assert np.asarray(ch).shape == np.asarray(cd).shape
+    return (np.asarray(ch, np.float64), np.asarray(th, np.float64),
+            np.asarray(cd, np.float64), np.asarray(td, np.float64))
+
+
+def test_occupancy_exact_for_integer_mass():
+    """Slots >= 2*eps from both page boundaries make every Eq. 12 LUT entry
+    exactly 0 or 1, so the device float32 sums must carry the integer mass
+    EXACTLY — bit-equal counts and totals, no tolerance."""
+    rng = np.random.default_rng(11)
+    num_pages, q = 40, 1500
+    positions = rng.integers(0, num_pages, q) * C_IPP \
+        + rng.integers(16, 112, q)
+    eps_rows = rng.choice([1, 2, 4], size=(3, q)).astype(np.int64)
+    ch, th, cd, td = _occupancy_pair(positions, eps_rows, num_pages)
+    assert np.all(ch == np.round(ch))            # really integer mass
+    assert np.array_equal(ch, cd)
+    assert np.array_equal(th, td)
+
+
+def test_occupancy_general_within_float32_tolerance():
+    """Arbitrary slots + large pow2 eps classes: fractional LUT mass, so
+    host float64 and device float32 accumulation differ only by summation
+    order — <= 2e-6 normalized."""
+    rng = np.random.default_rng(5)
+    num_pages, q = 64, 4000
+    positions = rng.integers(0, num_pages * C_IPP, q)
+    eps_rows = rng.choice([1, 4, 16, 64, 256], size=(4, q)).astype(np.int64)
+    ch, th, cd, td = _occupancy_pair(positions, eps_rows, num_pages)
+    scale = max(1.0, float(ch.max()))
+    assert np.max(np.abs(ch - cd)) / scale < 2e-6
+    assert np.max(np.abs(th - td) / np.maximum(th, 1.0)) < 2e-6
+
+
+def test_occupancy_non_pow2_eps_fallback():
+    """Non-pow2 eps rows exercise the unique-rank class coding (no popcount
+    shortcut); both kernels share mixed_eps_class_codes so class grouping
+    is identical and the results agree."""
+    rng = np.random.default_rng(9)
+    num_pages, q = 32, 900
+    positions = rng.integers(0, num_pages * C_IPP, q)
+    eps_rows = rng.choice([3, 5, 12, 100], size=(2, q)).astype(np.int64)
+    ch, th, cd, td = _occupancy_pair(positions, eps_rows, num_pages)
+    scale = max(1.0, float(ch.max()))
+    assert np.max(np.abs(ch - cd)) / scale < 2e-6
+
+
+def test_occupancy_eps_zero_clamped_to_one():
+    """eps=0 rows clamp to eps=1 on both sides (the host kernel's guard)."""
+    rng = np.random.default_rng(2)
+    num_pages, q = 16, 400
+    positions = rng.integers(0, num_pages * C_IPP, q)
+    zeros = np.zeros((1, q), np.int64)
+    ones = np.ones((1, q), np.int64)
+    _, _, cd0, td0 = _occupancy_pair(positions, zeros, num_pages)
+    _, _, cd1, td1 = _occupancy_pair(positions, ones, num_pages)
+    assert np.array_equal(cd0, cd1)
+    assert np.array_equal(td0, td1)
+
+
+@pytest.mark.parametrize("q,num_pages", [(100, 7), (777, 37), (513, 129)])
+def test_occupancy_ragged_shapes(q, num_pages):
+    """Query counts off the 512-query tile and page counts off the lane
+    width pad internally; padded queries (key -1) contribute nothing and
+    the output slices back to exactly (K, num_pages)."""
+    rng = np.random.default_rng(q)
+    positions = rng.integers(0, num_pages * C_IPP, q)
+    eps_rows = rng.choice([2, 8], size=(2, q)).astype(np.int64)
+    ch, th, cd, td = _occupancy_pair(positions, eps_rows, num_pages)
+    assert cd.shape == (2, num_pages)
+    scale = max(1.0, float(ch.max()))
+    assert np.max(np.abs(ch - cd)) / scale < 2e-6
+    assert np.max(np.abs(th - td) / np.maximum(th, 1.0)) < 2e-6

@@ -455,3 +455,66 @@ def test_tv_distance_basics():
     assert tv_distance(a, b) == 1.0
     empty = {"x": np.zeros(2), "y": np.zeros(2)}
     assert tv_distance(empty, empty) == 0.0
+
+
+# ---------------------------------------------------------------------------
+# Device-resident drift retune: zero host bincounts, one launch per stage
+# ---------------------------------------------------------------------------
+
+def test_drift_retune_is_device_resident(engine_executor, monkeypatch):
+    """Structural: with device profiling configured, the whole serve →
+    drift → retune lifecycle keeps histograms on the accelerator.  The
+    host bincount kernel runs ZERO times, every sketch update is exactly
+    one device occupancy launch, and every solve (the initial deploy plus
+    each retune evaluation) is exactly one fused price-grid launch."""
+    import repro.core.page_ref as page_ref_mod
+    import repro.kernels.price_grid as price_grid_mod
+    import repro.kernels.profile_grid as profile_grid_mod
+    from repro.tuning.session import RMIBuilder
+
+    engine_executor("device")             # price side: fused DeviceExecutor
+    calls = {"host_bincount": 0, "profile_launch": 0, "price_launch": 0}
+
+    def spy(key, real):
+        def wrapped(*a, **k):
+            calls[key] += 1
+            return real(*a, **k)
+        return wrapped
+
+    monkeypatch.setattr(
+        page_ref_mod, "point_page_refs_mixed_eps_grid",
+        spy("host_bincount", page_ref_mod.point_page_refs_mixed_eps_grid))
+    monkeypatch.setattr(
+        page_ref_mod, "point_page_refs_mixed_eps",
+        spy("host_bincount", page_ref_mod.point_page_refs_mixed_eps))
+    monkeypatch.setattr(
+        profile_grid_mod, "point_page_refs_mixed_eps_grid",
+        spy("profile_launch",
+            profile_grid_mod.point_page_refs_mixed_eps_grid))
+    monkeypatch.setattr(price_grid_mod, "price_grid",
+                        spy("price_launch", price_grid_mod.price_grid))
+
+    tuning = TuningSession(_system(512 << 10))
+    # point-only drifting trace: the mixed-eps (RMI) path is the one the
+    # device occupancy kernel replaces
+    events = synthetic_drifting_trace(KEYS, [
+        {"events": 800, "mix": (1.0, 0.0, 0.0), "hot_center": 0.2,
+         "hot_width": 0.05},
+        {"events": 800, "mix": (1.0, 0.0, 0.0), "hot_center": 0.8,
+         "hot_width": 0.05},
+    ], seed=7)
+    srv = ServingSession(
+        tuning, RMIBuilder(KEYS), KEYS,
+        overrides={"branch": (16, 64)},
+        config=ServingConfig(batch_size=200, window_chunks=3,
+                             drift_threshold=0.12, hysteresis=0.04,
+                             cooldown_batches=1,
+                             profile_executor="device"))
+    srv.start(events[:400])
+    srv.observe(events[400:])
+
+    assert srv.stats.retune_evaluations >= 1     # the trace does drift
+    assert calls["host_bincount"] == 0
+    assert calls["profile_launch"] == srv.sketch.updates > 0
+    assert calls["price_launch"] == 1 + srv.stats.retune_evaluations
+    assert tuning.cost.engine.calls == calls["price_launch"]

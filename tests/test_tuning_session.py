@@ -467,3 +467,49 @@ def test_infeasible_everything_raises(world):
     ts = TuningSession(System(GEOM, 8 << 10, "lru"))
     with pytest.raises(ValueError, match="memory budget too small"):
         ts.tune(PGMBuilder(keys), wl, overrides={"eps": (8,)})
+
+
+# ---------------------------------------------------------------------------
+# Eviction policy as a knob
+# ---------------------------------------------------------------------------
+
+def test_policy_knob_joins_the_search(world, builders):
+    """tune(policies=...) crosses the table with the policy axis: the
+    result's best point names a policy, every estimate carries its policy,
+    and the winner reproduces the best of three single-policy tunes."""
+    keys, qk, qpos, wl = world
+    res = TuningSession(System(GEOM, BUDGET, "lru")).tune(
+        builders["pgm"], wl, overrides={"eps": (16, 64, 256)},
+        policies=("lru", "fifo", "lfu"))
+    assert res.best["policy"] in ("lru", "fifo", "lfu")
+    assert res.batched_solves == 1               # still ONE engine call
+    assert len(res.estimates) == 3 * 3           # (policy x eps) plane
+
+    singles = {}
+    for pol in ("lru", "fifo", "lfu"):
+        r = TuningSession(System(GEOM, BUDGET, pol)).tune(
+            builders["pgm"], wl, overrides={"eps": (16, 64, 256)})
+        singles[pol] = r
+        # the (pol, eps) sub-plane reprices the single-policy tune exactly
+        for kn, est in r.estimates.items():
+            joint = res.estimates[(pol, kn)]
+            assert joint.io_per_query == pytest.approx(est.io_per_query,
+                                                       abs=1e-12), (pol, kn)
+            assert joint.policy == pol
+    best_io = min(s.estimates[s.best_knob].io_per_query
+                  for s in singles.values())
+    assert res.estimates[res.best_knob].io_per_query \
+        == pytest.approx(best_io, abs=1e-12)
+    winners = {p for p, s in singles.items()
+               if s.estimates[s.best_knob].io_per_query
+               == pytest.approx(best_io, abs=1e-12)}
+    assert res.best["policy"] in winners
+
+
+def test_policy_knob_rejects_custom_tuner_combo(world, builders):
+    keys, qk, qpos, wl = world
+    from repro.tuning.session import CamTuner
+    with pytest.raises(ValueError, match="policies"):
+        TuningSession(System(GEOM, BUDGET, "lru")).tune(
+            builders["pgm"], wl, tuner=CamTuner(),
+            policies=("lru", "fifo"))
