@@ -36,7 +36,7 @@ def main() -> None:
                             bench_point_accuracy, bench_profile_grid,
                             bench_range_accuracy, bench_rmi_tuning_curve,
                             bench_serving_drift, bench_sharding,
-                            bench_tuning_e2e)
+                            bench_tuning_e2e, bench_write_path)
 
     table = {
         "point_accuracy": bench_point_accuracy.run,     # Table IV / Fig 1
@@ -52,6 +52,7 @@ def main() -> None:
         "kv_planner": bench_kv_planner.run,             # beyond-paper (Eq.15 serving)
         "estimate_grid": bench_estimate_grid.run,       # CostSession grid vs loop
         "serving_drift": bench_serving_drift.run,       # adaptive vs static
+        "write_path": bench_write_path.run,             # CAM merge scheduler
         "sharding": bench_sharding.run,                 # solved vs even split
         "engine": bench_engine.run,                     # fused executor vs host
         "profile_grid": bench_profile_grid.run,         # device occupancy kernel

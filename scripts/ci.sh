@@ -11,7 +11,9 @@
 # the mixed-eps-kernel speedup to benchmarks/results/tuning_e2e.json),
 # the join planner (incl. the join-tree budget-split section), the
 # serving drift loop (adaptive-vs-static gates recorded to
-# benchmarks/results/serving_drift.json), the sharded fleet search
+# benchmarks/results/serving_drift.json), the write-path merge scheduler
+# (CAM-vs-baselines gates recorded to benchmarks/results/write_path.json),
+# the sharded fleet search
 # (solved-boundaries-vs-even-split gates recorded to
 # benchmarks/results/sharding.json), and the pricing-engine executor pair
 # (fused-kernel-vs-host equivalence/speed gates recorded to
@@ -37,6 +39,7 @@ python -m benchmarks.run --smoke --only estimate_grid pgm_tuning_curve
 python -m benchmarks.bench_tuning_e2e --smoke
 python -m benchmarks.bench_join --smoke
 python -m benchmarks.bench_serving_drift --smoke
+python -m benchmarks.bench_write_path --smoke
 python -m benchmarks.bench_sharding --smoke
 python -m benchmarks.bench_engine --smoke
 python -m benchmarks.bench_profile_grid --smoke
@@ -44,7 +47,7 @@ python -m benchmarks.bench_profile_grid --smoke
 # every results JSON named in .github/workflows/ci.yml must exist after the
 # bench step — a missing file means a smoke section silently skipped
 for f in estimate_grid join_partition join_tree tuning_e2e serving_drift \
-         sharding engine_fused profile_grid; do
+         write_path sharding engine_fused profile_grid; do
     if [ ! -f "benchmarks/results/$f.json" ]; then
         echo "MISSING benchmark result: benchmarks/results/$f.json" >&2
         exit 1

@@ -38,6 +38,7 @@ __all__ = [
     "hit_rate_compulsory",
     "hit_rate",
     "hit_rate_grid",
+    "writeback_fraction",
     "sorted_scan_misses",
     "sorted_scan_hit_rate",
     "sorted_scan_hit_rate_grid",
@@ -193,6 +194,86 @@ def hit_rate_lfu(probs: jnp.ndarray, capacity) -> jnp.ndarray:
     cap = jnp.clip(jnp.asarray(capacity), 0, sorted_p.shape[0])
     mask = ranks < cap.astype(ranks.dtype)
     return jnp.sum(jnp.where(mask, sorted_p, 0.0))
+
+
+# ---------------------------------------------------------------------------
+# Dirty-page writeback — the second physical-I/O stream of a mutating mix
+# ---------------------------------------------------------------------------
+
+def _writeback_terms(policy: str, probs: jnp.ndarray, wprobs: jnp.ndarray,
+                     capacity) -> jnp.ndarray:
+    """Expected writebacks per reference for ONE (histogram, capacity) cell.
+
+    A write dirties its page in the pool; the dirty bit is flushed (one
+    physical write I/O) when the page is EVICTED — so the writeback stream
+    is the dirty-eviction rate, computable from the SAME characteristic-time
+    fixed point the hit rate already solves (no second bisection):
+
+    * page ``i``'s eviction rate equals its insertion (miss) rate,
+      ``q_i * (1 - o_i)`` per reference, with ``q_i`` the combined
+      read+write reference probability and ``o_i`` the policy occupancy
+      (Che Eq. 7 for LRU, Fricker Eq. 4 for FIFO);
+    * the evicted copy is dirty iff its residency started with a write
+      (prob ``w_i / q_i``) or a write arrived during the residency window
+      ``T`` (prob ``1 - exp(-w_i * T)`` for a read-born copy), giving
+
+          wb = sum_i (1 - o_i) * (w_i + r_i * (1 - exp(-w_i * T))),
+          r_i = q_i - w_i.
+
+    Limits sanity-check the form: ``C -> 0`` gives ``wb -> sum_i w_i`` (every
+    write flushes straight through), a pinned hot page (``o_i -> 1``) absorbs
+    its writes entirely.  Converged LFU never evicts its top-C pages, so its
+    writeback is exactly the write mass landing OUTSIDE the retained set —
+    the write-mass prefix sum under the combined-popularity order (ties
+    break identically to Eq. 9's ``argsort``, which keeps host and device
+    executors bit-aligned).
+    """
+    probs = jnp.asarray(probs)
+    wprobs = jnp.asarray(wprobs)
+    if policy == "lfu":
+        order = jnp.argsort(-probs)
+        w_sorted = wprobs[order]
+        prefix = jnp.cumsum(w_sorted)
+        cap = jnp.clip(jnp.asarray(capacity), 0,
+                       probs.shape[0]).astype(jnp.int32)
+        kept = jnp.where(cap > 0, prefix[jnp.maximum(cap - 1, 0)], 0.0)
+        return jnp.sum(wprobs) - kept
+    if policy == "lru":
+        t = solve_che_time(probs, capacity)
+        occ = -jnp.expm1(-probs * t)
+    elif policy == "fifo":
+        t = solve_fifo_tau(probs, capacity)
+        occ = probs * t / (1.0 - probs + probs * t)
+    else:
+        raise ValueError(f"unknown policy {policy!r}; "
+                         f"expected one of {POLICIES}")
+    r = jnp.maximum(probs - wprobs, 0.0)
+    dirty = wprobs + r * -jnp.expm1(-wprobs * t)
+    return jnp.sum((1.0 - occ) * dirty)
+
+
+def writeback_fraction(policy: str, probs: jnp.ndarray, wprobs: jnp.ndarray,
+                       capacity, n_distinct=None) -> jnp.ndarray:
+    """Regime-dispatched :func:`_writeback_terms` for one candidate.
+
+    ``probs`` is the COMBINED read+write reference-probability vector,
+    ``wprobs`` its write component.  Above ``N`` distinct pages nothing is
+    ever evicted, so steady-state writeback is zero (dirty pages stay
+    resident — the amortized semantics the replay oracle mirrors); below one
+    page every write flushes through.  Subtracting the result from the hit
+    rate prices the mix: ``io = (1 - (h - wb)) * E[DAC]`` counts fetches AND
+    flushes per reference.
+    """
+    probs = jnp.asarray(probs, jnp.float32)
+    wprobs = jnp.asarray(wprobs, jnp.float32)
+    nd = (jnp.sum(probs > 0) if n_distinct is None
+          else jnp.asarray(n_distinct))
+    cap_i = _exact_caps(jnp.asarray(capacity))
+    wb = _writeback_terms(policy, probs, wprobs,
+                          jnp.maximum(jnp.asarray(capacity, jnp.float32),
+                                      1.0))
+    wb = jnp.where(cap_i >= _exact_caps(nd), 0.0, wb)
+    return jnp.where(cap_i < 1, jnp.sum(wprobs), wb)
 
 
 # ---------------------------------------------------------------------------
@@ -518,6 +599,9 @@ def hit_rate_grid(
     sorted_pinned: Optional[jnp.ndarray] = None,
     sorted_min_caps: Optional[jnp.ndarray] = None,
     sorted_full_refs: Optional[jnp.ndarray] = None,
+    write_counts: Optional[jnp.ndarray] = None,
+    write_refs: Optional[jnp.ndarray] = None,
+    write_full_refs: Optional[jnp.ndarray] = None,
 ):
     """Hit rates for K (histogram, capacity) candidates in one vmapped solve.
 
@@ -542,6 +626,15 @@ def hit_rate_grid(
         :func:`sorted_scan_hit_rate_grid`.
       sorted_full_refs: (K,) full-workload sorted request volume (CAM-x
         scaling of the sorted part's expected misses).
+      write_counts / write_refs / write_full_refs: per-candidate write-stream
+        histograms ((K, P)), sample write mass and full write volume.  Write
+        references are COMBINED into the request histogram before the solve
+        (a write faults its target page like a read), and the dirty-eviction
+        writeback stream (:func:`writeback_fraction`) is subtracted from the
+        hit rate, so ``(1 - h) * E[DAC]`` prices fetches AND flushes of the
+        read/write mix in one number.  The returned ``h`` may be slightly
+        negative at tiny capacities (a write can cost fetch + flush > 1 I/O
+        per reference) — by construction, not by error.
 
     Returns:
       (hit_rates (K,), distinct_pages (K,)) — pages with nonzero mass in
@@ -555,6 +648,16 @@ def hit_rate_grid(
         fn = hit_rate_lfu
     else:
         raise ValueError(f"unknown policy {policy!r}; expected one of {POLICIES}")
+    has_write = write_counts is not None
+    if has_write:
+        # writes fault their target page exactly like reads: fold the write
+        # stream into the request histogram so misses price automatically,
+        # then add the dirty-eviction flush stream below.
+        counts = counts + write_counts
+        sample_refs = sample_refs + jnp.asarray(write_refs,
+                                                jnp.asarray(sample_refs).dtype)
+        full_refs = full_refs + jnp.asarray(write_full_refs,
+                                            jnp.asarray(full_refs).dtype)
     probs = counts / jnp.maximum(sample_refs[:, None], 1e-30)
     n_distinct_i = jnp.sum(counts > 0, axis=1)
     n_distinct = n_distinct_i.astype(jnp.float32)
@@ -564,9 +667,16 @@ def hit_rate_grid(
     # only runs below n_distinct, far under the rounding threshold.
     cap_i = _exact_caps(capacities)
     h_policy = jax.vmap(lambda p, c: fn(p, jnp.maximum(c, 1.0)))(probs, cap_f)
+    floor = jnp.zeros_like(h_policy)
+    if has_write:
+        wprobs = write_counts / jnp.maximum(sample_refs[:, None], 1e-30)
+        wb = jax.vmap(lambda p, w, c: _writeback_terms(
+            policy, p, w, jnp.maximum(c, 1.0)))(probs, wprobs, cap_f)
+        h_policy = h_policy - wb
+        floor = -jnp.sum(wprobs, axis=1)  # cap < 1: every write flushes
     h_comp = hit_rate_compulsory(full_refs, n_distinct)
     h = jnp.where(cap_i >= n_distinct_i, h_comp, h_policy)
-    h = jnp.where(cap_i < 1, 0.0, h)
+    h = jnp.where(cap_i < 1, floor, h)
     h = jnp.where(jnp.asarray(sample_refs, jnp.float32) > 0, h, 0.0)
     if sorted_coverage is None:
         return h, n_distinct

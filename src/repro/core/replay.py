@@ -23,16 +23,23 @@ __all__ = [
     "make_buffer",
     "replay_refs",
     "replay_windows",
+    "replay_write_refs",
 ]
 
 
 class Buffer:
-    """Page buffer interface: ``access(page) -> hit?``."""
+    """Page buffer interface: ``access(page) -> hit?``.
+
+    ``last_evicted`` holds the page evicted by the most recent ``access``
+    (None when the access hit or fit without eviction) — the hook the
+    write-replay oracle uses to count dirty-page writebacks.
+    """
 
     def __init__(self, capacity: int):
         if capacity < 1:
             raise ValueError("buffer capacity must be >= 1 page")
         self.capacity = int(capacity)
+        self.last_evicted = None
 
     def access(self, page: int) -> bool:  # pragma: no cover - interface
         raise NotImplementedError
@@ -48,11 +55,12 @@ class LRUBuffer(Buffer):
 
     def access(self, page: int) -> bool:
         od = self._od
+        self.last_evicted = None
         if page in od:
             od.move_to_end(page)
             return True
         if len(od) >= self.capacity:
-            od.popitem(last=False)
+            self.last_evicted, _ = od.popitem(last=False)
         od[page] = None
         return False
 
@@ -67,10 +75,13 @@ class FIFOBuffer(Buffer):
         self._resident: set = set()
 
     def access(self, page: int) -> bool:
+        self.last_evicted = None
         if page in self._resident:
             return True
         if len(self._resident) >= self.capacity:
-            self._resident.discard(self._queue.popleft())
+            victim = self._queue.popleft()
+            self._resident.discard(victim)
+            self.last_evicted = victim
         self._queue.append(page)
         self._resident.add(page)
         return False
@@ -91,6 +102,7 @@ class LFUBuffer(Buffer):
     def access(self, page: int) -> bool:
         freq = self._freq
         buckets = self._buckets
+        self.last_evicted = None
         if page in freq:
             f = freq[page]
             del buckets[f][page]
@@ -107,6 +119,7 @@ class LFUBuffer(Buffer):
             if not victims:
                 del buckets[self._minfreq]
             del freq[victim]
+            self.last_evicted = victim
         freq[page] = 1
         buckets.setdefault(1, OrderedDict())[page] = None
         self._minfreq = 1
@@ -132,6 +145,7 @@ class CLOCKBuffer(Buffer):
         self._hand = 0
 
     def access(self, page: int) -> bool:
+        self.last_evicted = None
         if page in self._refbit:
             self._refbit[page] = 1
             return True
@@ -148,6 +162,7 @@ class CLOCKBuffer(Buffer):
             else:
                 del self._refbit[victim]
                 del self._slot[victim]
+                self.last_evicted = victim
                 self._frames[self._hand] = page
                 self._slot[page] = self._hand
                 self._refbit[page] = 1
@@ -180,6 +195,39 @@ def replay_refs(
         if access(int(page)):
             hits += 1
     return hits, len(refs) - hits
+
+
+def replay_write_refs(
+    refs: Sequence[int],
+    is_write: Sequence[bool],
+    capacity: int,
+    policy: str = "lru",
+) -> Tuple[int, int]:
+    """Replay a mixed read/write page trace. Returns (fetches, writebacks).
+
+    Write refs pull the page through the same buffer (a write miss fetches
+    the page first) and mark it dirty; evicting a dirty page costs one
+    writeback.  Dirty pages still resident at end of trace are NOT flushed —
+    the estimator models the amortized steady state, where writeback
+    happens at eviction time and a page pinned in an infinite cache is
+    never written back.
+    """
+    buf = make_buffer(policy, capacity)
+    access = buf.access
+    dirty: set = set()
+    fetches = 0
+    writebacks = 0
+    for page, w in zip(refs, is_write):
+        page = int(page)
+        if not access(page):
+            fetches += 1
+        victim = buf.last_evicted
+        if victim is not None and victim in dirty:
+            dirty.discard(victim)
+            writebacks += 1
+        if w:
+            dirty.add(page)
+    return fetches, writebacks
 
 
 def replay_windows(

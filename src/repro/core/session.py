@@ -31,11 +31,13 @@ import numpy as np
 
 from repro.core import cache_models, dac, page_ref
 from repro.core.cam import CamEstimate, CamGeometry, capacity_pages
-from repro.core.workload import MIXED, POINT, RANGE, SORTED, Workload
+from repro.core.workload import (INSERT, MIXED, POINT, RANGE, SORTED,
+                                 WRITE_KINDS, Workload)
 
 __all__ = [
     "System",
     "SortedScanPart",
+    "WriteStreamPart",
     "PageRefProfile",
     "IndexModel",
     "UniformEpsModel",
@@ -183,6 +185,33 @@ class SortedScanPart:
 
 
 @dataclasses.dataclass
+class WriteStreamPart:
+    """Write-reference statistics of a mutating workload part.
+
+    ``counts`` is the expected WRITE-reference histogram (the pages a write
+    dirties — the eps-0 target window scaled by the structure's write
+    amplification), ``total_refs`` its sample mass.  The cache solve folds
+    these into the combined request histogram (a write faults its page like
+    a read) and prices the dirty-eviction writeback stream on top — see
+    ``cache_models.hit_rate_grid``'s ``write_*`` arguments.
+    """
+
+    counts: jnp.ndarray
+    total_refs: float
+
+
+def _merge_write_parts(parts: Sequence[WriteStreamPart]) -> WriteStreamPart:
+    """Merge write sub-streams: histograms and reference mass add."""
+    if len(parts) == 1:
+        return parts[0]
+    counts = parts[0].counts
+    for p in parts[1:]:
+        counts = counts + p.counts
+    return WriteStreamPart(counts=counts,
+                           total_refs=sum(p.total_refs for p in parts))
+
+
+@dataclasses.dataclass
 class PageRefProfile:
     """Structural page-reference summary an index reports for a workload.
 
@@ -201,6 +230,7 @@ class PageRefProfile:
     distinct_pages: Optional[float] = None
     min_capacity: int = 1                 # Thm III.1 capacity premise
     sorted_part: Optional[SortedScanPart] = None
+    write_part: Optional[WriteStreamPart] = None
 
 
 @runtime_checkable
@@ -300,6 +330,13 @@ def _exact_cap_array(values) -> jnp.ndarray:
     return jnp.asarray(np.clip(arr, -1, 2**31 - 129).astype(np.int32))
 
 
+def _pad_row(row: jnp.ndarray, width: int) -> jnp.ndarray:
+    """Zero-pad a (P,) histogram row out to ``width`` pages."""
+    row = jnp.asarray(row, jnp.float32)
+    pad = width - int(row.shape[0])
+    return row if pad <= 0 else jnp.pad(row, (0, pad))
+
+
 def _stack_or_share(coverages: Sequence[jnp.ndarray]) -> jnp.ndarray:
     """One (P,) row when every candidate references the SAME stream object
     (uniform-eps grids: sorted windows are eps-independent), else a stacked
@@ -327,12 +364,19 @@ def _merge_sorted_parts(parts: Sequence[SortedScanPart]) -> SortedScanPart:
 
 
 def uniform_eps_profile(workload: Workload, eps: int, geom: CamGeometry,
-                        n: Optional[int] = None) -> PageRefProfile:
+                        n: Optional[int] = None,
+                        write_amp: float = 1.0) -> PageRefProfile:
     """Shared profile for any uniformly error-bounded design (PGM, RadixSpline).
 
     Dispatches on the workload shape; mixed workloads sum part histograms,
     with sorted parts accumulated separately into ``sorted_part`` (they are
-    priced by the policy-aware sorted-scan model, not the IRM fixed point).
+    priced by the policy-aware sorted-scan model, not the IRM fixed point)
+    and mutating parts into ``write_part``.  A write locates its target
+    through the same eps-window search a point lookup pays (read
+    references), then dirties the target page itself — ``write_amp`` scales
+    the INSERT dirty mass (structure-dependent shifting: gapped arrays /
+    node splits touch more than one page per insert; updates and deletes
+    stay in place).
     """
     n = int(n if n is not None else workload.n)
     num_pages = geom.num_pages(n)
@@ -342,6 +386,18 @@ def uniform_eps_profile(workload: Workload, eps: int, geom: CamGeometry,
             geom.c_ipp, num_pages)
         e_dac = float(dac.expected_dac(eps, geom.c_ipp, geom.strategy))
         return PageRefProfile(counts, float(total), e_dac)
+    if workload.kind in WRITE_KINDS:
+        counts, total = page_ref.point_page_refs(
+            jnp.asarray(workload.positions, jnp.int32), int(eps),
+            geom.c_ipp, num_pages)
+        wcounts, wtotal = page_ref.point_page_refs(
+            jnp.asarray(workload.positions, jnp.int32), 0,
+            geom.c_ipp, num_pages)
+        amp = float(write_amp) if workload.kind == INSERT else 1.0
+        e_dac = float(dac.expected_dac(eps, geom.c_ipp, geom.strategy)) + amp
+        wp = WriteStreamPart(counts=wcounts * jnp.float32(amp),
+                             total_refs=float(wtotal) * amp)
+        return PageRefProfile(counts, float(total), e_dac, write_part=wp)
     if workload.kind == RANGE:
         counts, total = page_ref.range_page_refs(
             jnp.asarray(workload.positions, jnp.int32),
@@ -356,24 +412,31 @@ def uniform_eps_profile(workload: Workload, eps: int, geom: CamGeometry,
         total = 0.0
         dac_mass = 0.0
         sorted_parts = []
+        write_parts = []
         for part in workload.parts:
-            prof = uniform_eps_profile(part, eps, geom, n)
+            prof = uniform_eps_profile(part, eps, geom, n,
+                                       write_amp=write_amp)
             dac_mass += prof.expected_dac * part.n_queries
             if prof.sorted_part is not None:
                 sorted_parts.append(prof.sorted_part)
+            if prof.write_part is not None:
+                write_parts.append(prof.write_part)
             if not prof.sorted_stream:
                 counts = counts + prof.counts
                 total += prof.total_refs
         e_dac = dac_mass / max(workload.n_queries, 1)
+        wp = _merge_write_parts(write_parts) if write_parts else None
         if not sorted_parts:
-            return PageRefProfile(counts, total, e_dac)
+            return PageRefProfile(counts, total, e_dac, write_part=wp)
         sp = _merge_sorted_parts(sorted_parts)
-        if total <= 0.0:   # every part is sorted: still a pure sorted stream
+        if total <= 0.0 and wp is None:
+            # every part is sorted: still a pure sorted stream
             return PageRefProfile(
                 counts=None, total_refs=sp.total_refs, expected_dac=e_dac,
                 sorted_stream=True, distinct_pages=sp.distinct_pages,
                 min_capacity=sp.min_capacity, sorted_part=sp)
-        return PageRefProfile(counts, total, e_dac, sorted_part=sp)
+        return PageRefProfile(counts, total, e_dac, sorted_part=sp,
+                              write_part=wp)
     raise UnsupportedWorkloadError(workload.kind)
 
 
@@ -455,15 +518,25 @@ class GridProfiles:
     skipped: Tuple[SkippedCandidate, ...]
     scale: float                            # full/sample request-volume ratio
     n_queries: int
+    #: Per-candidate write streams ((), the read-only default, means none).
+    wparts: Tuple[Optional[WriteStreamPart], ...] = ()
 
     def sorted_refs(self, i: int) -> float:
         sp = self.sparts[i]
         return sp.total_refs if sp is not None else 0.0
 
+    def wpart(self, i: int) -> Optional[WriteStreamPart]:
+        return self.wparts[i] if self.wparts else None
+
+    def write_refs(self, i: int) -> float:
+        wp = self.wpart(i)
+        return wp.total_refs if wp is not None else 0.0
+
     @classmethod
     def from_accumulated(cls, system, knobs, counts, totals, dac_mass,
                          sizes, sparts, n_queries,
-                         skipped: Sequence["SkippedCandidate"] = ()
+                         skipped: Sequence["SkippedCandidate"] = (),
+                         wparts: Sequence[Optional[WriteStreamPart]] = ()
                          ) -> "GridProfiles":
         """Assemble profiles from incrementally accumulated sums.
 
@@ -490,7 +563,8 @@ class GridProfiles:
             sparts=tuple(sparts),
             skipped=tuple(skipped),
             scale=1.0,
-            n_queries=int(n_queries))
+            n_queries=int(n_queries),
+            wparts=tuple(wparts))
 
 
 @dataclasses.dataclass
@@ -590,8 +664,8 @@ class CostSession:
             estimates[knob] = CamEstimate(
                 io_per_query=io, hit_rate=float(h[i]),
                 dac=float(prof.dacs[i]), capacity_pages=int(prof.caps[i]),
-                total_refs=(float(prof.totals[i])
-                            + prof.sorted_refs(i)) * prof.scale,
+                total_refs=(float(prof.totals[i]) + prof.sorted_refs(i)
+                            + prof.write_refs(i)) * prof.scale,
                 distinct_pages=float(n_distinct[i]),
                 estimation_seconds=per, policy=self.system.policy,
                 device_cost=self._device_cost(io))
@@ -668,6 +742,12 @@ class CostSession:
                 if sp is not None and sp.coverage is not None:
                     sp = dataclasses.replace(sp, coverage=pad(sp.coverage))
                 sparts.append(sp)
+        wparts = []
+        for _, p in parts:
+            for wp in (p.wparts if p.wparts else (None,) * len(p.knobs)):
+                if wp is not None:
+                    wp = dataclasses.replace(wp, counts=pad(wp.counts))
+                wparts.append(wp)
         return GridProfiles(
             knobs=tuple((key, kn) for key, p in parts for kn in p.knobs),
             counts=jnp.concatenate([pad(p.counts) for _, p in parts]),
@@ -679,7 +759,9 @@ class CostSession:
             skipped=tuple(SkippedCandidate((key, s.knob), s.reason)
                           for key, p in parts for s in p.skipped),
             scale=float(scales.pop()),
-            n_queries=sum(p.n_queries for _, p in parts))
+            n_queries=sum(p.n_queries for _, p in parts),
+            wparts=(tuple(wparts) if any(wp is not None for wp in wparts)
+                    else ()))
 
     def solve_profiles(self, profiles: GridProfiles, capacities,
                        rows: Optional[np.ndarray] = None,
@@ -728,6 +810,22 @@ class CostSession:
         full_refs = sample_refs * profiles.scale
         caps_arr = _exact_cap_array(capacities)
         num_pages = int(profiles.counts.shape[1])
+        wkw = {}
+        wps = [profiles.wpart(i) for i in idx]
+        if any(wp is not None for wp in wps):
+            # Mutating mix: fold write streams into the solve (combined
+            # request histogram + dirty-eviction writeback, see
+            # hit_rate_grid).  _stack_or_share keeps the common
+            # shared-stream case (write windows are knob-independent for
+            # uniform grids) a single (P,) row.
+            zero_w = jnp.zeros((num_pages,), jnp.float32)
+            w_refs = jnp.asarray([wp.total_refs if wp is not None else 0.0
+                                  for wp in wps], jnp.float32)
+            wkw = dict(
+                write_counts=_stack_or_share(
+                    [wp.counts if wp is not None else zero_w for wp in wps]),
+                write_refs=w_refs,
+                write_full_refs=w_refs * profiles.scale)
         sparts = [profiles.sparts[i] for i in idx]
         surrogate = {}
         if any(sp is not None for sp in sparts):
@@ -755,10 +853,10 @@ class CostSession:
                     [sp.pinned_retouches for sp in sps], jnp.float32),
                 sorted_min_caps=_exact_cap_array(
                     [sp.min_capacity for sp in sps]),
-                sorted_full_refs=s_refs * profiles.scale)
+                sorted_full_refs=s_refs * profiles.scale, **wkw)
         else:
             h, n_distinct = cache_models.hit_rate_grid(
-                policy, counts, sample_refs, full_refs, caps_arr)
+                policy, counts, sample_refs, full_refs, caps_arr, **wkw)
         h = np.asarray(h, np.float64)
         n_distinct = np.asarray(n_distinct, np.float64)
         for i, true_n in surrogate.items():
@@ -792,8 +890,9 @@ class CostSession:
         backed = [c for c in feasible if c.index is not None]
 
         rows, totals, dacs, knobs, sparts, sizes = [], [], [], [], [], []
+        wparts = []
         if uniform:
-            counts_u, totals_u, dacs_u, spart_u = self._uniform_grid(
+            counts_u, totals_u, dacs_u, spart_u, wpart_u = self._uniform_grid(
                 uniform, wl)
             rows.extend(counts_u)
             totals.extend(totals_u)
@@ -811,6 +910,10 @@ class CostSession:
                     spart_u,
                     min_capacity=1 + int(np.ceil(2 * c.eps / geom.c_ipp)))
                 for c in uniform)
+            # Write target windows are eps-independent too: ONE shared
+            # stream object per grid (solve_profiles' _stack_or_share then
+            # keeps a single (P,) row for the whole grid).
+            wparts.extend(wpart_u for _ in uniform)
         mixed_rows = self._mixed_eps_rows(backed, wl, skipped,
                                           batch_mixed_eps, executor)
         for c in backed:
@@ -823,6 +926,7 @@ class CostSession:
                 totals.append(total_c)
                 dacs.append(dac_c)
                 sparts.append(None)
+                wparts.append(None)
                 knobs.append(c.knob)
                 sizes.append(c.size_bytes)
                 continue
@@ -854,6 +958,7 @@ class CostSession:
                 rows.append(prof.counts)
                 totals.append(prof.total_refs)
                 sparts.append(prof.sorted_part)
+            wparts.append(prof.write_part)
             dacs.append(prof.expected_dac)
             knobs.append(c.knob)
             sizes.append(c.size_bytes)
@@ -864,6 +969,23 @@ class CostSession:
                        + "; ".join(s.reason for s in skipped) + ")")
 
         sizes_arr = np.asarray(sizes, np.float64)
+        widths = [int(jnp.asarray(r).shape[0]) for r in rows]
+        if len(set(widths)) > 1:
+            # Index-backed candidates may live in per-knob SLOT spaces
+            # (gapped/fill-factor layouts: more slack = more pages), so
+            # histogram rows can differ in width.  Zero-pad to the widest:
+            # absent pages carry no reference mass, so probabilities,
+            # n_distinct and the fixed points are unchanged.
+            width = max(widths)
+            rows = [_pad_row(r, width) for r in rows]
+            sparts = [sp if sp is None or sp.coverage is None
+                      else dataclasses.replace(
+                          sp, coverage=_pad_row(sp.coverage, width))
+                      for sp in sparts]
+            wparts = [wp if wp is None
+                      else WriteStreamPart(_pad_row(wp.counts, width),
+                                           wp.total_refs)
+                      for wp in wparts]
         return GridProfiles(
             knobs=tuple(knobs),
             counts=jnp.stack([jnp.asarray(r, jnp.float32) for r in rows]),
@@ -875,7 +997,9 @@ class CostSession:
             sparts=tuple(sparts),
             skipped=tuple(skipped),
             scale=float(wl.scale),
-            n_queries=int(wl.n_queries))
+            n_queries=int(wl.n_queries),
+            wparts=(tuple(wparts) if any(wp is not None for wp in wparts)
+                    else ()))
 
     def _mixed_eps_rows(self, backed, wl: Workload, skipped,
                         batch_mixed_eps: bool,
@@ -1043,6 +1167,7 @@ class CostSession:
         dac_per_query = np.asarray(
             dac.expected_dac(eps_f, geom.c_ipp, geom.strategy), np.float64)
         sorted_parts = []
+        write_parts = []
 
         def grid_counts(w: Workload):
             if w.kind == POINT:
@@ -1052,6 +1177,22 @@ class CostSession:
                     jnp.asarray(w.positions, jnp.int32), eps_arr, d_radius,
                     geom.c_ipp, num_pages)
                 dac_mass = dac_per_query * w.n_queries
+                return counts, np.asarray(totals, np.float64), dac_mass
+            if w.kind in WRITE_KINDS:
+                # locate references vary with eps (same banded kernel as
+                # point); the dirtied target window is eps-independent, so
+                # ONE shared write stream serves the whole grid (amp = 1:
+                # un-built uniform-eps candidates have no gap structure).
+                d_radius = page_ref.lut_radius(max(c.eps for c in cands),
+                                               geom.c_ipp)
+                counts, totals = page_ref.point_page_refs_grid(
+                    jnp.asarray(w.positions, jnp.int32), eps_arr, d_radius,
+                    geom.c_ipp, num_pages)
+                wcounts, wtotal = page_ref.point_page_refs(
+                    jnp.asarray(w.positions, jnp.int32), 0,
+                    geom.c_ipp, num_pages)
+                write_parts.append(WriteStreamPart(wcounts, float(wtotal)))
+                dac_mass = (dac_per_query + 1.0) * w.n_queries
                 return counts, np.asarray(totals, np.float64), dac_mass
             if w.kind == RANGE:
                 counts, totals = page_ref.range_page_refs_grid(
@@ -1080,7 +1221,8 @@ class CostSession:
         counts, totals, dac_mass = grid_counts(wl)
         dacs = dac_mass / max(wl.n_queries, 1)
         spart = (_merge_sorted_parts(sorted_parts) if sorted_parts else None)
-        return list(counts), list(totals), list(dacs), spart
+        wpart = (_merge_write_parts(write_parts) if write_parts else None)
+        return list(counts), list(totals), list(dacs), spart, wpart
 
     def _finish(self, prof: PageRefProfile, wl: Workload, cap: int,
                 t0: float) -> CamEstimate:
@@ -1107,17 +1249,31 @@ class CostSession:
                                time.perf_counter() - t0,
                                self._sorted_label(cap, sp),
                                device_cost=self._device_cost(io))
-        full_refs = prof.total_refs * wl.scale
+        wp = prof.write_part
+        counts = prof.counts
+        sample_refs = prof.total_refs
+        if wp is not None:
+            # combined read+write request histogram — same pre-combine the
+            # batched solve (hit_rate_grid's write_* path) applies
+            counts = counts + wp.counts
+            sample_refs = sample_refs + wp.total_refs
+        full_refs = sample_refs * wl.scale
         n_distinct = (float(prof.distinct_pages)
                       if prof.distinct_pages is not None
-                      else float(jnp.sum(prof.counts > 0)))
-        if cap <= 0 or prof.total_refs <= 0:
-            h = 0.0
+                      else float(jnp.sum(counts > 0)))
+        if cap <= 0 or sample_refs <= 0:
+            h = (0.0 if wp is None or sample_refs <= 0
+                 else -wp.total_refs / sample_refs)
         else:
-            probs = prof.counts / jnp.maximum(float(prof.total_refs), 1e-30)
+            probs = counts / jnp.maximum(float(sample_refs), 1e-30)
             h = float(cache_models.hit_rate(
                 self.system.policy, cap, probs, total_requests=full_refs,
                 distinct_pages=n_distinct))
+            if wp is not None:
+                h -= float(cache_models.writeback_fraction(
+                    self.system.policy, probs,
+                    wp.counts / jnp.maximum(float(sample_refs), 1e-30),
+                    cap, n_distinct))
         sp = prof.sorted_part
         if sp is not None:
             # Mixed workload with sorted sub-streams: expected misses add

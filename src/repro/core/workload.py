@@ -25,8 +25,15 @@ POINT = "point"
 RANGE = "range"
 SORTED = "sorted"
 MIXED = "mixed"
+INSERT = "insert"
+UPDATE = "update"
+DELETE = "delete"
 
-_KINDS = (POINT, RANGE, SORTED, MIXED)
+#: Mutating kinds — point-shaped (one target rank per event): ``positions``
+#: carry the located rank of the written key, ``query_keys`` the raw key.
+WRITE_KINDS = (INSERT, UPDATE, DELETE)
+
+_KINDS = (POINT, RANGE, SORTED, MIXED) + WRITE_KINDS
 
 
 def locate(keys: np.ndarray, query_keys: np.ndarray) -> np.ndarray:
@@ -105,6 +112,30 @@ class Workload:
         """Sorted probe stream (joins): per-probe position windows, in order."""
         return cls(SORTED, positions=np.asarray(window_lo, np.int64),
                    hi_positions=np.asarray(window_hi, np.int64), n=n)
+
+    @classmethod
+    def insert(cls, positions: np.ndarray, *, n: Optional[int] = None,
+               query_keys: Optional[np.ndarray] = None) -> "Workload":
+        """Inserts at pre-located target ranks (where the new key lands)."""
+        return cls(INSERT, positions=np.asarray(positions, np.int64),
+                   query_keys=None if query_keys is None
+                   else np.asarray(query_keys), n=n)
+
+    @classmethod
+    def update(cls, positions: np.ndarray, *, n: Optional[int] = None,
+               query_keys: Optional[np.ndarray] = None) -> "Workload":
+        """In-place value updates at pre-located true ranks."""
+        return cls(UPDATE, positions=np.asarray(positions, np.int64),
+                   query_keys=None if query_keys is None
+                   else np.asarray(query_keys), n=n)
+
+    @classmethod
+    def delete(cls, positions: np.ndarray, *, n: Optional[int] = None,
+               query_keys: Optional[np.ndarray] = None) -> "Workload":
+        """Deletes (tombstone writes) at pre-located true ranks."""
+        return cls(DELETE, positions=np.asarray(positions, np.int64),
+                   query_keys=None if query_keys is None
+                   else np.asarray(query_keys), n=n)
 
     @classmethod
     def mixed(cls, *parts: "Workload") -> "Workload":
@@ -216,13 +247,17 @@ class Workload:
             return tuple(segs)
         if self.positions is None or self.n_queries == 0:
             return tuple(dataclasses.replace(self) for _ in range(n_segs))
-        if self.kind == POINT:
+        if self.kind in (POINT,) + WRITE_KINDS:
+            # Writes are point-shaped: each event targets exactly one rank,
+            # so segment routing is the same searchsorted bucket — the kind
+            # tag rides along losslessly (ShardingSession must not silently
+            # downgrade mutating traffic to reads).
             seg_of = np.searchsorted(cuts, self.positions, side="right")
             out = []
             for s in range(n_segs):
                 m = seg_of == s
                 out.append(Workload(
-                    POINT, positions=self.positions[m],
+                    self.kind, positions=self.positions[m],
                     query_keys=(None if self.query_keys is None
                                 else self.query_keys[m]),
                     n=self.n))

@@ -87,6 +87,22 @@ class DeviceExecutor:
         sample_f = np.asarray(profiles.totals, np.float64)[urows]
         sample_f = sample_f.astype(np.float32)
         full_f = sample_f * np.float32(profiles.scale)
+        wps = ([profiles.wparts[i] for i in urows]
+               if profiles.wparts else [])
+        has_write = any(wp is not None for wp in wps)
+        if has_write:
+            # fold the write stream into the request histogram BEFORE
+            # normalizing (hit_rate_grid order): writes fault their pages
+            # like reads, and probs/n_distinct/pmin describe the mix.
+            zero_w = jnp.zeros((num_pages,), jnp.float32)
+            w_counts = jnp.stack(
+                [jnp.asarray(wp.counts, jnp.float32) if wp is not None
+                 else zero_w for wp in wps])
+            w_refs = np.asarray([wp.total_refs if wp is not None else 0.0
+                                 for wp in wps], np.float32)
+            counts = counts + w_counts
+            sample_f = sample_f + w_refs
+            full_f = full_f + w_refs * np.float32(profiles.scale)
         probs = counts / jnp.maximum(
             jnp.asarray(sample_f)[:, None], 1e-30)
         nd_i = np.asarray(jnp.sum(counts > 0, axis=1), np.int64)
@@ -129,13 +145,23 @@ class DeviceExecutor:
                 cov_desc = -jnp.sort(-cov, axis=1)
         sorted_probs = (-jnp.sort(-probs, axis=1)
                         if policy in ("lfu", "multi") else dummy)
+        wprobs = wprobs_q = None
+        if has_write:
+            wprobs = w_counts / jnp.maximum(
+                jnp.asarray(sample_f)[:, None], 1e-30)
+            if policy in ("lfu", "multi"):
+                # the LFU resident set is the top-C of the COMBINED stream;
+                # permute write mass into that order (argsort tie-break
+                # matches cache_models._writeback_terms)
+                wprobs_q = jnp.take_along_axis(
+                    wprobs, jnp.argsort(-probs, axis=1), axis=1)
 
         # ---- one fused launch -------------------------------------------
         h2, _, best_id = _pg.price_grid(
             policy, probs, sorted_probs, cov_desc,
             jnp.asarray(f32s), jnp.asarray(i32s), jnp.asarray(caps_f),
-            jnp.asarray(caps_i), jnp.asarray(ids),
-            has_sorted=has_sorted,
+            jnp.asarray(caps_i), jnp.asarray(ids), wprobs, wprobs_q,
+            has_sorted=has_sorted, has_write=has_write,
             interpret=kernel_ops._auto_interpret(self.interpret))
         h = np.asarray(h2, np.float64)[inv, slot]
 

@@ -30,15 +30,19 @@ from repro.core import page_ref
 from repro.core.cam import CamGeometry
 from repro.core.session import (PageRefProfile, UnsupportedWorkloadError,
                                 sorted_stream_profile, uniform_eps_profile)
-from repro.core.workload import POINT, SORTED, Workload
+from repro.core.workload import POINT, SORTED, Workload, locate
 from repro.index import pgm as pgm_mod
 from repro.index import radixspline as rs_mod
 from repro.index import rmi as rmi_mod
+from repro.index.gapped import (btree_slots, btree_write_amp, gapped_slots,
+                                gapped_write_amp, to_slot_space)
 
-__all__ = ["PGMAdapter", "RMIAdapter", "RadixSplineAdapter", "quantize_eps",
+__all__ = ["PGMAdapter", "RMIAdapter", "RadixSplineAdapter", "ALEXAdapter",
+           "BTreeAdapter", "quantize_eps",
            "ADAPTERS", "wrap_index", "sqrt2_grid", "pow2_grid",
            "DEFAULT_EPS_GRID", "DEFAULT_BRANCH_GRID",
-           "DEFAULT_RADIX_BITS_GRID"]
+           "DEFAULT_RADIX_BITS_GRID", "DEFAULT_GAP_DENSITY_GRID",
+           "DEFAULT_FILL_FACTOR_GRID"]
 
 
 def sqrt2_grid(lo: int = 4, hi: int = 4096) -> tuple:
@@ -67,6 +71,8 @@ def pow2_grid(lo: int = 2**6, hi: int = 2**16) -> tuple:
 DEFAULT_EPS_GRID = sqrt2_grid()                        # sqrt(2)-spaced 4..4096
 DEFAULT_BRANCH_GRID = pow2_grid()                      # doubling 64..65536
 DEFAULT_RADIX_BITS_GRID = (8, 10, 12, 14, 16, 18)
+DEFAULT_GAP_DENSITY_GRID = (0.05, 0.1, 0.15, 0.2, 0.3, 0.4, 0.5)
+DEFAULT_FILL_FACTOR_GRID = (0.55, 0.6, 0.67, 0.75, 0.85, 0.95)
 
 
 def quantize_eps(eps: np.ndarray) -> np.ndarray:
@@ -282,8 +288,161 @@ class RMIAdapter:
         return _probe_windows(self, query_keys, geom)
 
 
+@dataclasses.dataclass(frozen=True)
+class ALEXAdapter:
+    """ALEX-style gapped-array updatable index (knob: gap density).
+
+    Writes become first-class: leaves keep ``gap_density`` of their slots
+    empty so inserts shift only to the nearest gap instead of rewriting the
+    tail.  The knob trades the two I/O streams against each other —
+
+    * more gaps: CHEAPER writes (short shifts, low
+      ``gapped_write_amp``) but a BIGGER footprint, so probe windows span
+      more pages and the same buffer caches a smaller fraction;
+    * fewer gaps: dense reads, expensive shifts.
+
+    Both sides flow through one profile: the read-side refs are the shared
+    ``uniform_eps_profile`` in SLOT space (the ``to_slot_space`` remap from
+    ``repro.index.gapped``), and the write stream rides its ``write_amp``
+    hook, so :class:`~repro.tuning.session.TuningSession` tunes the knob
+    with the machinery it already has.
+
+    Model error is treated as uniformly bounded (``eps``): the gapped remap
+    is monotone, so the per-leaf linear models keep their corridor in slot
+    space.  ``keys`` is kept (when built from data) only for ``window()`` —
+    the replay oracle's ground-truth probe windows.
+    """
+
+    n: int
+    gap_density: float
+    eps: int = 64
+    keys: "np.ndarray | None" = dataclasses.field(
+        default=None, repr=False, compare=False)
+    family: str = "alex"
+
+    @classmethod
+    def build(cls, keys: np.ndarray, gap_density: float,
+              eps: int = 64) -> "ALEXAdapter":
+        keys = np.asarray(keys)
+        return cls(n=int(keys.shape[0]), gap_density=float(gap_density),
+                   eps=int(eps), keys=keys)
+
+    @property
+    def slots(self) -> int:
+        return gapped_slots(self.n, self.gap_density)
+
+    @property
+    def size_bytes(self) -> float:
+        # per-leaf linear models over ~1k-slot nodes (slope+intercept+bounds
+        # ~ 48 B) plus a root model: slack grows the leaf count, so the knob
+        # also competes for the Eq. 15 memory budget
+        return 48.0 * float(np.ceil(self.slots / 1024.0)) + 64.0
+
+    @classmethod
+    def knob_metadata(cls) -> Dict[str, object]:
+        return {"gap_density": {"kind": "slack", "tunable": True,
+                                "grid": DEFAULT_GAP_DENSITY_GRID}}
+
+    def knobs(self) -> Dict[str, object]:
+        return {"gap_density": {"value": self.gap_density, "kind": "slack",
+                                "tunable": True,
+                                "grid": DEFAULT_GAP_DENSITY_GRID}}
+
+    def page_ref_profile(self, workload: Workload,
+                         geom: CamGeometry) -> PageRefProfile:
+        slots = self.slots
+        return uniform_eps_profile(
+            to_slot_space(workload, self.n, slots), self.eps, geom, slots,
+            write_amp=gapped_write_amp(self.gap_density, geom.c_ipp))
+
+    def window(self, query_keys: np.ndarray):
+        if self.keys is None:
+            raise UnsupportedWorkloadError(
+                "window", detail="ALEXAdapter built without keys cannot "
+                "produce ground-truth windows; use ALEXAdapter.build")
+        slots = self.slots
+        slot = (locate(self.keys, np.asarray(query_keys))
+                * slots) // max(self.n, 1)
+        return (np.maximum(slot - self.eps, 0),
+                np.minimum(slot + self.eps, slots - 1))
+
+    def probe_windows(self, query_keys: np.ndarray, geom: CamGeometry):
+        return _probe_windows(self, query_keys, geom)
+
+
+@dataclasses.dataclass(frozen=True)
+class BTreeAdapter:
+    """Disk B+-tree baseline (knob: leaf fill factor).
+
+    The classic updatable baseline the paper's learned indexes displace.
+    Inner nodes are assumed memory-resident (they are tiny and hot), so a
+    probe touches exactly the leaf page holding the key: ``eps = 0`` in the
+    shared profile — the tree pays no model-error fan-out, it pays FOOTPRINT
+    (leaves are only ``fill_factor`` full, so the key space spreads over
+    ``1/fill_factor`` more pages) and amortized split I/O on inserts
+    (``btree_write_amp``).  High fill reads densely but splits constantly;
+    low fill wastes cache on slack — the same two-stream trade as ALEX with
+    the opposite lever.
+    """
+
+    n: int
+    fill_factor: float = 0.7
+    keys: "np.ndarray | None" = dataclasses.field(
+        default=None, repr=False, compare=False)
+    family: str = "btree"
+    eps: int = 0
+
+    @classmethod
+    def build(cls, keys: np.ndarray, fill_factor: float = 0.7,
+              **_ignored) -> "BTreeAdapter":
+        keys = np.asarray(keys)
+        return cls(n=int(keys.shape[0]), fill_factor=float(fill_factor),
+                   keys=keys)
+
+    @property
+    def slots(self) -> int:
+        return btree_slots(self.n, self.fill_factor)
+
+    @property
+    def size_bytes(self) -> float:
+        # resident inner nodes: ~16 B (separator + child pointer) per leaf
+        # of ~256 slots, times ~1/(1-1/fanout) for upper levels ~ 1.01
+        return 16.0 * float(np.ceil(self.slots / 256.0)) + 64.0
+
+    @classmethod
+    def knob_metadata(cls) -> Dict[str, object]:
+        return {"fill_factor": {"kind": "slack", "tunable": True,
+                                "grid": DEFAULT_FILL_FACTOR_GRID}}
+
+    def knobs(self) -> Dict[str, object]:
+        return {"fill_factor": {"value": self.fill_factor, "kind": "slack",
+                                "tunable": True,
+                                "grid": DEFAULT_FILL_FACTOR_GRID}}
+
+    def page_ref_profile(self, workload: Workload,
+                         geom: CamGeometry) -> PageRefProfile:
+        slots = self.slots
+        return uniform_eps_profile(
+            to_slot_space(workload, self.n, slots), 0, geom, slots,
+            write_amp=btree_write_amp(self.fill_factor, geom.c_ipp))
+
+    def window(self, query_keys: np.ndarray):
+        if self.keys is None:
+            raise UnsupportedWorkloadError(
+                "window", detail="BTreeAdapter built without keys cannot "
+                "produce ground-truth windows; use BTreeAdapter.build")
+        slots = self.slots
+        slot = (locate(self.keys, np.asarray(query_keys))
+                * slots) // max(self.n, 1)
+        return slot, slot
+
+    def probe_windows(self, query_keys: np.ndarray, geom: CamGeometry):
+        return _probe_windows(self, query_keys, geom)
+
+
 ADAPTERS = {"pgm": PGMAdapter, "rmi": RMIAdapter,
-            "radixspline": RadixSplineAdapter}
+            "radixspline": RadixSplineAdapter, "alex": ALEXAdapter,
+            "btree": BTreeAdapter}
 
 _RAW_CLASSES = {pgm_mod.PGMIndex: PGMAdapter, rmi_mod.RMIIndex: RMIAdapter,
                 rs_mod.RadixSplineIndex: RadixSplineAdapter}

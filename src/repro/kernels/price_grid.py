@@ -40,8 +40,8 @@ _F32_COLS = 16   # packed per-row float32 scalars (see _price_kernel)
 _I32_COLS = 8    # packed per-row int32 scalars
 
 
-def _price_kernel(*refs, policy: str, has_sorted: bool, iters: int,
-                  n_in: int):
+def _price_kernel(*refs, policy: str, has_sorted: bool, has_write: bool,
+                  iters: int, n_in: int):
     """One program = one profile row priced at all its C cells.
 
     ``policy`` is one of the static ``cache_models.POLICIES`` (the whole
@@ -49,6 +49,13 @@ def _price_kernel(*refs, policy: str, has_sorted: bool, iters: int,
     OWN policy id from i32 column 3 (``POLICIES`` order: 0 lru, 1 fifo,
     2 lfu) and selects between the recency bisection and the LFU top-C
     mass — one launch pricing a multi-policy table side by side.
+
+    With ``has_write`` the row's probabilities are the COMBINED read+write
+    request stream (the executor folds them before normalizing, mirroring
+    ``hit_rate_grid``); the kernel additionally prices the dirty-eviction
+    writeback stream at the SAME characteristic time the read fixed point
+    already solved — no second bisection — and subtracts it from ``h``, so
+    ``(1 - h)`` counts fetches and flushes together.
 
     Packed scalar columns (one row each per program):
       f32: 0 sample_refs, 1 full_refs, 2 n_distinct, 3 pmin,
@@ -64,6 +71,9 @@ def _price_kernel(*refs, policy: str, has_sorted: bool, iters: int,
     sp = next(it)[...] if lfu_read else None                # (1, P) desc
     cov = (next(it)[...] if (has_sorted and lfu_read)
            else None)                                       # (1, P) desc
+    w = next(it)[...] if has_write else None                # (1, P) wprobs
+    wq = (next(it)[...] if (has_write and lfu_read)
+          else None)                                        # (1, P) by -p
     f = next(it)[...]                                       # (1, 16) f32
     z = next(it)[...]                                       # (1, 8) i32
     caps_f = next(it)[...]                                  # (1, C)
@@ -119,9 +129,30 @@ def _price_kernel(*refs, policy: str, has_sorted: bool, iters: int,
         h_pol = (h_lfu if policy == "lfu"
                  else jnp.where(pol_id == 2, h_lfu, h_pol))
 
+    floor = 0.0
+    if has_write:
+        # dirty-eviction writeback at the SAME t_c / top-C set the read
+        # solve produced (cache_models._writeback_terms, lockstep over C)
+        w_mass = jnp.sum(w)
+        if policy in ("lru", "fifo", "multi"):
+            r = jnp.maximum(p - w, 0.0)
+            dirty = w + r * -jnp.expm1(-w * t_c)            # (C, P)
+            wb = jnp.sum((1.0 - occ(t_c)) * dirty, axis=1,
+                         keepdims=True).T                   # (1, C)
+        if lfu_read:
+            wiota = jax.lax.broadcasted_iota(
+                jnp.int32, (caps_i.shape[1], p.shape[1]), 1)
+            kept = jnp.sum(jnp.where(wiota < jnp.maximum(caps_i, 1).T,
+                                     wq, 0.0), axis=1, keepdims=True).T
+            wb_lfu = w_mass - kept
+            wb = (wb_lfu if policy == "lfu"
+                  else jnp.where(pol_id == 2, wb_lfu, wb))
+        h_pol = h_pol - wb
+        floor = -w_mass                 # cap < 1: every write flushes
+
     h_comp = jnp.where(full > 0, (full - n_f) / jnp.maximum(full, 1.0), 0.0)
     h = jnp.where(caps_i >= n_i, h_comp, h_pol)
-    h = jnp.where(caps_i < 1, 0.0, h)
+    h = jnp.where(caps_i < 1, floor, h)
     h = jnp.where(sample_refs > 0, h, 0.0)
 
     # -- sorted-scan model + mixed composition (hit_rate_grid tail) --------
@@ -161,9 +192,11 @@ def _price_kernel(*refs, policy: str, has_sorted: bool, iters: int,
 
 
 @functools.partial(jax.jit, static_argnames=("policy", "has_sorted",
-                                             "iters", "interpret"))
+                                             "has_write", "iters",
+                                             "interpret"))
 def price_grid(policy: str, probs, sorted_probs, cov_desc, f32s, i32s,
-               caps_f, caps_i, ids, *, has_sorted: bool, iters: int = 64,
+               caps_f, caps_i, ids, wprobs=None, wprobs_q=None, *,
+               has_sorted: bool, has_write: bool = False, iters: int = 64,
                interpret: bool = False):
     """Price a (K rows x C cells-per-row) padded table in one launch.
 
@@ -171,7 +204,9 @@ def price_grid(policy: str, probs, sorted_probs, cov_desc, f32s, i32s,
       policy: a ``cache_models.POLICIES`` name (uniform launch) or
         ``"multi"`` — each row reads its own policy id from i32 column 3,
         so one launch prices lru/fifo/lfu rows side by side.
-      probs: (K, P) float32 request probabilities per profile row.
+      probs: (K, P) float32 request probabilities per profile row —
+        COMBINED read+write stream when ``has_write`` (the caller folds
+        write counts into the histogram before normalizing).
       sorted_probs: (K, P) descending-sorted ``probs`` (read iff lfu or
         multi).
       cov_desc: (K, P) descending-sorted sorted-scan coverage (read iff
@@ -181,6 +216,11 @@ def price_grid(policy: str, probs, sorted_probs, cov_desc, f32s, i32s,
       caps_f / caps_i / ids: (K, C) per-cell capacities (float32 /
         exact int32) and global cell ids; padded cells carry
         ``caps_i = -1`` and ``ids = PAD_ID``.
+      wprobs: (K, P) write-reference probabilities under the SAME combined
+        normalizer (read iff ``has_write``).
+      wprobs_q: (K, P) ``wprobs`` permuted by descending combined ``probs``
+        (the LFU resident set's order; read iff ``has_write`` and lfu or
+        multi).
 
     Returns:
       (h (K, C) float32, best_val (1, 1) float32, best_id (1, 1) int32) —
@@ -189,12 +229,19 @@ def price_grid(policy: str, probs, sorted_probs, cov_desc, f32s, i32s,
     """
     k, p_width = probs.shape
     c = caps_f.shape[1]
+    if has_write and wprobs is None:
+        raise ValueError("has_write=True needs wprobs (and wprobs_q for "
+                         "lfu/multi launches)")
     pad_p = (-p_width) % _LANES
     pad_c = (-c) % _LANES
     if pad_p:
         probs = jnp.pad(probs, ((0, 0), (0, pad_p)))
         sorted_probs = jnp.pad(sorted_probs, ((0, 0), (0, pad_p)))
         cov_desc = jnp.pad(cov_desc, ((0, 0), (0, pad_p)))
+        if has_write:
+            wprobs = jnp.pad(wprobs, ((0, 0), (0, pad_p)))
+            if wprobs_q is not None:
+                wprobs_q = jnp.pad(wprobs_q, ((0, 0), (0, pad_p)))
     if pad_c:
         caps_f = jnp.pad(caps_f, ((0, 0), (0, pad_c)),
                          constant_values=-1.0)
@@ -209,6 +256,12 @@ def price_grid(policy: str, probs, sorted_probs, cov_desc, f32s, i32s,
     if has_sorted and policy in ("lfu", "multi"):
         inputs.append(cov_desc)
         in_specs.append(pl.BlockSpec((1, pp), lambda i: (i, 0)))
+    if has_write:
+        inputs.append(wprobs)
+        in_specs.append(pl.BlockSpec((1, pp), lambda i: (i, 0)))
+        if policy in ("lfu", "multi"):
+            inputs.append(wprobs_q)
+            in_specs.append(pl.BlockSpec((1, pp), lambda i: (i, 0)))
     inputs += [f32s, i32s, caps_f, caps_i, ids]
     in_specs += [
         pl.BlockSpec((1, _F32_COLS), lambda i: (i, 0)),
@@ -220,8 +273,8 @@ def price_grid(policy: str, probs, sorted_probs, cov_desc, f32s, i32s,
 
     h, best_val, best_id = pl.pallas_call(
         functools.partial(_price_kernel, policy=policy,
-                          has_sorted=has_sorted, iters=iters,
-                          n_in=len(inputs)),
+                          has_sorted=has_sorted, has_write=has_write,
+                          iters=iters, n_in=len(inputs)),
         grid=(k,),
         in_specs=in_specs,
         out_specs=[

@@ -44,8 +44,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.session import (CostSession, GridCandidate, GridProfiles,
-                                SortedScanPart)
-from repro.core.workload import MIXED, POINT, RANGE, SORTED, Workload
+                                SortedScanPart, WriteStreamPart)
+from repro.core.workload import (DELETE, INSERT, MIXED, POINT, RANGE, SORTED,
+                                 UPDATE, Workload)
 
 __all__ = ["SketchChunk", "WindowSketch", "tv_distance",
            "shard_page_masses", "WIDTH_BINS", "DEFAULT_PAGE_BINS"]
@@ -53,7 +54,8 @@ __all__ = ["SketchChunk", "WindowSketch", "tv_distance",
 WIDTH_BINS = 24           # log2 range/sorted window-width histogram
 DEFAULT_PAGE_BINS = 32    # coarse page-popularity histogram
 
-_OP_INDEX = {POINT: 0, RANGE: 1, SORTED: 2}
+_OP_INDEX = {POINT: 0, RANGE: 1, SORTED: 2, INSERT: 3, UPDATE: 4, DELETE: 5}
+_N_OPS = len(_OP_INDEX)
 
 
 # ---------------------------------------------------------------------------
@@ -80,11 +82,13 @@ class SketchChunk:
     sorted_pinned: float = 0.0
     sorted_coverage: Optional[np.ndarray] = None   # (P,) float64
     sorted_min_caps: Optional[np.ndarray] = None   # (K,) int64
+    write_counts: Optional[np.ndarray] = None      # (K, P) float64
+    write_refs: Optional[np.ndarray] = None        # (K,) float64
     first_lo_page: Optional[int] = None
     last_hi_page: Optional[int] = None
     page_pop: Optional[np.ndarray] = None   # (page_bins,) drift summary
     width_hist: Optional[np.ndarray] = None  # (WIDTH_BINS,)
-    op_mix: Optional[np.ndarray] = None     # (3,)
+    op_mix: Optional[np.ndarray] = None     # (_N_OPS,)
 
 
 @dataclasses.dataclass
@@ -101,12 +105,15 @@ class _Accum:
     sorted_min_caps: Optional[np.ndarray]
     first_lo_page: Optional[int]
     last_hi_page: Optional[int]
+    write_counts: Optional[np.ndarray] = None
+    write_refs: Optional[np.ndarray] = None
 
     @classmethod
     def lift(cls, c: SketchChunk) -> "_Accum":
         return cls(c.n_queries, c.counts, c.totals, c.dac_mass,
                    c.sorted_refs, c.sorted_pinned, c.sorted_coverage,
-                   c.sorted_min_caps, c.first_lo_page, c.last_hi_page)
+                   c.sorted_min_caps, c.first_lo_page, c.last_hi_page,
+                   c.write_counts, c.write_refs)
 
 
 def _opt_add(a, b):
@@ -150,6 +157,8 @@ def merge_accums(left: _Accum, right: _Accum) -> _Accum:
                        else right.first_lo_page),
         last_hi_page=(right.last_hi_page if right.last_hi_page is not None
                       else left.last_hi_page),
+        write_counts=_opt_add(left.write_counts, right.write_counts),
+        write_refs=_opt_add(left.write_refs, right.write_refs),
     )
 
 
@@ -165,7 +174,7 @@ def _drift_summary(workload: Workload, num_pages: int, c_ipp: int,
                    page_bins: int):
     page_pop = np.zeros(page_bins, np.float64)
     width_hist = np.zeros(WIDTH_BINS, np.float64)
-    op_mix = np.zeros(3, np.float64)
+    op_mix = np.zeros(_N_OPS, np.float64)
     for p in _iter_parts(workload):
         if p.positions is None or p.n_queries == 0:
             continue
@@ -306,6 +315,16 @@ class WindowSketch:
             totals=np.asarray(profs.totals, np.float64),
             dac_mass=np.asarray(profs.dacs, np.float64) * profs.n_queries,
             page_pop=page_pop, width_hist=width_hist, op_mix=op_mix)
+        if profs.wparts:
+            # write streams are partial sums like everything else: keep the
+            # per-candidate (K, P) expected-write histograms and masses
+            zero_w = np.zeros(num_pages, np.float64)
+            chunk.write_counts = np.stack(
+                [np.asarray(wp.counts, np.float64) if wp is not None
+                 else zero_w for wp in profs.wparts])
+            chunk.write_refs = np.asarray(
+                [wp.total_refs if wp is not None else 0.0
+                 for wp in profs.wparts], np.float64)
         spart = next((sp for sp in profs.sparts if sp is not None), None)
         if spart is not None:
             chunk.sorted_refs = float(spart.total_refs)
@@ -355,15 +374,21 @@ class WindowSketch:
                 for i in range(len(self.candidates))]
         else:
             sparts = [None] * len(self.candidates)
+        wparts: Tuple[Optional[WriteStreamPart], ...] = ()
+        if acc.write_counts is not None and float(acc.write_refs.sum()) > 0:
+            wparts = tuple(
+                WriteStreamPart(jnp.asarray(acc.write_counts[i], jnp.float32),
+                                float(acc.write_refs[i]))
+                for i in range(len(self.candidates)))
         return GridProfiles.from_accumulated(
             self.system, self.knobs, acc.counts, acc.totals, acc.dac_mass,
-            self.sizes, sparts, acc.n_queries)
+            self.sizes, sparts, acc.n_queries, wparts=wparts)
 
     def summary(self) -> Dict[str, np.ndarray]:
         """Candidate-independent window summary for drift detection."""
         page_pop = np.zeros(self.page_bins, np.float64)
         width_hist = np.zeros(WIDTH_BINS, np.float64)
-        op_mix = np.zeros(3, np.float64)
+        op_mix = np.zeros(_N_OPS, np.float64)
         for c in self.chunks:
             page_pop += c.page_pop
             width_hist += c.width_hist

@@ -35,8 +35,15 @@ __all__ = ["TraceEvent", "parse_jsonl", "to_jsonl", "iter_batches",
 POINT = "point"
 RANGE = "range"
 SORTED = "sorted"
+INSERT = "insert"
+UPDATE = "update"
+DELETE = "delete"
 
-_OPS = (POINT, RANGE, SORTED)
+#: Mutating ops — key-shaped like ``point`` (one target key per event).
+WRITE_OPS = (INSERT, UPDATE, DELETE)
+
+_OPS = (POINT, RANGE, SORTED) + WRITE_OPS
+_KEY_OPS = (POINT,) + WRITE_OPS
 
 
 @dataclasses.dataclass(frozen=True)
@@ -44,9 +51,11 @@ class TraceEvent:
     """One op-log record.
 
     ``op`` is ``"point"`` (uses ``key``), ``"range"`` (``lo_key``/``hi_key``
-    rank bounds after location), or ``"sorted"`` (one probe window of a
-    sorted stream, also ``lo_key``/``hi_key``).  ``ts`` is an arbitrary
-    monotone timestamp — the serving loop batches by arrival order and only
+    rank bounds after location), ``"sorted"`` (one probe window of a
+    sorted stream, also ``lo_key``/``hi_key``), or a mutating op —
+    ``"insert"`` / ``"update"`` / ``"delete"`` — which targets a single
+    ``key`` exactly like ``point``.  ``ts`` is an arbitrary monotone
+    timestamp — the serving loop batches by arrival order and only
     reports it.
     """
 
@@ -60,9 +69,10 @@ class TraceEvent:
         if self.op not in _OPS:
             raise ValueError(f"unknown trace op {self.op!r}; "
                              f"expected one of {_OPS}")
-        if self.op == POINT and self.key is None:
-            raise ValueError("point event needs key")
-        if self.op != POINT and (self.lo_key is None or self.hi_key is None):
+        if self.op in _KEY_OPS and self.key is None:
+            raise ValueError(f"{self.op} event needs key")
+        if self.op not in _KEY_OPS and (self.lo_key is None
+                                        or self.hi_key is None):
             raise ValueError(f"{self.op} event needs lo_key and hi_key")
 
 
@@ -71,7 +81,7 @@ def to_jsonl(events: Iterable[TraceEvent]) -> str:
     out = []
     for e in events:
         rec = {"op": e.op, "ts": e.ts}
-        if e.op == POINT:
+        if e.op in _KEY_OPS:
             rec["key"] = e.key
         else:
             rec["lo_key"] = e.lo_key
@@ -122,10 +132,14 @@ def compile_events(events: Sequence[TraceEvent],
     Point events locate through the same ``searchsorted`` path as
     ``Workload.from_keys`` (query keys are kept so routing indexes — RMI —
     can profile the batch); range and sorted events locate both bounds.
-    Sorted probes keep their arrival order.  A single-op batch compiles to
-    that part directly; otherwise the parts compose into a mixed workload,
-    which ``Workload.mixed``'s flattening lets downstream code concatenate
-    freely.
+    Mutating events (insert/update/delete) locate their target key the same
+    way and compile into the matching write parts.  Within every compiled
+    part the events keep their arrival order (the per-op grouping is a
+    stable filter over the batch — regression-tested), and sorted probes in
+    particular keep the order the closed forms need.  A single-op batch
+    compiles to that part directly; otherwise the parts compose into a
+    mixed workload, which ``Workload.mixed``'s flattening lets downstream
+    code concatenate freely.
     """
     if not events:
         raise ValueError("cannot compile an empty event batch")
@@ -149,6 +163,12 @@ def compile_events(events: Sequence[TraceEvent],
         lo_pos = locate(keys, lo)
         hi_pos = np.maximum(locate(keys, hi), lo_pos)
         parts.append(Workload.sorted_stream(lo_pos, hi_pos, n=n))
+    for op, build in ((INSERT, Workload.insert), (UPDATE, Workload.update),
+                      (DELETE, Workload.delete)):
+        wkeys = [e.key for e in events if e.op == op]
+        if wkeys:
+            qk = np.asarray(wkeys)
+            parts.append(build(locate(keys, qk), n=n, query_keys=qk))
     return parts[0] if len(parts) == 1 else Workload.mixed(*parts)
 
 
@@ -158,7 +178,9 @@ def compile_events(events: Sequence[TraceEvent],
 
 DEFAULT_SEGMENT = {
     "events": 2048,          # events in this stationary segment
-    "mix": (1.0, 0.0, 0.0),  # (point, range, sorted) op probabilities
+    # (point, range, sorted[, insert, update, delete]) op probabilities —
+    # 3-tuples stay valid (write mass 0), 6-tuples add mutating traffic
+    "mix": (1.0, 0.0, 0.0),
     "hot_center": 0.5,       # hot-region center, fraction of the key space
     "hot_width": 0.1,        # hot-region width, fraction of the key space
     "hot_frac": 0.9,         # probability a query lands in the hot region
@@ -197,13 +219,23 @@ def synthetic_drifting_trace(keys: np.ndarray, segments: Sequence[dict],
 
     for spec in segments:
         seg = {**DEFAULT_SEGMENT, **spec}
-        p_point, p_range, p_sorted = seg["mix"]
-        total = p_point + p_range + p_sorted
+        mix = tuple(seg["mix"]) + (0.0,) * (6 - len(seg["mix"]))
+        p_point, p_range, p_sorted = mix[:3]
+        write_ps = mix[3:]
+        total = sum(mix)
         emitted = 0
         while emitted < seg["events"]:
             ts += 1.0
             u = rng.random() * total
-            if u < p_point:
+            if u >= p_point + p_range + p_sorted:
+                # mutating op: target key drawn from the same hot/cold mix
+                u -= p_point + p_range + p_sorted
+                op = WRITE_OPS[0 if u < write_ps[0] else
+                               1 if u < write_ps[0] + write_ps[1] else 2]
+                pos = draw_pos(seg)
+                events.append(TraceEvent(op, key=float(keys[pos]), ts=ts))
+                emitted += 1
+            elif u < p_point:
                 pos = draw_pos(seg)
                 events.append(TraceEvent(POINT, key=float(keys[pos]), ts=ts))
                 emitted += 1

@@ -54,7 +54,8 @@ from repro.engine import PriceTable
 from repro.index import pgm as pgm_mod
 from repro.index import radixspline as rs_mod
 from repro.index import rmi as rmi_mod
-from repro.index.adapters import (PGMAdapter, RMIAdapter, RadixSplineAdapter)
+from repro.index.adapters import (ALEXAdapter, BTreeAdapter, PGMAdapter,
+                                  RMIAdapter, RadixSplineAdapter)
 from repro.tuning import fit
 
 __all__ = [
@@ -69,6 +70,8 @@ __all__ = [
     "PGMBuilder",
     "RMIBuilder",
     "RadixSplineBuilder",
+    "ALEXBuilder",
+    "BTreeBuilder",
     "builder_for",
     "SplitTable",
     "SplitEstimate",
@@ -418,8 +421,92 @@ class RadixSplineBuilder:
         return 1.0 + narrowed + float(np.log2(2 * point["eps"] + 1))
 
 
+@dataclasses.dataclass
+class ALEXBuilder:
+    """ALEX family: gap-density knob, exact analytic size model.
+
+    Candidates are index-backed (the slot-space remap differs per knob, so
+    the shared uniform-eps grid over one ``n`` cannot represent them), but
+    "building" is O(1) — the adapter is a layout model, not a structure —
+    so the whole gap grid still prices in one grouped profile pass, write
+    streams included.
+    """
+
+    keys: np.ndarray
+    eps: int = 64
+    family: str = "alex"
+    built: Dict[object, ALEXAdapter] = dataclasses.field(default_factory=dict)
+
+    def knob_space(self, overrides=None) -> KnobSpace:
+        return KnobSpace.from_metadata(ALEXAdapter.knob_metadata(), overrides)
+
+    def size_model(self) -> AnalyticSizeModel:
+        n = int(np.asarray(self.keys).shape[0])
+        return AnalyticSizeModel(
+            lambda gap_density: ALEXAdapter(n, float(gap_density),
+                                            self.eps).size_bytes)
+
+    def candidate(self, point, size_bytes) -> GridCandidate:
+        adapter = self.build(point)
+        return GridCandidate(knob=point["gap_density"],
+                             size_bytes=float(size_bytes), index=adapter)
+
+    def build(self, point) -> ALEXAdapter:
+        key = point["gap_density"]
+        if key not in self.built:
+            self.built[key] = ALEXAdapter.build(
+                self.keys, float(point["gap_density"]), self.eps)
+        return self.built[key]
+
+    def profile_score(self, point, probe_keys) -> float:
+        """Deterministic in-memory score: root model eval + exponential
+        search over the eps corridor (gap slack does not change CPU cost —
+        which is precisely why cache-oblivious tuners cannot rank it)."""
+        self.build(point).window(probe_keys)          # the profiling pass
+        return 1.0 + float(np.log2(2 * self.eps + 1))
+
+
+@dataclasses.dataclass
+class BTreeBuilder:
+    """B+-tree family: leaf fill-factor knob, exact analytic size model."""
+
+    keys: np.ndarray
+    family: str = "btree"
+    built: Dict[object, BTreeAdapter] = dataclasses.field(
+        default_factory=dict)
+
+    def knob_space(self, overrides=None) -> KnobSpace:
+        return KnobSpace.from_metadata(BTreeAdapter.knob_metadata(),
+                                       overrides)
+
+    def size_model(self) -> AnalyticSizeModel:
+        n = int(np.asarray(self.keys).shape[0])
+        return AnalyticSizeModel(
+            lambda fill_factor: BTreeAdapter(n,
+                                             float(fill_factor)).size_bytes)
+
+    def candidate(self, point, size_bytes) -> GridCandidate:
+        adapter = self.build(point)
+        return GridCandidate(knob=point["fill_factor"],
+                             size_bytes=float(size_bytes), index=adapter)
+
+    def build(self, point) -> BTreeAdapter:
+        key = point["fill_factor"]
+        if key not in self.built:
+            self.built[key] = BTreeAdapter.build(self.keys,
+                                                 float(point["fill_factor"]))
+        return self.built[key]
+
+    def profile_score(self, point, probe_keys) -> float:
+        """Resident inner-node descent: log_fanout(n) comparisons levels."""
+        adapter = self.build(point)
+        adapter.window(probe_keys)                    # the profiling pass
+        return float(np.log(max(adapter.n, 2)) / np.log(256.0)) + 1.0
+
+
 _BUILDERS = {"pgm": PGMBuilder, "rmi": RMIBuilder,
-             "radixspline": RadixSplineBuilder}
+             "radixspline": RadixSplineBuilder, "alex": ALEXBuilder,
+             "btree": BTreeBuilder}
 
 
 def builder_for(family: str, keys: np.ndarray, **kwargs) -> IndexBuilder:

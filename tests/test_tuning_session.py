@@ -445,8 +445,9 @@ def test_budget_override_and_builder_registry(world):
     wide = ts.tune(builder, wl, overrides={"eps": EPS_GRID})
     tight = ts.tune(builder, wl, budget=BUDGET, overrides={"eps": EPS_GRID})
     assert tight.capacity_pages < wide.capacity_pages
+    assert builder_for("btree", keys) is not None  # registered in PR 10
     with pytest.raises(ValueError, match="unknown index family"):
-        builder_for("btree", keys)
+        builder_for("lsm", keys)
 
 
 def test_table_size_model_override(world):
